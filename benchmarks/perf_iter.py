@@ -1,0 +1,80 @@
+"""§Perf hillclimb driver: hypothesis → change → re-lower → compare.
+
+Each variant = (name, hypothesis, cfg overrides, rule overrides).  The
+driver compiles baseline + variants for one (arch × cell) on the single-pod
+mesh and reports the three roofline terms side by side, appending to
+experiments/perf/<arch>_<cell>.json so the iteration LOG (not just the
+winner) is preserved for EXPERIMENTS.md §Perf.
+
+Run me as:  PYTHONPATH=src python -m benchmarks.perf_iter --cell <name>
+(this module sets the 512-device XLA flag itself, like dryrun).
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse    # noqa: E402
+import json        # noqa: E402
+import time        # noqa: E402
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "perf")
+
+
+def run_variants(arch: str, cell: str, variants: list[dict],
+                 include_baseline: bool = True) -> list[dict]:
+    from repro.launch.dryrun import run_cell
+    rows = []
+    todo = ([{"name": "baseline", "hypothesis": "paper-faithful defaults",
+              "cfg": {}, "rules": {}}] if include_baseline else []) + variants
+    for v in todo:
+        t0 = time.perf_counter()
+        try:
+            rec = run_cell(arch, cell, multi_pod=False, out_dir=None,
+                           verbose=False, overrides={**v.get("cfg", {})},
+                           rule_overrides=v.get("rules", {}))
+            r = rec["roofline"]
+            rows.append({
+                "variant": v["name"], "hypothesis": v.get("hypothesis", ""),
+                "t_compute_s": r["t_compute_s"],
+                "t_memory_s": r["t_memory_s"],
+                "t_collective_s": r["t_collective_s"],
+                "bottleneck": r["bottleneck"],
+                "useful_flops_frac": rec["useful_flops_frac"],
+                "args_gib": (rec["memory_analysis"].get(
+                    "argument_size_in_bytes") or 0) / 2**30,
+                "temp_gib": (rec["memory_analysis"].get(
+                    "temp_size_in_bytes") or 0) / 2**30,
+                "collective_per_op": r["collective_per_op"],
+                "compile_s": time.perf_counter() - t0,
+            })
+        except Exception as e:
+            rows.append({"variant": v["name"], "error": repr(e)[:500]})
+        print(json.dumps(rows[-1], indent=1, default=str), flush=True)
+
+    os.makedirs(PERF_DIR, exist_ok=True)
+    path = os.path.join(PERF_DIR, f"{arch}_{cell}.json")
+    prior = []
+    if os.path.exists(path):
+        with open(path) as f:
+            prior = json.load(f)
+    with open(path, "w") as f:
+        json.dump(prior + rows, f, indent=1, default=str)
+    return rows
+
+
+# ---- the three chosen cells and their iteration plans live in callers
+# (see experiments/perf/*.py scripts written during §Perf iterations).
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variants", default="[]",
+                    help="JSON list of {name,hypothesis,cfg,rules}")
+    ap.add_argument("--no-baseline", action="store_true")
+    args = ap.parse_args()
+    run_variants(args.arch, args.cell, json.loads(args.variants),
+                 include_baseline=not args.no_baseline)

@@ -1,0 +1,100 @@
+"""Assemble the §Roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+the per-(arch × shape × mesh) table: three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, bytes/device — plus SKIP rows for the
+long_500k cells of full-attention archs (DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, cells, get_config
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["cell"], rec["mesh"])] = rec
+    return out
+
+
+def table(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16"):
+    recs = load(dryrun_dir)
+    rows = []
+    for arch in ARCHS:
+        arch_cells = cells(arch)
+        for cell in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if cell not in arch_cells:
+                rows.append({"arch": arch, "cell": cell, "skip":
+                             "full-attention arch: O(S^2) at 524k excluded "
+                             "by design"})
+                continue
+            rec = recs.get((arch, cell, mesh))
+            if rec is None:
+                rows.append({"arch": arch, "cell": cell,
+                             "skip": "MISSING (dry-run not yet run)"})
+                continue
+            r = rec["roofline"]
+            args_gib = (rec["memory_analysis"].get("argument_size_in_bytes")
+                        or 0) / 2**30
+            temp_gib = (rec["memory_analysis"].get("temp_size_in_bytes")
+                        or 0) / 2**30
+            rows.append({
+                "arch": arch, "cell": cell,
+                "t_compute_ms": r["t_compute_s"] * 1e3,
+                "t_memory_ms": r["t_memory_s"] * 1e3,
+                "t_collective_ms": r["t_collective_s"] * 1e3,
+                "bottleneck": r["bottleneck"],
+                "useful_flops_frac": rec.get("useful_flops_frac"),
+                "args_gib_per_dev": args_gib,
+                "temp_gib_per_dev": temp_gib,
+                "compile_s": rec["compile_s"],
+            })
+    return rows
+
+
+def markdown(rows) -> str:
+    hdr = ("| arch | cell | compute ms | memory ms | collective ms | "
+           "bottleneck | 6ND/HLO | args GiB/dev | temp GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['cell']} | — | — | — | "
+                         f"SKIP | — | — | — |")
+            continue
+        uf = r["useful_flops_frac"]
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['t_compute_ms']:.2f} | "
+            f"{r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} | "
+            f"{r['bottleneck']} | {uf:.3f} | "
+            f"{r['args_gib_per_dev']:.2f} | {r['temp_gib_per_dev']:.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = table()
+    done = [r for r in rows if "skip" not in r]
+    missing = [r for r in rows if r.get("skip", "").startswith("MISSING")]
+    by_bottleneck = {}
+    for r in done:
+        by_bottleneck[r["bottleneck"]] = by_bottleneck.get(
+            r["bottleneck"], 0) + 1
+    return {"cells_done": len(done), "cells_missing": len(missing),
+            "bottleneck_histogram": by_bottleneck,
+            "markdown": markdown(rows)}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["markdown"])
+    print(f"\ndone={out['cells_done']} missing={out['cells_missing']} "
+          f"bottlenecks={out['bottleneck_histogram']}")

@@ -1,0 +1,73 @@
+"""Benchmark driver: one entry per paper table/figure + the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Writes results to experiments/results/<name>.json and prints a summary.
+(The dry-run/roofline source data comes from `python -m repro.launch.dryrun`;
+this driver only assembles it.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "results")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+
+    from . import (dispatch_bench, nqueens_bench, raytracer_bench,
+                   roofline_table, serialization_bench)
+
+    benches = {
+        "serialization (paper Tables 9/10)": serialization_bench.run,
+        "dispatch_latency (paper Fig 11)": dispatch_bench.run,
+        "nqueens (paper Figs 12/13)":
+            (lambda: nqueens_bench.run(n=9, plist=(1, 2))) if args.quick
+            else (lambda: nqueens_bench.run(n=12, plist=(1, 2))),
+        "raytracer (paper Figs 1/14)":
+            (lambda: raytracer_bench.run(width=48, spp=2, tiles=(24, 12)))
+            if args.quick else raytracer_bench.run,
+        "roofline (assigned archs, §Roofline)": roofline_table.run,
+    }
+
+    failures = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            out = fn()
+        except Exception as e:  # keep the suite running
+            failures.append((name, repr(e)))
+            print(f"FAILED: {e!r}")
+            continue
+        dt = time.perf_counter() - t0
+        slug = name.split(" ")[0]
+        with open(os.path.join(RESULTS, f"{slug}.json"), "w") as f:
+            json.dump(out, f, indent=1, default=str)
+        brief = {k: v for k, v in out.items()
+                 if k in ("claims", "paper_claims", "cells_done",
+                          "cells_missing", "bottleneck_histogram",
+                          "real_burst_64", "serial_s", "solutions")}
+        print(json.dumps(brief, indent=1, default=str))
+        print(f"[{slug} done in {dt:.1f}s -> experiments/results/"
+              f"{slug}.json]", flush=True)
+
+    if failures:
+        print("\nFAILURES:", failures)
+        raise SystemExit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Paper Tables 9/10: serialization formats on the two paper payloads.
+
+Table 9: an array of 1,000,000 uint64.
+Table 10: an array of structs (two ints + a string, custom serializer).
+
+Formats: binary (cereal-binary analogue), binary_json (base64-wrapped binary
+inside a JSON envelope — what a JSON-only FaaS API forces), structured_json.
+Reports ms + GiB/s per (format × encode/decode) and the paper's headline
+ratio (binary_json vs structured_json speedup).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serialization import deserialize, serialize
+
+FORMATS = ("binary", "binary_json", "structured_json")
+
+
+def _time(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _bench_payload(payload, nbytes: int, reps: int = 3):
+    rows = {}
+    for fmt in FORMATS:
+        enc_s, blob = _time(lambda f=fmt: serialize(payload, format=f), reps)
+        dec_s, back = _time(lambda b=blob, f=fmt: deserialize(b, format=f),
+                            reps)
+        rows[fmt] = {
+            "encode_ms": enc_s * 1e3, "decode_ms": dec_s * 1e3,
+            "encode_gib_s": nbytes / enc_s / 2**30,
+            "decode_gib_s": nbytes / dec_s / 2**30,
+            "wire_bytes": len(blob),
+        }
+    return rows
+
+
+def bench_uint_array(n: int = 1_000_000):
+    """Table 9."""
+    arr = np.arange(n, dtype=np.uint64)
+    return _bench_payload(arr, arr.nbytes)
+
+
+def bench_structs(n: int = 120_000):
+    """Table 10 — two ints and a string per record.
+
+    The binary formats serialize the framework's *columnar record batch*
+    (struct-of-arrays: int columns + a flat string heap with offsets) —
+    the array-native analogue of cereal's compiled per-struct serializers;
+    a Python-level per-record walk would benchmark the interpreter, not
+    the format.  structured_json encodes the records as actual structured
+    JSON (the loosely-typed wire format FaaS REST APIs force).
+    """
+    rng = np.random.default_rng(0)
+    recs = [{"a": int(rng.integers(0, 1 << 30)),
+             "b": int(rng.integers(0, 1 << 30)),
+             "s": "payload-" + str(int(rng.integers(0, 1 << 20)))}
+            for _ in range(n)]
+    nbytes = sum(16 + len(r["s"]) for r in recs)
+
+    # columnar record batch (construction excluded, like the paper's
+    # already-in-memory std::vector<struct>)
+    strings = [r["s"].encode() for r in recs]
+    batch = {
+        "a": np.asarray([r["a"] for r in recs], np.int64),
+        "b": np.asarray([r["b"] for r in recs], np.int64),
+        "s_heap": np.frombuffer(b"".join(strings), np.uint8),
+        "s_off": np.cumsum([0] + [len(s) for s in strings]).astype(np.int32),
+    }
+
+    rows = {}
+    for fmt in FORMATS:
+        payload = recs if fmt == "structured_json" else batch
+        enc_s, blob = _time(lambda f=fmt, p=payload: serialize(p, format=f),
+                            2)
+        dec_s, _ = _time(lambda b=blob, f=fmt: deserialize(b, format=f), 2)
+        rows[fmt] = {
+            "encode_ms": enc_s * 1e3, "decode_ms": dec_s * 1e3,
+            "encode_gib_s": nbytes / enc_s / 2**30,
+            "decode_gib_s": nbytes / dec_s / 2**30,
+            "wire_bytes": len(blob),
+        }
+    return rows
+
+
+PAPER_TABLE9 = {  # ms, from the paper
+    "binary": {"encode_ms": 5.90, "decode_ms": 3.18},
+    "binary_json": {"encode_ms": 13.03, "decode_ms": 28.63},
+    "structured_json": {"encode_ms": 462.40, "decode_ms": 144.15},
+}
+
+
+def run():
+    t9 = bench_uint_array()
+    t10 = bench_structs()
+
+    def ratio(rows, a, b, key):
+        return rows[b][key] / rows[a][key]
+
+    summary = {
+        "table9_uint64_array": t9,
+        "table10_structs": t10,
+        "claims": {
+            # paper: binary beats structured_json by ~2 orders of magnitude
+            "t9_binary_vs_structured_encode_x":
+                ratio(t9, "binary", "structured_json", "encode_ms"),
+            "t9_paper_binary_vs_structured_encode_x":
+                PAPER_TABLE9["structured_json"]["encode_ms"]
+                / PAPER_TABLE9["binary"]["encode_ms"],
+            # paper §5.1: binary_json up to 5.52x faster than vanilla JSON
+            "t10_binary_json_vs_structured_x":
+                ratio(t10, "binary_json", "structured_json", "encode_ms"),
+            "paper_t10_binary_json_vs_structured_x": 5.52,
+        },
+    }
+    return summary
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

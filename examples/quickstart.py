@@ -1,0 +1,45 @@
+"""Quickstart — the paper's PI example (Fig 6), start to finish.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+A jax-traceable task is deployed as a serverless function (AOT-compiled
+entry point, content-addressed name, binary payloads), dispatched 32 times
+fork-join style, and billed in GB-seconds.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.apps import compute_pi                       # noqa: E402
+from repro.core import FunctionConfig, remote           # noqa: E402
+from repro.dispatch import Dispatcher                   # noqa: E402
+
+
+def main():
+    # ---- high-level: the paper's compute_pi workflow
+    pi, inst = compute_pi(n=1_000_000, np_=32)
+    print(f"pi ≈ {pi:.5f}")
+    print("cost:", inst.cost.summary())
+
+    # ---- low-level: define your own serverless function
+    d = Dispatcher()
+    inst = d.create_instance()
+
+    @remote(config=FunctionConfig(memory_mb=512, serializer="binary"))
+    def square_sum(n):
+        import jax.numpy as jnp
+        x = jnp.arange(n, dtype=jnp.float32)
+        return jnp.sum(x * x)
+
+    futs = [inst.dispatch(square_sum, 1000 * (i + 1)) for i in range(8)]
+    inst.wait()
+    print("results:", [float(f.result()) for f in futs])
+    print("deployments:", d.deployment.compile_count,
+          "cache hits:", d.deployment.cache_hits)
+    print("manifest entries:",
+          [e.human_name for e in d.deployment.manifest.entries.values()])
+    d.shutdown()
+
+
+if __name__ == "__main__":
+    main()

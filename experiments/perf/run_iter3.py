@@ -1,0 +1,46 @@
+"""Third §Perf iteration across the three hillclimb cells."""
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.perf_iter import run_variants
+from repro.configs.base import MoEConfig
+
+EP = MoEConfig(n_experts=16, top_k=2, capacity_factor=1.25, impl="ep")
+
+# qwen1.5-4b decode: int8 KV on top of seq-sharded cache
+run_variants("qwen1.5-4b", "decode_32k", [
+    {"name": "kvseq_model_int8kv",
+     "hypothesis": ("Iteration 2. After seq-sharding, args 6.39 GiB/dev is "
+                    "~all KV cache (bf16). int8 quantization with per-"
+                    "(token,head) scales halves cache bytes: args -> ~3.3 "
+                    "GiB, t_memory 1.16 -> ~0.7s. Greedy decode argmax "
+                    "verified unchanged on the smoke config."),
+     "cfg": {"kv_quant": "int8"},
+     "rules": {"act_kv_seq": ("model",)}},
+], include_baseline=False)
+
+# zamba2 train: remat full on top of full-DP
+run_variants("zamba2-2.7b", "train_4k", [
+    {"name": "fulldp_zero_rematfull",
+     "hypothesis": ("Iteration 2. After full-DP the bound is memory "
+                    "(t_mem 4.45s, temp 125 GiB/dev >> 16 GiB HBM). "
+                    "remat=full recomputes block activations in backward: "
+                    "predict temp -> ~3x lower, t_memory down, t_compute "
+                    "up ~30% (recompute) — a net win while memory-bound."),
+     "cfg": {"remat": "full"},
+     "rules": {"act_batch": ("data", "model"), "act_inner": None,
+               "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+               "act_vocab": None, "inner": None, "heads": None,
+               "kv_heads": None, "mlp": None, "vocab": None}},
+], include_baseline=False)
+
+# phi3.5 train: remat full on top of ep_a2a + SP
+run_variants("phi3.5-moe-42b-a6.6b", "train_4k", [
+    {"name": "ep_a2a_sp_rematfull",
+     "hypothesis": ("Iteration 3. Memory still dominates (4.89s, temp 96 "
+                    "GiB). remat=full trades recompute for activation "
+                    "memory: predict temp -> ~40 GiB, t_memory -> ~3s, "
+                    "t_compute 1.27 -> ~1.7s. Net win while memory-bound."),
+     "cfg": {"moe": EP, "remat": "full"},
+     "rules": {"act_seq": ("model",), "act_embed": None}},
+], include_baseline=False)

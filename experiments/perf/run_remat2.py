@@ -1,0 +1,31 @@
+import sys
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.perf_iter import run_variants
+from repro.configs.base import MoEConfig
+
+run_variants("zamba2-2.7b", "train_4k", [
+    {"name": "fulldp_zero_rematfull_v2",
+     "hypothesis": ("Iteration 2-fixed. First attempt was a silent no-op: "
+                    "remat was never wired into the hybrid family's forward "
+                    "(identical numbers = refuted-by-bug). With "
+                    "jax.checkpoint around each group (6 mamba + 1 shared "
+                    "block), backward stores only group boundaries: "
+                    "predict temp 125 -> ~40-60 GiB, t_memory down, "
+                    "t_compute +~30% recompute."),
+     "cfg": {"remat": "full"},
+     "rules": {"act_batch": ("data", "model"), "act_inner": None,
+               "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+               "act_vocab": None, "inner": None, "heads": None,
+               "kv_heads": None, "mlp": None, "vocab": None}},
+], include_baseline=False)
+
+EP = MoEConfig(n_experts=16, top_k=2, capacity_factor=1.25, impl="ep")
+run_variants("phi3.5-moe-42b-a6.6b", "train_4k", [
+    {"name": "ep_a2a_sp_rematfull",
+     "hypothesis": ("Iteration 3. Memory still dominates (4.89s, temp 96 "
+                    "GiB). remat=full (vs dots_saveable) trades recompute "
+                    "for activation memory: predict temp -> ~50 GiB, "
+                    "t_memory -> ~3.5s, t_compute 1.27 -> ~1.7s."),
+     "cfg": {"moe": EP, "remat": "full"},
+     "rules": {"act_seq": ("model",), "act_embed": None}},
+], include_baseline=False)

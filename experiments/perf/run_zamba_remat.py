@@ -1,0 +1,15 @@
+import sys
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.perf_iter import run_variants
+run_variants("zamba2-2.7b", "train_4k", [
+    {"name": "fulldp_zero_rematfull",
+     "hypothesis": ("Iteration 2. After full-DP the bound is memory "
+                    "(t_mem 4.45s, temp 125 GiB/dev). remat=full recomputes "
+                    "block activations in backward: predict temp ~3x lower, "
+                    "t_compute up ~30%."),
+     "cfg": {"remat": "full"},
+     "rules": {"act_batch": ("data", "model"), "act_inner": None,
+               "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+               "act_vocab": None, "inner": None, "heads": None,
+               "kv_heads": None, "mlp": None, "vocab": None}},
+], include_baseline=False)

@@ -1,0 +1,5 @@
+from .nqueens import KNOWN, count_completions, prefixes, solve_serial, \
+    solve_serverless
+from .pi import compute_pi, pi_estimate
+from .raytracer import Scene, camera, random_scene, render_serial, \
+    render_serverless

@@ -1,0 +1,39 @@
+"""Parallel Monte-Carlo PI — the paper's walkthrough example (Fig 6).
+
+    auto fn = [=] { return pi_estimate(n / np); };
+    for (...) cppless::dispatch<config>(aws, fn, result);
+
+Here the same shape: a jax-traceable task closed over its sample count,
+dispatched np_ times, reduced on the host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import FunctionConfig, RemoteFunction
+from ..dispatch import Dispatcher
+
+
+def pi_estimate(n: int, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (n,))
+    y = jax.random.uniform(ky, (n,))
+    inside = jnp.sum((x * x + y * y) <= 1.0)
+    return 4.0 * inside / n
+
+
+def compute_pi(n: int = 1_000_000, np_: int = 32,
+               dispatcher: Dispatcher | None = None) -> float:
+    """Offload np_ estimation tasks; average the results (paper Fig 6)."""
+    d = dispatcher or Dispatcher()
+    inst = d.create_instance()
+    per = n // np_
+    fn = RemoteFunction(lambda seed: pi_estimate(per, seed),
+                        name="pi_estimate",
+                        config=FunctionConfig(memory_mb=512))
+    futs = [inst.dispatch(fn, i) for i in range(np_)]
+    inst.wait()
+    vals = [float(f.result()) for f in futs]
+    return sum(vals) / len(vals), inst

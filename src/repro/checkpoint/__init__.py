@@ -1,0 +1,1 @@
+from .store import AsyncCheckpointer, latest_step, restore, save

@@ -1,0 +1,135 @@
+"""Sharded checkpointing over the repro binary archive.
+
+Layout:  <dir>/step_<k>/shard_<i>.bin + manifest.json + COMMITTED
+
+* every leaf is serialized with the paper-calibrated `binary` archive
+  (serialization/), optionally zlib-compressed;
+* a checkpoint is visible only after the COMMITTED marker is atomically
+  renamed into place — a killed writer never yields a half checkpoint;
+* `AsyncCheckpointer` snapshots to host memory synchronously (device->host
+  copy) and writes in a background thread, so the train loop stalls only
+  for the copy, not the I/O — the standard overlap trick at scale;
+* restart discovery: `latest_step()` scans for committed steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+from ..serialization import deserialize, serialize
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree, *, compress: bool = True,
+         shard_every: int = 64) -> str:
+    """Synchronous save; returns the committed directory."""
+    d = os.path.join(path, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(x) for x in leaves]
+    files = []
+    for i in range(0, len(host), shard_every):
+        blob = serialize(host[i:i + shard_every], format="binary")
+        if compress:
+            blob = zlib.compress(blob, level=1)
+        name = f"shard_{i // shard_every:05d}.bin"
+        with open(os.path.join(tmp, name), "wb") as f:
+            f.write(blob)
+        files.append(name)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(host), "files": files,
+                   "compress": compress, "shard_every": shard_every,
+                   "treedef": str(treedef)}, f)
+    open(os.path.join(tmp, "COMMITTED"), "w").close()
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    return d
+
+
+def restore(path: str, step: int, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/avals)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    host: list[np.ndarray] = []
+    for name in man["files"]:
+        with open(os.path.join(d, name), "rb") as f:
+            blob = f.read()
+        if man["compress"]:
+            blob = zlib.decompress(blob)
+        host.extend(deserialize(blob, format="binary"))
+    _, treedef = _flatten(like)
+    leaves_like = jax.tree.leaves(like)
+    assert len(host) == len(leaves_like), (len(host), len(leaves_like))
+    out = [np.asarray(h).astype(l.dtype).reshape(l.shape)
+           for h, l in zip(host, leaves_like)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def latest_step(path: str) -> int | None:
+    """Restart discovery: newest committed step, or None."""
+    if not os.path.isdir(path):
+        return None
+    best = None
+    for name in os.listdir(path):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(path, name, "COMMITTED")):
+                s = int(name.split("_")[1])
+                best = s if best is None else max(best, s)
+    return best
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with compute (device->host copy is sync)."""
+
+    def __init__(self, path: str, *, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Future | None = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree) -> Future:
+        self.wait()                                   # one in flight
+        host = jax.tree.map(np.asarray, tree)         # snapshot now
+
+        def _write():
+            save(self.path, step, host)
+            self._gc()
+
+        with self._lock:
+            self._pending = self._pool.submit(_write)
+        return self._pending
+
+    def wait(self):
+        with self._lock:
+            p = self._pending
+        if p is not None:
+            p.result()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.path)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown()

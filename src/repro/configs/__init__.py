@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from importlib import import_module
+
+from .base import ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES
+
+_MODULES = {
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "phi3.5-moe-42b-a6.6b": "phi3p5_moe",
+    "dbrx-132b": "dbrx_132b",
+    "qwen2-7b": "qwen2_7b",
+    "smollm-360m": "smollm_360m",
+    "gemma-2b": "gemma_2b",
+    "qwen1.5-4b": "qwen1p5_4b",
+    "whisper-large-v3": "whisper_large_v3",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+}
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return import_module(f".{_MODULES[arch]}", __package__).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return import_module(f".{_MODULES[arch]}", __package__).SMOKE
+
+
+def cells(arch: str) -> list[str]:
+    """Shape cells assigned to this arch (long_500k only for sub-quadratic;
+    skips are recorded in the roofline table, per DESIGN Arch-applicability)."""
+    cfg = get_config(arch)
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        out.append("long_500k")
+    return out
+
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+           "ARCHS", "get_config", "get_smoke", "cells"]

@@ -1,0 +1,16 @@
+"""dbrx-132b — 16 experts, top-4, fine-grained.
+[hf:databricks/dbrx-base; unverified]"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe", n_layers=40, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=10752, vocab_size=100352,
+    act="swiglu", rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=16, top_k=4, capacity_factor=1.25),
+    remat="dots_saveable")
+
+SMOKE = CONFIG.replace(
+    name="dbrx-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=256,
+    moe=MoEConfig(n_experts=4, top_k=4, capacity_factor=1.25),
+    remat="none")

@@ -1,0 +1,12 @@
+"""gemma-2b — GeGLU, head_dim=256, MQA.  [arXiv:2403.08295; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b", family="dense", n_layers=18, d_model=2048,
+    n_heads=8, n_kv_heads=1, head_dim=256, d_ff=16384, vocab_size=256000,
+    act="geglu", rope_theta=10_000.0, tie_embeddings=True,
+    remat="dots_saveable")
+
+SMOKE = CONFIG.replace(
+    name="gemma-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+    head_dim=16, d_ff=128, vocab_size=256, remat="none")

@@ -1,0 +1,16 @@
+"""phi3.5-moe-42b-a6.6b — 16 experts, top-2 routing.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=6400, vocab_size=32064,
+    act="swiglu", rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=16, top_k=2, capacity_factor=1.25),
+    remat="dots_saveable")
+
+SMOKE = CONFIG.replace(
+    name="phi3.5-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=1.25),
+    remat="none")

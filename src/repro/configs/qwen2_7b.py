@@ -1,0 +1,12 @@
+"""qwen2-7b — dense GQA with QKV bias.  [arXiv:2407.10671; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b", family="dense", n_layers=28, d_model=3584,
+    n_heads=28, n_kv_heads=4, head_dim=128, d_ff=18944, vocab_size=152064,
+    act="swiglu", qkv_bias=True, rope_theta=1e6,
+    remat="dots_saveable")
+
+SMOKE = CONFIG.replace(
+    name="qwen2-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=256, remat="none")

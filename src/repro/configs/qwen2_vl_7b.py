@@ -1,0 +1,15 @@
+"""qwen2-vl-7b — VLM backbone: M-RoPE, dynamic resolution (frontend stub).
+[arXiv:2409.12191; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm", n_layers=28, d_model=3584,
+    n_heads=28, n_kv_heads=4, head_dim=128, d_ff=18944, vocab_size=152064,
+    act="swiglu", qkv_bias=True, rope_theta=1e6,
+    mrope_sections=(16, 24, 24), embeds_input=True,
+    remat="dots_saveable")
+
+SMOKE = CONFIG.replace(
+    name="qwen2-vl-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=256, mrope_sections=(2, 3, 3),
+    remat="none")

@@ -1,0 +1,16 @@
+"""whisper-large-v3 — enc-dec audio backbone; conv frontend is a stub
+(input_specs feeds precomputed frame embeddings).  [arXiv:2212.04356;
+unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="encdec", n_layers=32, d_model=1280,
+    n_heads=20, n_kv_heads=20, head_dim=64, d_ff=5120, vocab_size=51866,
+    act="gelu", qkv_bias=True, rope_theta=0.0,
+    encoder_layers=32, decoder_layers=32, embeds_input=True,
+    remat="dots_saveable")
+
+SMOKE = CONFIG.replace(
+    name="whisper-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    head_dim=16, d_ff=128, vocab_size=256, encoder_layers=2,
+    decoder_layers=2, remat="none")

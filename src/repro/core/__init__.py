@@ -1,0 +1,13 @@
+from .config import DEFAULT_CONFIG, FunctionConfig
+from .function import (RemoteFunction, data_captures, rebind,
+                       reflect_captures, remote)
+from .naming import mangle, stable_name
+from .bridge import Bridge
+from .deploy import DeployedFunction, Deployment
+from .manifest import Manifest, ManifestEntry
+
+__all__ = [
+    "FunctionConfig", "DEFAULT_CONFIG", "RemoteFunction", "remote",
+    "reflect_captures", "rebind", "data_captures", "stable_name", "mangle",
+    "Bridge", "Deployment", "DeployedFunction", "Manifest", "ManifestEntry",
+]

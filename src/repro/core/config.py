@@ -1,0 +1,53 @@
+"""Per-function resource configuration (paper Fig 6, lines 11–14).
+
+Cppless lets users attach compile-time metadata to a function::
+
+    using config = lambda::config<
+        cppless::lambda::with_memory<512>,
+        cppless::lambda::with_ephemeral_storage<64>>;
+
+Here the same knobs are a frozen dataclass carried in the deployment manifest
+and honored by the dispatcher's scheduler and GB-seconds cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionConfig:
+    memory_mb: int = 1024          # AWS Lambda default in the paper's evaluation
+    ephemeral_mb: int = 512
+    timeout_s: float = 900.0
+    max_retries: int = 2           # serverless contract: idempotent → retry
+    hedge_after_quantile: float | None = None  # straggler backup (beyond paper)
+    serializer: str = "binary"     # binary | binary_json | structured_json
+
+    def with_memory(self, mb: int) -> "FunctionConfig":
+        return dataclasses.replace(self, memory_mb=mb)
+
+    def with_ephemeral_storage(self, mb: int) -> "FunctionConfig":
+        return dataclasses.replace(self, ephemeral_mb=mb)
+
+    def with_timeout(self, s: float) -> "FunctionConfig":
+        return dataclasses.replace(self, timeout_s=s)
+
+    def with_serializer(self, fmt: str) -> "FunctionConfig":
+        return dataclasses.replace(self, serializer=fmt)
+
+    def with_hedging(self, quantile: float = 0.95) -> "FunctionConfig":
+        return dataclasses.replace(self, hedge_after_quantile=quantile)
+
+    @property
+    def memory_gb(self) -> float:
+        return self.memory_mb / 1024.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FunctionConfig":
+        return cls(**d)
+
+
+DEFAULT_CONFIG = FunctionConfig()

@@ -1,0 +1,139 @@
+"""Remote function objects and capture reflection.
+
+Cppless models serverless functions as *function objects* (usually lambdas)
+whose captured state is serialized and whose type names the deployed cloud
+function (paper §3.2).  Two compiler extensions make that possible in C++:
+capture reflection and unique stable naming.
+
+Python gives us both without a compiler fork, and the analogy is exact:
+
+* **capture reflection** — ``fn.__code__.co_freevars`` + ``fn.__closure__``
+  expose the (otherwise unnamed) capture cells of a closure, like the
+  ``capture<I>()`` accessors Cppless adds to clang; ``rebind()`` reconstructs
+  the closure remotely from deserialized capture values.
+* **unique stable naming** — the traced jaxpr (or, for non-traceable tasks,
+  the marshalled code object) is content-addressed; see ``naming.py``.
+
+Single-source property: a ``RemoteFunction`` is still a plain callable — the
+same object runs locally (``rf(*args)``), in local threads, or remotely via a
+dispatcher, exactly like the paper's Fig 1 comparison.
+"""
+from __future__ import annotations
+
+import hashlib
+import marshal
+import types
+from typing import Any, Callable
+
+from .config import DEFAULT_CONFIG, FunctionConfig
+from . import naming
+
+
+def reflect_captures(fn: Callable) -> dict[str, Any]:
+    """Read the closure's capture cells: {freevar name: captured value}."""
+    names = fn.__code__.co_freevars
+    cells = fn.__closure__ or ()
+    if len(names) != len(cells):  # pragma: no cover
+        raise ValueError("closure cells do not match freevars")
+    return {n: c.cell_contents for n, c in zip(names, cells)}
+
+
+def rebind(fn: Callable, captures: dict[str, Any]) -> Callable:
+    """Reconstruct ``fn`` with its capture cells replaced by ``captures``.
+
+    This is the remote half of capture reflection: the entry point receives
+    deserialized capture values and splices them back into the closure.
+    Names absent from ``captures`` keep their original cells — code captures
+    (helper callables) travel with the deployed artifact, not the payload,
+    exactly as Cppless links static dependencies into the entry-point binary.
+    """
+    names = fn.__code__.co_freevars
+    orig = fn.__closure__ or ()
+    cells = tuple(
+        types.CellType(captures[n]) if n in captures else orig[i]
+        for i, n in enumerate(names)
+    )
+    return types.FunctionType(
+        fn.__code__, fn.__globals__, fn.__name__, fn.__defaults__, cells
+    )
+
+
+def data_captures(fn: Callable) -> dict[str, Any]:
+    """The serializable (non-callable, non-module) capture subset."""
+    return {
+        k: v for k, v in reflect_captures(fn).items()
+        if not callable(v) and not isinstance(v, types.ModuleType)
+    }
+
+
+def code_fingerprint(fn: Callable) -> str:
+    """Fallback identity for non-jax-traceable tasks: hash the code object.
+
+    Marshal of ``co_code`` + consts + freevar names is stable across processes
+    for the same source — the role Itanium mangling plays in Cppless.
+    """
+    code = fn.__code__
+    payload = marshal.dumps(
+        (code.co_code, code.co_consts, code.co_names, code.co_freevars,
+         code.co_varnames, code.co_argcount)
+    )
+    return hashlib.sha256(payload).hexdigest()
+
+
+class RemoteFunction:
+    """A function earmarked for serverless offload (the bridge-class handle).
+
+    ``fn`` may take explicit arguments and/or close over captured values.
+    The payload shipped per invocation is ``(args, kwargs, captures)``.
+    """
+
+    def __init__(self, fn: Callable, *, name: str | None = None,
+                 config: FunctionConfig = DEFAULT_CONFIG,
+                 jax_traceable: bool = True):
+        self.fn = fn
+        self.human_name = name or getattr(fn, "__name__", "lambda")
+        self.config = config
+        self.jax_traceable = jax_traceable
+
+    # -- single-source: local call path is untouched ------------------------
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+    # -- identity ------------------------------------------------------------
+    def fingerprint(self, *abstract_args, **abstract_kwargs) -> str:
+        """Content identity. Jaxpr-based when traceable, bytecode otherwise."""
+        if self.jax_traceable:
+            try:
+                return naming.jaxpr_fingerprint(
+                    self.fn, *abstract_args, **abstract_kwargs
+                )
+            except Exception:
+                pass  # fall through to bytecode identity
+        base = code_fingerprint(self.fn)
+        caps = reflect_captures(self.fn)
+        # Captured *callables* contribute code identity (transitive deps),
+        # mirroring how Cppless links the function's static dependencies.
+        h = hashlib.sha256(base.encode())
+        for k in sorted(caps):
+            v = caps[k]
+            if callable(v) and hasattr(v, "__code__"):
+                h.update(k.encode())
+                h.update(code_fingerprint(v).encode())
+        return h.hexdigest()
+
+    def stable_name(self, *abstract_args, salt: str = "", **abstract_kwargs) -> str:
+        fp = self.fingerprint(*abstract_args, **abstract_kwargs)
+        return naming.mangle(self.human_name, fp, salt=salt)
+
+    def __repr__(self):
+        return f"RemoteFunction({self.human_name!r}, config={self.config})"
+
+
+def remote(fn: Callable | None = None, *, name: str | None = None,
+           config: FunctionConfig = DEFAULT_CONFIG,
+           jax_traceable: bool = True):
+    """Decorator form: ``@remote`` / ``@remote(config=cfg.with_memory(512))``."""
+    def wrap(f):
+        return RemoteFunction(f, name=name, config=config,
+                              jax_traceable=jax_traceable)
+    return wrap(fn) if fn is not None else wrap

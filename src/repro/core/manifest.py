@@ -1,0 +1,82 @@
+"""Deployment manifest (paper §3.3, §4.2 "Linking").
+
+Cppless's compiler emits a manifest describing every alternative entry point
+(function id, resource metadata); ``cppless-ld`` merges manifests and the
+deployment tool drives cloud creation from it.  Redeploys happen only when a
+function's id changes.
+
+Here the manifest is a JSON document persisted next to the artifact store and
+consulted by ``Deployment.deploy`` for change detection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from .config import FunctionConfig
+
+
+@dataclass
+class ManifestEntry:
+    name: str                    # mangled stable name (the cloud function id)
+    human_name: str
+    kind: str                    # aot_xla | generic_worker
+    config: FunctionConfig
+    in_avals: list[str] = field(default_factory=list)
+    out_avals: list[str] = field(default_factory=list)
+    created_at: float = 0.0
+    artifact: str | None = None  # artifact-store key
+
+    def to_json(self) -> dict[str, Any]:
+        d = dict(self.__dict__)
+        d["config"] = self.config.to_json()
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ManifestEntry":
+        d = dict(d)
+        d["config"] = FunctionConfig.from_json(d["config"])
+        return cls(**d)
+
+
+class Manifest:
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self.entries: dict[str, ManifestEntry] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def add(self, entry: ManifestEntry) -> None:
+        entry.created_at = entry.created_at or time.time()
+        self.entries[entry.name] = entry
+        if self.path:
+            self.save(self.path)
+
+    def get(self, name: str) -> ManifestEntry:
+        return self.entries[name]
+
+    def save(self, path: str) -> None:
+        doc = {"version": 1,
+               "functions": {n: e.to_json() for n, e in self.entries.items()}}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: a crash never corrupts the manifest
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != 1:
+            raise ValueError("unsupported manifest version")
+        self.entries = {
+            n: ManifestEntry.from_json(e) for n, e in doc["functions"].items()
+        }

@@ -1,0 +1,81 @@
+"""Unique stable identification of remote functions.
+
+Cppless (paper §4.3) backs function↔entry-point identification with
+``__builtin_unique_stable_name`` — a *modified Itanium mangling* that strips
+inlined namespaces so the identifier is stable across standard-library
+implementations.
+
+The JAX analogue: a function's "type" is its **jaxpr** (the traced program) +
+the abstract values it was specialized on.  We canonicalize the jaxpr text so
+the id is stable across processes and incidental differences (variable ids,
+object addresses, source paths), then content-address it with SHA-256.  Two
+call sites that trace to the same program get the same deployed function —
+exactly the dedup behavior of Cppless's type-keyed entry points — and any
+code change flips the id, which is what drives redeploy-on-change.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+
+import jax
+
+# Matches jaxpr variable tokens (a..z, aa..) and memory addresses.
+_ADDR_RE = re.compile(r"0x[0-9a-fA-F]+")
+_WS_RE = re.compile(r"\s+")
+# Source-location / name-stack noise that may embed absolute paths.
+_PATHY_RE = re.compile(r"(/[\w.\-/]+\.py[:0-9]*)")
+
+
+def canonicalize_jaxpr_text(text: str) -> str:
+    """Normalize a jaxpr pretty-print for hashing.
+
+    The analogue of stripping inlined namespaces from the Itanium mangling:
+    remove process-incidental detail (addresses, absolute paths, whitespace
+    layout) while keeping the full program structure, dtypes and shapes.
+    """
+    text = _ADDR_RE.sub("0xADDR", text)
+    text = _PATHY_RE.sub("<src>", text)
+    text = _WS_RE.sub(" ", text).strip()
+    return text
+
+
+def jaxpr_fingerprint(fn, *abstract_args, static_argnums=(), **abstract_kwargs) -> str:
+    """SHA-256 over the canonicalized closed jaxpr of ``fn`` at these avals."""
+    closed = jax.make_jaxpr(fn, static_argnums=static_argnums)(
+        *abstract_args, **abstract_kwargs
+    )
+    canon = canonicalize_jaxpr_text(str(closed))
+    avals = ",".join(
+        f"{a.shape}:{a.dtype}" for a in closed.in_avals
+    )
+    h = hashlib.sha256()
+    h.update(canon.encode())
+    h.update(b"|avals|")
+    h.update(avals.encode())
+    return h.hexdigest()
+
+
+def mangle(human_name: str, fingerprint: str, salt: str = "") -> str:
+    """Produce the deployable function name.
+
+    Shaped after the Itanium scheme Cppless modifies: a fixed prefix, the
+    length-prefixed human name, and the content hash.  Cloud function names
+    must be short and [A-Za-z0-9_-], which this guarantees.
+    """
+    clean = re.sub(r"[^A-Za-z0-9_]", "_", human_name)[:48]
+    if salt:
+        fingerprint = hashlib.sha256(
+            (fingerprint + "|" + salt).encode()
+        ).hexdigest()
+    return f"_ZRF{len(clean)}{clean}I{fingerprint[:16]}E"
+
+
+def stable_name(fn, *abstract_args, human_name: str | None = None,
+                salt: str = "", **abstract_kwargs) -> str:
+    """End-to-end: trace → canonicalize → hash → mangle."""
+    fp = jaxpr_fingerprint(fn, *abstract_args, **abstract_kwargs)
+    name = human_name or getattr(fn, "__name__", "lambda")
+    # <locals> in qualnames is incidental (the "inline namespace" analogue).
+    name = name.replace("<locals>", "").replace("<lambda>", "lambda")
+    return mangle(name, fp, salt=salt)

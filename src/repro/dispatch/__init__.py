@@ -1,0 +1,12 @@
+from .cost import PRICE_PER_GB_S, PRICE_PER_REQUEST, CostReport
+from .dispatcher import Dispatcher, DispatcherInstance, dispatch, wait
+from .futures import Invocation, InvocationFuture, InvocationRecord
+from .latency_model import DEFAULT_LATENCY, LatencyModel
+from .workers import FaultPlan, WorkerCrash, WorkerPool
+
+__all__ = [
+    "Dispatcher", "DispatcherInstance", "dispatch", "wait", "CostReport",
+    "InvocationFuture", "InvocationRecord", "Invocation", "LatencyModel",
+    "DEFAULT_LATENCY", "WorkerPool", "WorkerCrash", "FaultPlan",
+    "PRICE_PER_GB_S", "PRICE_PER_REQUEST",
+]

@@ -1,0 +1,58 @@
+"""Pay-as-you-go cost accounting (paper Fig 14).
+
+AWS Lambda pricing model: GB-seconds (billed duration, 1 ms granularity,
+× configured memory) plus a per-request charge.  The paper's Fig 14 metric is
+total GB-seconds across all tasks; its claim is that cost stays ~flat as
+parallelism grows because billing is proportional to productive work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .futures import InvocationRecord
+
+# us-east-1 x86 prices at time of paper
+PRICE_PER_GB_S = 0.0000166667
+PRICE_PER_REQUEST = 0.20 / 1_000_000
+# paper §1 comparison point: a t3.small-ish VM with 2 vCPUs
+VM_PRICE_PER_HOUR = 0.048
+
+
+@dataclass
+class CostReport:
+    records: list[InvocationRecord] = field(default_factory=list)
+
+    def add(self, rec: InvocationRecord) -> None:
+        self.records.append(rec)
+
+    @property
+    def invocations(self) -> int:
+        return len(self.records)
+
+    @property
+    def gb_seconds(self) -> float:
+        return sum(r.billed_gb_s for r in self.records)
+
+    @property
+    def compute_seconds(self) -> float:
+        return sum(r.server_s for r in self.records)
+
+    @property
+    def dollars(self) -> float:
+        return (self.gb_seconds * PRICE_PER_GB_S
+                + self.invocations * PRICE_PER_REQUEST)
+
+    def vm_equivalent_hours(self) -> float:
+        """How long the paper's benchmark VM could run for the same money."""
+        return self.dollars / VM_PRICE_PER_HOUR
+
+    def summary(self) -> dict:
+        return {
+            "invocations": self.invocations,
+            "gb_seconds": round(self.gb_seconds, 6),
+            "compute_seconds": round(self.compute_seconds, 6),
+            "dollars": round(self.dollars, 8),
+            "cold_starts": sum(1 for r in self.records if r.cold_start),
+            "retries": sum(r.attempts - 1 for r in self.records),
+            "hedged_wins": sum(1 for r in self.records if r.hedged),
+        }

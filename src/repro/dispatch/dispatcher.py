@@ -1,0 +1,216 @@
+"""The Cppless dispatcher (paper §4.1) — fork-join serverless invocation.
+
+Paper user model::
+
+    cppless::aws_dispatcher dispatcher;
+    auto aws = dispatcher.create_instance();      // invocation namespace
+    auto fn  = [=] { return pi_estimate(n / np); };
+    for (...) cppless::dispatch<config>(aws, fn, result);
+    cppless::wait(aws, np);
+
+Here::
+
+    disp = Dispatcher(client="http2_pool")
+    inst = disp.create_instance()
+    futs = [inst.dispatch(fn) for _ in range(np_)]
+    inst.wait()
+    results = [f.result() for f in futs]
+
+Dispatchers encapsulate one "cloud" (deployment + worker pool + client model)
+so switching backends never touches application code.  Beyond the paper, the
+dispatcher owns *fault tolerance* (idempotent retry on sandbox loss) and
+*straggler mitigation* (quantile-triggered hedged backups), both enabled by
+the serverless statelessness contract.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Sequence
+
+from ..core.config import DEFAULT_CONFIG, FunctionConfig
+from ..core.deploy import DeployedFunction, Deployment
+from ..core.function import RemoteFunction, data_captures
+from .cost import CostReport
+from .futures import Invocation, InvocationFuture, InvocationRecord
+from .latency_model import DEFAULT_LATENCY, LatencyModel
+from .workers import FaultPlan, WorkerCrash, WorkerPool
+
+
+class Dispatcher:
+    """One cloud backend: deployment + elastic worker fleet + client model."""
+
+    def __init__(self, *, deployment: Deployment | None = None,
+                 client: str = "http2_pool",
+                 latency: LatencyModel = DEFAULT_LATENCY,
+                 max_concurrency: int = 1000, os_threads: int = 16,
+                 fault_plan: FaultPlan | None = None,
+                 manifest_path: str | None = None):
+        self.deployment = deployment or Deployment(manifest_path=manifest_path)
+        self.client = client
+        self.latency = latency
+        self.max_concurrency = max_concurrency
+        self.pool = WorkerPool(max_concurrency=max_concurrency,
+                               os_threads=os_threads, fault_plan=fault_plan)
+        self._instances: list[DispatcherInstance] = []
+
+    def create_instance(self) -> "DispatcherInstance":
+        inst = DispatcherInstance(self)
+        self._instances.append(inst)
+        return inst
+
+    def shutdown(self) -> None:
+        self.pool.shutdown()
+
+
+class DispatcherInstance:
+    """An invocation namespace (paper: 'acts as a namespace for invocations')."""
+
+    def __init__(self, dispatcher: Dispatcher):
+        self.d = dispatcher
+        self._next_task = 0
+        self._pending: set[int] = set()
+        self._cv = threading.Condition()
+        self.cost = CostReport()
+        self.records: list[InvocationRecord] = []
+        self._durations_ms: list[float] = []   # per completed task, for Fig 11
+        self._cold: list[bool] = []
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch(self, fn: Callable | RemoteFunction | DeployedFunction,
+                 *args: Any, config: FunctionConfig | None = None,
+                 **kwargs: Any) -> InvocationFuture:
+        """Fire one serverless invocation; returns a future."""
+        deployed = self._ensure_deployed(fn, args, kwargs, config)
+        captures = (data_captures(deployed.remote_fn.fn)
+                    if deployed.remote_fn.fn.__closure__ else {})
+        payload = deployed.bridge.pack(tuple(args), kwargs, captures)
+
+        with self._cv:
+            task_id = self._next_task
+            self._next_task += 1
+            self._pending.add(task_id)
+        fut = InvocationFuture(task_id)
+        inv = Invocation(task_id=task_id, deployed=deployed, payload=payload,
+                         future=fut, on_complete=self._on_complete)
+        self.d.pool.submit(inv)
+        return fut
+
+    def map(self, fn: Callable | RemoteFunction, arglists: Sequence[tuple],
+            config: FunctionConfig | None = None,
+            hedge_quantile: float | None = None) -> list[Any]:
+        """Fork-join over a task list, with optional straggler hedging.
+
+        Hedging (beyond paper): once ``hedge_quantile`` of tasks completed,
+        unfinished tasks get a backup invocation; first result wins.  Safe
+        because tasks are stateless and idempotent — the serverless contract.
+        """
+        futs = [self.dispatch(fn, *a, config=config) for a in arglists]
+        cfg = self._resolve_config(fn, config)
+        hq = hedge_quantile or cfg.hedge_after_quantile
+        if hq is not None and len(futs) > 1:
+            self._hedge(fn, arglists, futs, cfg, hq)
+        return [f.result(timeout=cfg.timeout_s) for f in futs]
+
+    def wait(self, n: int | None = None, timeout: float = 300.0) -> None:
+        """Block until all (or the next ``n``) pending invocations resolve."""
+        with self._cv:
+            if n is None:
+                target = 0
+                ok = self._cv.wait_for(lambda: not self._pending, timeout)
+            else:
+                target = max(0, len(self._pending) - n)
+                ok = self._cv.wait_for(
+                    lambda: len(self._pending) <= target, timeout)
+        if not ok:
+            raise TimeoutError("wait() timed out")
+
+    # ------------------------------------------------------------ internals
+    def _ensure_deployed(self, fn, args, kwargs, config) -> DeployedFunction:
+        if isinstance(fn, DeployedFunction):
+            return fn
+        rf = fn if isinstance(fn, RemoteFunction) else RemoteFunction(fn)
+        return self.d.deployment.deploy(rf, *args, config=config, **kwargs)
+
+    @staticmethod
+    def _resolve_config(fn, config) -> FunctionConfig:
+        if config is not None:
+            return config
+        if isinstance(fn, RemoteFunction):
+            return fn.config
+        if isinstance(fn, DeployedFunction):
+            return fn.config
+        return DEFAULT_CONFIG
+
+    def _on_complete(self, inv: Invocation, ok: bool, value,
+                     rec: InvocationRecord) -> None:
+        cfg = inv.deployed.config
+        if not ok and isinstance(value, WorkerCrash) and \
+                inv.attempt <= cfg.max_retries:
+            # fault tolerance: stateless task → resubmit, same payload
+            retry = Invocation(task_id=inv.task_id, deployed=inv.deployed,
+                               payload=inv.payload, future=inv.future,
+                               attempt=inv.attempt + 1, is_hedge=inv.is_hedge,
+                               on_complete=self._on_complete)
+            self.d.pool.submit(retry)
+            return
+        first = not inv.future.done()
+        if ok:
+            inv.future.set_result(value, rec)
+        else:
+            inv.future.set_error(value, rec)
+        if first:
+            self._record(rec)
+            with self._cv:
+                self._pending.discard(inv.task_id)
+                self._cv.notify_all()
+
+    def _record(self, rec: InvocationRecord | None) -> None:
+        if rec is None:
+            return
+        self.records.append(rec)
+        self.cost.add(rec)
+        self._durations_ms.append(rec.server_s * 1000.0)
+        self._cold.append(rec.cold_start)
+
+    def _hedge(self, fn, arglists, futs, cfg, quantile: float) -> None:
+        n = len(futs)
+        threshold = max(1, int(n * quantile))
+        done_count = threading.Semaphore(0)
+        for f in futs:
+            f.add_done_callback(lambda _f: done_count.release())
+        for _ in range(threshold):
+            done_count.acquire()
+        # quantile reached: back up every unfinished task
+        for f, a in zip(futs, arglists):
+            if not f.done():
+                deployed = self._ensure_deployed(fn, a, {}, cfg)
+                captures = (data_captures(deployed.remote_fn.fn)
+                            if deployed.remote_fn.fn.__closure__ else {})
+                payload = deployed.bridge.pack(tuple(a), {}, captures)
+                backup = Invocation(
+                    task_id=f.task_id, deployed=deployed, payload=payload,
+                    future=f, is_hedge=True, on_complete=self._on_complete)
+                self.d.pool.submit(backup)
+
+    # ------------------------------------------------------------- metrics
+    def modeled_latencies_ms(self) -> list[float]:
+        """Client-observed latencies for the completed burst (Fig 11 model)."""
+        return self.d.latency.simulate_burst(
+            self._durations_ms, client=self.d.client, cold=self._cold)
+
+    def modeled_makespan_ms(self) -> float:
+        lats = self.modeled_latencies_ms()
+        return max(lats) if lats else 0.0
+
+
+# --------------------------------------------------------- paper-style API --
+
+def dispatch(instance: DispatcherInstance, fn, *args,
+             config: FunctionConfig | None = None) -> InvocationFuture:
+    """``cppless::dispatch<config>(aws, fn, result)`` analogue."""
+    return instance.dispatch(fn, *args, config=config)
+
+
+def wait(instance: DispatcherInstance, n: int | None = None) -> None:
+    """``cppless::wait(aws, n)`` analogue."""
+    instance.wait(n)

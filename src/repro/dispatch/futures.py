@@ -1,0 +1,106 @@
+"""Invocation futures and per-invocation records."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class InvocationRecord:
+    """Everything we know about one serverless invocation."""
+    task_id: int
+    function_name: str
+    worker_id: int = -1
+    cold_start: bool = False
+    attempts: int = 1
+    hedged: bool = False              # a backup request won the race
+    # server-side (execution) accounting, seconds
+    deserialize_s: float = 0.0
+    compute_s: float = 0.0
+    serialize_s: float = 0.0
+    server_s: float = 0.0             # billable duration
+    # modeled client-observed latency (ms), from the latency model
+    modeled_latency_ms: float = 0.0
+    payload_bytes: int = 0
+    result_bytes: int = 0
+    memory_gb: float = 1.0
+
+    @property
+    def billed_gb_s(self) -> float:
+        """AWS Lambda bills ceil-to-1ms × configured memory."""
+        import math
+        billed_ms = max(1, math.ceil(self.server_s * 1000.0))
+        return billed_ms / 1000.0 * self.memory_gb
+
+
+class InvocationFuture:
+    """Minimal future with completion callbacks (used for hedging races)."""
+
+    def __init__(self, task_id: int):
+        self.task_id = task_id
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: BaseException | None = None
+        self.record: InvocationRecord | None = None
+        self._callbacks: list[Callable[["InvocationFuture"], None]] = []
+        self._lock = threading.Lock()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value: Any, record: InvocationRecord) -> None:
+        with self._lock:
+            if self._event.is_set():
+                return                      # hedging: first writer wins
+            self._result = value
+            self.record = record
+            self._event.set()
+            callbacks = list(self._callbacks)
+        for cb in callbacks:
+            cb(self)
+
+    def set_error(self, err: BaseException,
+                  record: InvocationRecord | None = None) -> None:
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._error = err
+            self.record = record
+            self._event.set()
+            callbacks = list(self._callbacks)
+        for cb in callbacks:
+            cb(self)
+
+    def add_done_callback(self, cb: Callable[["InvocationFuture"], None]) -> None:
+        run_now = False
+        with self._lock:
+            if self._event.is_set():
+                run_now = True
+            else:
+                self._callbacks.append(cb)
+        if run_now:
+            cb(self)
+
+    def result(self, timeout: float | None = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"invocation {self.task_id} timed out")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+@dataclass
+class Invocation:
+    """A unit of dispatch: payload + routing metadata."""
+    task_id: int
+    deployed: Any                      # core.deploy.DeployedFunction
+    payload: bytes
+    future: InvocationFuture
+    attempt: int = 1
+    is_hedge: bool = False
+    submit_order: int = 0
+    tags: dict = field(default_factory=dict)
+    # set by the dispatcher: (inv, ok, value_or_error, record) -> None.
+    # Lets retry/hedging policy live in the dispatcher, not the pool.
+    on_complete: Callable[["Invocation", bool, Any, InvocationRecord], None] | None = None

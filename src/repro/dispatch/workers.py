@@ -1,0 +1,176 @@
+"""Elastic worker pool — the execution backend standing in for the FaaS fleet.
+
+Real execution, simulated fleet: invocations run on a bounded set of OS
+threads, while *worker instances* (= Lambda sandboxes) are bookkeeping objects
+that model cold starts, warm reuse, elastic scale-out/in, and failures.  The
+serverless execution contract is enforced: a task sees only its payload bytes
+(``Bridge.entry``), is stateless, and may be killed and retried at any time.
+"""
+from __future__ import annotations
+
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+from .futures import Invocation, InvocationRecord
+
+
+class WorkerCrash(RuntimeError):
+    """Injected sandbox failure (node loss) — retried by the dispatcher."""
+
+
+@dataclass
+class WorkerInstance:
+    worker_id: int
+    function_name: str
+    invocations: int = 0
+    created_at: float = field(default_factory=time.time)
+
+    @property
+    def is_cold(self) -> bool:
+        return self.invocations == 0
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic fault/straggler injection for tests and benchmarks."""
+    failure_rate: float = 0.0          # P(sandbox crash) per invocation
+    straggler_rate: float = 0.0        # P(task straggles)
+    straggler_factor: float = 8.0      # straggler duration multiplier
+    straggler_sleep_s: float = 0.0     # real extra sleep for stragglers
+    seed: int = 0
+
+    def roll(self, task_id: int, attempt: int) -> tuple[bool, bool]:
+        rng = random.Random(self.seed * 1_000_003 + task_id * 1009 + attempt)
+        fail = rng.random() < self.failure_rate
+        straggle = rng.random() < self.straggler_rate
+        return fail, straggle
+
+
+class WorkerPool:
+    """Elastic pool executing ``Invocation``s on OS threads.
+
+    ``max_concurrency`` models the account's function-concurrency limit
+    (paper: 1000); ``os_threads`` bounds real parallelism in this container.
+    Instances scale out on demand (cold start) and are reused warm, per
+    function name — matching FaaS semantics.
+    """
+
+    def __init__(self, max_concurrency: int = 1000, os_threads: int = 16,
+                 fault_plan: FaultPlan | None = None):
+        self.max_concurrency = max_concurrency
+        self.fault_plan = fault_plan or FaultPlan()
+        self._queue: "queue.Queue[Invocation | None]" = queue.Queue()
+        self._warm: dict[str, list[WorkerInstance]] = {}
+        self._next_worker_id = 0
+        self._live_instances = 0
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._stop = False
+        self._resize(os_threads)
+
+    # ------------------------------------------------------------- elastic
+    def _resize(self, n: int) -> None:
+        while len(self._threads) < n:
+            t = threading.Thread(target=self._run, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def scale_to(self, os_threads: int) -> None:
+        """Elastic scale-out of real executors (scale-in is cooperative)."""
+        self._resize(os_threads)
+
+    def drain_warm(self, function_name: str | None = None) -> int:
+        """Scale-in: drop warm sandboxes (next invocations pay cold starts)."""
+        with self._lock:
+            if function_name is None:
+                n = sum(len(v) for v in self._warm.values())
+                self._warm.clear()
+            else:
+                n = len(self._warm.pop(function_name, []))
+            self._live_instances -= n
+            return n
+
+    # ------------------------------------------------------------ dispatch
+    def submit(self, inv: Invocation) -> None:
+        self._queue.put(inv)
+
+    def shutdown(self) -> None:
+        self._stop = True
+        for _ in self._threads:
+            self._queue.put(None)
+
+    # ------------------------------------------------------------- worker
+    def _acquire_instance(self, fname: str) -> tuple[WorkerInstance, bool]:
+        with self._lock:
+            warm = self._warm.setdefault(fname, [])
+            if warm:
+                inst = warm.pop()
+                return inst, False
+            self._next_worker_id += 1
+            self._live_instances += 1
+            return WorkerInstance(self._next_worker_id, fname), True
+
+    def _release_instance(self, inst: WorkerInstance) -> None:
+        with self._lock:
+            self._warm.setdefault(inst.function_name, []).append(inst)
+
+    def _run(self) -> None:
+        while not self._stop:
+            inv = self._queue.get()
+            if inv is None:
+                return
+            if inv.future.done():       # hedged sibling already won
+                continue
+            try:
+                self._execute(inv)
+            except BaseException as e:  # executor bug must not kill the thread
+                inv.future.set_error(e)
+
+    def _execute(self, inv: Invocation) -> None:
+        bridge = inv.deployed.bridge
+        fail, straggle = self.fault_plan.roll(inv.task_id, inv.attempt)
+        inst, cold = self._acquire_instance(bridge.name)
+        rec = InvocationRecord(
+            task_id=inv.task_id, function_name=bridge.name,
+            worker_id=inst.worker_id, cold_start=cold, attempts=inv.attempt,
+            hedged=inv.is_hedge, payload_bytes=len(inv.payload),
+            memory_gb=bridge.config.memory_gb)
+        def finish(ok: bool, value, record: InvocationRecord) -> None:
+            if inv.on_complete is not None:
+                inv.on_complete(inv, ok, value, record)
+            elif ok:
+                inv.future.set_result(value, record)
+            else:
+                inv.future.set_error(value, record)
+
+        try:
+            if fail:
+                with self._lock:       # crashed sandbox is never reused
+                    self._live_instances -= 1
+                raise WorkerCrash(
+                    f"sandbox {inst.worker_id} lost (task {inv.task_id} "
+                    f"attempt {inv.attempt})")
+            t0 = time.perf_counter()
+            blob = bridge.entry(inv.payload)
+            server_s = time.perf_counter() - t0
+            if straggle:
+                if self.fault_plan.straggler_sleep_s:
+                    time.sleep(self.fault_plan.straggler_sleep_s)
+                server_s *= self.fault_plan.straggler_factor
+            stats = bridge.last_stats
+            rec.deserialize_s = stats.deserialize_s
+            rec.compute_s = stats.compute_s
+            rec.serialize_s = stats.serialize_s
+            rec.server_s = server_s
+            rec.result_bytes = len(blob)
+            inst.invocations += 1
+            self._release_instance(inst)
+            finish(True, bridge.unpack_result(blob), rec)
+        except WorkerCrash as e:
+            finish(False, e, rec)          # dispatcher decides on retry
+        except BaseException as e:         # user-code error: no retry
+            rec.server_s = 0.0
+            finish(False, e, rec)

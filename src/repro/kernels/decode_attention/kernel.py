@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode: one query token vs. a long KV cache.
+
+Decode is memory-bound (roofline: stream the whole cache at ~2 bytes/FLOP),
+so the kernel's job is to stream K/V through VMEM exactly once while all G
+query heads of a kv group ride along — GQA turns the dot into a (G, bk)
+matmul, amortizing the K/V read across the group (the TPU adaptation of
+GPU flash-decode, where warps split the cache instead).
+
+Layout: q (B, Hkv, G, D); k, v (B, Hkv, Skv, D); kv_len (B, 1) int32 in SMEM.
+Grid (B, Hkv, Skv/bk) — kv dim minor-most/sequential; running softmax state
+in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale, window, block_k, kv_blocks):
+    ik = pl.program_id(2)
+    kv_len = len_ref[0, 0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    col0 = ik * block_k
+    live = col0 < kv_len
+    if window:
+        live &= col0 + block_k > kv_len - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,bk)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < kv_len
+        if window:
+            mask &= cols >= kv_len - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ik == kv_blocks - 1)
+    def _fin():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "block_k", "interpret"))
+def flash_decode_bhgd(q, k, v, kv_len, *, window=0, scale=None,
+                      block_k=256, interpret=False):
+    """q (B,Hkv,G,D); k,v (B,Hkv,Skv,D); kv_len (B,) -> (B,Hkv,G,D)."""
+    b, hkv, g, d = q.shape
+    _, _, skv, _ = k.shape
+    assert skv % block_k == 0
+    scale = scale if scale is not None else d ** -0.5
+    kv_blocks = skv // block_k
+
+    kernel = functools.partial(_dec_kernel, scale=scale, window=window,
+                               block_k=block_k, kv_blocks=kv_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hkv, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.reshape(b, 1).astype(jnp.int32), q, k, v)

@@ -1,0 +1,34 @@
+"""Public decode-attention op: GQA grouping, padding, impl dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_decode_bhgd
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, kv_len, *, window: int = 0,
+                     scale: float | None = None, impl: str = "ref",
+                     block_k: int = 256):
+    """q (B,Hq,D); k,v (B,Skv,Hkv,D); kv_len (B,) -> (B,Hq,D)."""
+    if impl in ("ref", "xla"):
+        # the jnp decode path is already linear-memory (scores (B,Hq,Skv))
+        return decode_attention_ref(q, k, v, kv_len, window=window,
+                                    scale=scale)
+    interpret = impl == "pallas_interpret"
+    b, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    bk = min(block_k, max(128, skv))
+
+    qg = q.reshape(b, hkv, g, d)
+    kt = jnp.swapaxes(k, 1, 2)                       # (B,Hkv,Skv,D)
+    vt = jnp.swapaxes(v, 1, 2)
+    pad = (-skv) % bk
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    out = flash_decode_bhgd(qg, kt, vt, kv_len, window=window, scale=scale,
+                            block_k=bk, interpret=interpret)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for single-token (decode) attention over a KV cache.
+
+q (B, Hq, D) — one new token per sequence.
+k, v (B, Skv, Hkv, D) — the cache; entries at positions >= kv_len are junk.
+kv_len (B,) int32 — valid cache length per sequence (the new token's k/v must
+already be written at kv_len-1 by the caller).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def decode_attention_ref(q, k, v, kv_len, *, window: int = 0,
+                         scale: float | None = None):
+    b, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    kr = jnp.repeat(k, g, axis=2)                       # (B,Skv,Hq,D)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale       # (B,Hq,Skv)
+
+    cols = jnp.arange(skv)[None, :]                      # (1,Skv)
+    mask = cols < kv_len[:, None]
+    if window:
+        mask &= cols >= jnp.maximum(0, kv_len[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

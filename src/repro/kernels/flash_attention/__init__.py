@@ -1,0 +1,2 @@
+from .ops import attention
+from .ref import attention_ref

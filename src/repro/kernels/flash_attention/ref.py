@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for (GQA / causal / windowed) attention.
+
+Shapes:  q (B, Sq, Hq, D);  k, v (B, Skv, Hkv, D);  Hq % Hkv == 0.
+``q_offset``: absolute position of q[0] within the kv timeline (Sq == Skv and
+offset 0 for self-attention training; offset = kv_len - Sq for chunked
+prefill / decode continuation).  ``window``: sliding-window size (0 = full).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0, scale: float | None = None,
+                  kv_len=None):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+
+    rows = jnp.arange(sq)[:, None] + q_offset           # absolute q position
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    if kv_len is not None:                              # (B,) valid cache len
+        mask = mask[None] & (cols[None] < kv_len[:, None, None])
+        mask = mask[:, None]                            # (B,1,Sq,Skv)
+    else:
+        mask = mask[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0, scale: float | None = None,
+                  block_q: int = 512):
+    """Query-chunked attention in pure XLA — the production fallback path.
+
+    Same math as the oracle, but scores are materialized one q-block at a
+    time (scan + checkpoint), so peak memory is O(bq·Skv·H) instead of
+    O(Sq·Skv·H); the backward pass recomputes per-block scores.  This is
+    what the dry-run lowers (the Pallas kernel is the TPU-runtime path, and
+    ``interpret=True`` cannot be SPMD-partitioned).
+    GQA heads stay grouped (no kv repeat materialization).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    bq = min(block_q, sq)
+    pad = (-sq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (sq + pad) // bq
+    qc = q.reshape(b, nq, bq, hkv, g, d)
+    qc = jnp.moveaxis(qc, 1, 0)                      # (nq, b, bq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    cols = jnp.arange(skv)[None, :]
+
+    def chunk(_, xs):
+        qb, i = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32) * scale,
+                       kf)
+        rows = i * bq + jnp.arange(bq)[:, None] + q_offset
+        mask = jnp.ones((bq, skv), bool)
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= cols > rows - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+        return None, o.astype(q.dtype)
+
+    _, oc = jax.lax.scan(jax.checkpoint(chunk), None,
+                         (qc, jnp.arange(nq, dtype=jnp.int32)))
+    out = jnp.moveaxis(oc, 0, 1).reshape(b, sq + pad, hq, d)
+    return out[:, :sq]

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel for the chunked Mamba2 SSD scan.
+
+One grid cell = one (batch, head, chunk).  The chunk dim is minor-most, so it
+runs sequentially on TPU and the (P, N) state is carried in VMEM scratch
+across chunks — the inter-chunk recurrence costs nothing extra in HBM
+traffic.  Within a chunk everything is (L, ·) matmuls on the MXU:
+
+  la     = cumsum(dt * A)                     (L,)      decay log-weights
+  scores = (C B^T) ⊙ exp(la_t - la_s) causal  (L, L)
+  y      = scores @ (dt·x)  +  exp(la) ⊙ (C @ state^T)
+  state  = exp(la_L) state + ((dt·x) ⊙ exp(la_L - la))^T @ B
+
+VMEM per cell at L=128, P=64, N=128: 4 tiles of (L,L)+(L,P)+(L,N)+(P,N)
+fp32 ≈ 0.3 MiB — far under budget; L is the tuning knob.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hout_ref, state_ref, *, nchunks, chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)              # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)            # (L,)
+    A = a_ref[0].astype(jnp.float32)                    # ()
+    Bm = b_ref[0, :, 0].astype(jnp.float32)             # (L, N)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)             # (L, N)
+
+    la = jnp.cumsum(dt * A)                              # (L,) <= 0
+    xb = x * dt[:, None]
+
+    seg = la[:, None] - la[None, :]                      # (L, L)
+    causal = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = cb * jnp.exp(jnp.where(causal, seg, -jnp.inf))
+
+    h_in = state_ref[...]                                # (P, N)
+    y_intra = jax.lax.dot_general(scores, xb, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = jax.lax.dot_general(Cm, h_in, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) \
+        * jnp.exp(la)[:, None]                           # (L, P)
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    w_end = jnp.exp(la[-1] - la)                         # (L,)
+    state_ref[...] = (jnp.exp(la[-1]) * h_in
+                      + jax.lax.dot_general(
+                          xb * w_end[:, None], Bm,
+                          (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+    @pl.when(ic == nchunks - 1)
+    def _fin():
+        hout_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x, dt, A, Bm, Cm, h0, *, chunk: int = 128,
+                       interpret: bool = False):
+    """x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,H,N) (groups pre-
+    expanded); h0 (B,H,P,N) -> y (B,S,H,P), h_final (B,H,P,N)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, nchunks=nc, chunk=chunk)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c: (b_, c, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c: (b_, c, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, c: (h_,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c: (b_, c, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c: (b_, c, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c: (b_, c, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, h0)
+    return y, hout

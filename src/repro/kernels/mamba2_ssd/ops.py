@@ -1,0 +1,46 @@
+"""Public SSD op: group expansion, padding, impl dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import ssd_chunked_pallas
+from .ref import ssd_chunked, ssd_decode_ref, ssd_scan_ref
+
+
+def ssd(x, dt, A, Bm, Cm, h0=None, *, chunk: int = 64, impl: str = "chunked"):
+    """Mamba2 SSD scan.  x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,G,N);
+    h0 (B,H,P,N) or None -> (y (B,S,H,P), h_final).
+
+    impl: "scan" (exact sequential oracle) | "chunked" (parallel XLA path) |
+    "pallas" | "pallas_interpret".
+    """
+    b, s, h, p = x.shape
+    if impl == "scan":
+        return ssd_scan_ref(x, dt, A, Bm, Cm, h0)
+
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # dt=0 padding => a=1, xb=0: state passes through unchanged, y junk-but-
+    # sliced-off, final state exact.
+
+    if impl == "chunked":
+        y, hl = ssd_chunked(x, dt, A, Bm, Cm, h0, chunk=chunk)
+        return y[:, :s], hl
+
+    interpret = impl == "pallas_interpret"
+    n = Bm.shape[-1]
+    g = Bm.shape[2]
+    Bh = jnp.repeat(Bm, h // g, axis=2)
+    Ch = jnp.repeat(Cm, h // g, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    y, hl = ssd_chunked_pallas(x, dt, A, Bh, Ch, h0, chunk=chunk,
+                               interpret=interpret)
+    return y[:, :s], hl
+
+
+ssd_decode = ssd_decode_ref

@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Shapes (G groups share B/C across H heads, H % G == 0):
+  x  (B, S, H, P)    head channels
+  dt (B, S, H)       softplus-ed timestep > 0
+  A  (H,)            negative per-head decay rate
+  Bm (B, S, G, N)    input projection onto state
+  Cm (B, S, G, N)    state readout
+  h0 (B, H, P, N)    initial state (or None)
+Returns y (B, S, H, P), h_final (B, H, P, N).
+
+`ssd_scan_ref` is the exact sequential recurrence (the oracle).
+`ssd_chunked` is the parallel chunked form (same math, O(S L) not O(S^2));
+it is the XLA production path and mirrors the Pallas kernel blocking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(Bm, h):
+    g = Bm.shape[2]
+    return jnp.repeat(Bm, h // g, axis=2)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, h0=None):
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    Bh = _expand_groups(Bm, h).astype(jnp.float32)   # (B,S,H,N)
+    Ch = _expand_groups(Cm, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32))         # (B,S,H) in (0,1)
+
+    def step(hprev, t):
+        xt, at, Bt, Ct, dtt = t
+        # h <- a h + (dt x) B^T   (outer product over (P, N))
+        hnew = (at[..., None, None] * hprev
+                + (dtt[..., None] * xt)[..., None] * Bt[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", hnew, Ct)
+        return hnew, y
+
+    hinit = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0),
+          jnp.moveaxis(dtf, 1, 0))
+    hlast, ys = jax.lax.scan(step, hinit, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, hlast.astype(jnp.float32)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, h0=None, *, chunk: int = 64):
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, L = s // chunk, chunk
+    Bh = _expand_groups(Bm, h).astype(jnp.float32)
+    Ch = _expand_groups(Cm, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32).reshape(b, nc, L, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, L, h)
+    Bc = Bh.reshape(b, nc, L, h, n)
+    Cc = Ch.reshape(b, nc, L, h, n)
+
+    la = jnp.cumsum(dtf * A.astype(jnp.float32), axis=2)  # (B,nc,L,H) <= 0
+    xb = xf * dtf[..., None]                               # dt-scaled input
+
+    # ---- intra-chunk (attention-like, causal).  Mask BEFORE exp: for s > t
+    # the segment sum is positive (exp overflows to inf) and inf*0 in the
+    # backward pass would poison grads.
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]      # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    Lmat = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc) * Lmat  # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores, xb)
+
+    # ---- per-chunk input state contribution
+    wS = jnp.exp(la[:, :, -1:, :] - la)                    # (B,nc,L,H)
+    chunk_state = jnp.einsum("bclhp,bclhn->bchpn", xb * wS[..., None], Bc)
+    chunk_decay = jnp.exp(la[:, :, -1])                    # (B,nc,H)
+
+    # ---- inter-chunk recurrence over chunk states
+    def step(hprev, t):
+        cs, cd = t
+        hnew = cd[..., None, None] * hprev + cs
+        return hnew, hprev                                  # emit state *before*
+
+    hinit = (jnp.zeros((b, h, p, n), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32))
+    hlast, hprevs = jax.lax.scan(
+        step, hinit, (jnp.moveaxis(chunk_state, 1, 0),
+                      jnp.moveaxis(chunk_decay, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                    # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: readout of the carried-in state
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Cc, hprevs) * jnp.exp(
+        la)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, p).astype(x.dtype)
+    return y, hlast.astype(jnp.float32)
+
+
+def ssd_decode_ref(xt, dtt, A, Bt, Ct, hprev):
+    """Single-token state update.  xt (B,H,P); dtt (B,H); Bt/Ct (B,G,N);
+    hprev (B,H,P,N) -> (y (B,H,P), hnew)."""
+    h = xt.shape[1]
+    g = Bt.shape[1]
+    Bh = jnp.repeat(Bt, h // g, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Ct, h // g, axis=1).astype(jnp.float32)
+    a = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32))
+    hnew = (a[..., None, None] * hprev.astype(jnp.float32)
+            + (dtt[..., None] * xt.astype(jnp.float32))[..., None]
+            * Bh[..., None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", hnew, Ch)
+    return y.astype(xt.dtype), hnew.astype(jnp.float32)

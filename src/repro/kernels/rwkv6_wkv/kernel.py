@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the chunked RWKV-6 WKV recurrence.
+
+One grid cell = one (batch, head, chunk); chunk dim minor-most/sequential,
+(K, V) state in VMEM scratch.  Unlike SSD (scalar decay per head), RWKV-6
+decays *per key channel*, so the intra-chunk pairwise term is a K-reduction
+of an elementwise product — VPU work over an (L, L, K) tile rather than an
+MXU matmul.  That bounds the chunk: L=64, K=64 → 64³·4 B = 1 MiB in VMEM.
+All exponentials are differences of cumulative log-decays (≤ 0), so the
+kernel is overflow-free in fp32 at any chunk length.
+
+Layout: r/k/v/logw (B, H, S, K); u (H, K); s0 (B, H, K, V).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                y_ref, sout_ref, state_ref, *, nchunks, chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)        # log decay <= 0
+    u = u_ref[0].astype(jnp.float32)             # (K,)
+
+    cum = jnp.cumsum(lw, axis=0)                 # (L, K)
+    cex = cum - lw                               # cum at t-1
+
+    # intra-chunk pairwise: A[t,s] = sum_k r[t]k[s]exp(cex[t]-cum[s]), s<t
+    diff = cex[:, None, :] - cum[None, :, :]     # (L, L, K) <= 0 for s<t
+    strict = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+              > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    pair = jnp.exp(jnp.where(strict[..., None], diff, -jnp.inf))
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * pair, axis=-1)   # (L, L)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y += jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True) * v  # u bonus
+
+    # inter-chunk: read carried-in state through exp(cum[t-1])
+    S = state_ref[...]                           # (K, V)
+    y += jax.lax.dot_general(r * jnp.exp(cex), S, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S <- exp(cum[-1]) S + (k ⊙ exp(cum[-1]-cum))^T v
+    k_dec = k * jnp.exp(cum[-1:] - cum)
+    state_ref[...] = (jnp.exp(cum[-1])[:, None] * S
+                      + jax.lax.dot_general(
+                          k_dec, v, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+    @pl.when(ic == nchunks - 1)
+    def _fin():
+        sout_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked_pallas(r, k, v, logw, u, s0, *, chunk: int = 64,
+                        interpret: bool = False):
+    """r/k/v/logw (B,H,S,K); u (H,K); s0 (B,H,K,V) ->
+    y (B,H,S,V), s_final (B,H,K,V)."""
+    b, h, s, kk = r.shape
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_wkv_kernel, nchunks=nc, chunk=chunk)
+    y, sout = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, kk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, kk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, kk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, kk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, kk), lambda b_, h_, c: (h_, 0)),
+            pl.BlockSpec((1, 1, kk, kk), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, kk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, kk, kk), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, kk), r.dtype),
+            jax.ShapeDtypeStruct((b, h, kk, kk), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return y, sout

@@ -1,0 +1,43 @@
+"""Public WKV6 op: layout handling, padding, impl dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import wkv6_chunked_pallas
+from .ref import wkv6_chunked, wkv6_decode_ref, wkv6_scan_ref
+
+
+def wkv6(r, k, v, logw, u, s0=None, *, chunk: int = 64,
+         impl: str = "chunked"):
+    """RWKV-6 WKV.  r/k/v/logw (B,S,H,K); u (H,K); s0 (B,H,K,V) or None ->
+    (o (B,S,H,V), s_final (B,H,K,V)).
+
+    impl: "scan" (exact oracle) | "chunked" (XLA path) | "pallas" |
+    "pallas_interpret".
+    """
+    b, s, h, kk = r.shape
+    if impl == "scan":
+        return wkv6_scan_ref(r, k, v, logw, u, s0)
+
+    pad = (-s) % chunk
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, widths)
+        k = jnp.pad(k, widths)          # k=0 padding: no state contribution
+        v = jnp.pad(v, widths)
+        logw = jnp.pad(logw, widths)    # logw=0 => w=1: state passes through
+
+    if impl == "chunked":
+        o, sl = wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+        return o[:, :s], sl
+
+    interpret = impl == "pallas_interpret"
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+    rt, kt, vt, lwt = (jnp.swapaxes(t, 1, 2) for t in (r, k, v, logw))
+    o, sl = wkv6_chunked_pallas(rt, kt, vt, lwt, u, s0, chunk=chunk,
+                                interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)[:, :s], sl
+
+
+wkv6_decode = wkv6_decode_ref

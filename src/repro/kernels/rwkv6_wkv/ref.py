@@ -1,0 +1,102 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head (K key channels, V value channels), with data-dependent decay:
+
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t          state (K, V)
+  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      current token gets bonus u
+
+Shapes: r, k, v (B, S, H, K) (K == V); logw (B, S, H, K) = log w_t <= 0
+(models pass -exp(w_proj), never materializing w to keep exp() composition
+stable); u (H, K); s0 (B, H, K, V).
+
+`wkv6_scan_ref` — exact sequential oracle.
+`wkv6_chunked`  — parallel chunked form; all exponentials are differences of
+cumulative log-decays within a chunk, so every term is <= 1 (no overflow; the
+GLA-style k/cumw split would overflow in fp32 at chunk 64).  Mirrors the
+Pallas kernel blocking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan_ref(r, k, v, logw, u, s0=None):
+    b, s, h, kk = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, t):
+        rt, kt, vt, wt = t                                  # (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,K,V)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[..., :, None] * kv)
+        Snew = wt[..., :, None] * S + kv
+        return Snew, o
+
+    Sinit = (jnp.zeros((b, h, kk, kk), jnp.float32) if s0 is None
+             else s0.astype(jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w))
+    Slast, os = jax.lax.scan(step, Sinit, xs)
+    return jnp.moveaxis(os, 0, 1).astype(r.dtype), Slast
+
+
+def wkv6_chunked(r, k, v, logw, u, s0=None, *, chunk: int = 64):
+    b, s, h, kk = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc, L = s // chunk, chunk
+    rf = r.astype(jnp.float32).reshape(b, nc, L, h, kk)
+    kf = k.astype(jnp.float32).reshape(b, nc, L, h, kk)
+    vf = v.astype(jnp.float32).reshape(b, nc, L, h, kk)
+    lw = logw.astype(jnp.float32).reshape(b, nc, L, h, kk)
+    uf = u.astype(jnp.float32)
+
+    cum = jnp.cumsum(lw, axis=2)                  # (B,nc,L,H,K) decreasing
+    cex = cum - lw                                # cum at t-1
+
+    # ---- intra-chunk: A[t,s] = sum_k r_t k_s exp(cum[t-1]-cum[s]), s < t.
+    # Mask BEFORE exp (s >= t gives positive exponents -> inf, and inf*0
+    # NaNs the backward pass).
+    diff = cex[:, :, :, None] - cum[:, :, None]   # (B,nc,Lt,Ls,H,K)
+    strict = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+    pair = jnp.exp(jnp.where(strict[None, None, :, :, None, None],
+                             diff, -jnp.inf))
+    A = jnp.einsum("bcthk,bcshk,bctshk->bctsh", rf, kf, pair)
+    diag = jnp.einsum("bcthk,hk,bcthk->bcth", rf, uf, kf)  # u bonus at t==s
+    y_intra = jnp.einsum("bctsh,bcshv->bcthv", A, vf)
+    y_intra += diag[..., None] * vf
+
+    # ---- inter-chunk: carried-in state read out through exp(cum[t-1])
+    r_dec = rf * jnp.exp(cex)                     # (B,nc,L,H,K)
+
+    # per-chunk state ingredients
+    w_end = jnp.exp(cum[:, :, -1:] - cum)         # (B,nc,L,H,K) <= 1
+    k_dec = kf * w_end
+    chunk_kv = jnp.einsum("bcshk,bcshv->bchkv", k_dec, vf)
+    chunk_decay = jnp.exp(cum[:, :, -1])          # (B,nc,H,K)
+
+    def step(S, t):
+        ckv, cd = t
+        return cd[..., None] * S + ckv, S         # emit state *before* chunk
+
+    Sinit = (jnp.zeros((b, h, kk, kk), jnp.float32) if s0 is None
+             else s0.astype(jnp.float32))
+    Slast, Sprevs = jax.lax.scan(
+        step, Sinit, (jnp.moveaxis(chunk_kv, 1, 0),
+                      jnp.moveaxis(chunk_decay, 1, 0)))
+    Sprevs = jnp.moveaxis(Sprevs, 0, 1)           # (B,nc,H,K,V)
+    y_inter = jnp.einsum("bcthk,bchkv->bcthv", r_dec, Sprevs)
+
+    y = (y_intra + y_inter).reshape(b, s, h, kk).astype(r.dtype)
+    return y, Slast
+
+
+def wkv6_decode_ref(rt, kt, vt, logwt, u, S):
+    """One token: rt/kt/vt/logwt (B,H,K); S (B,H,K,V) -> (o (B,H,V), Snew)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (rt, kt, vt))
+    w = jnp.exp(logwt.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", rf,
+                   S + u.astype(jnp.float32)[..., :, None] * kv)
+    Snew = w[..., :, None] * S + kv
+    return o.astype(rt.dtype), Snew

@@ -1,0 +1,1 @@
+# NOTE: deliberately does NOT import dryrun (it sets XLA_FLAGS at import).

@@ -1,0 +1,33 @@
+"""Production mesh definition.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis is
+    the slowest (DCI-connected) — batch shards over (pod, data)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) != n:
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(devices[:n]).reshape(shape), axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/smokes)."""
+    import numpy as np
+    devices = jax.devices()[: data * model]
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(data, model), ("data", "model"))

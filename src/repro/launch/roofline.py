@@ -1,0 +1,181 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s bf16)
+  memory     = HLO_bytes   / (chips × 819e9 B/s HBM)
+  collective = Σ per-op bytes-on-wire / (chips × links × 50e9 B/s ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Calibrated on this
+container: XLA analyzes the *partitioned per-device module*, so "flops" is
+per-device work (verified: sharded (64,128)@(128,256) on 8 devices reports
+global/8) — terms therefore do NOT divide by chips again; global totals are
+per-device × chips.  Collective bytes are NOT in cost_analysis: we parse
+the optimized HLO and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, weighted by the standard
+ring-algorithm wire factors with the op's actual group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# `%name = f32[64,128]{1,0} all-reduce(...)` or tuple results
+# `%name = (f32[..]{..}, f32[..]{..}) all-reduce-start(...)`
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}() ]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.ASCII)
+_SHAPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred)\[([0-9,]*)\]",
+    re.ASCII)
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,N]<=[...]  -> N participants per group
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    per_op: dict[str, float] = field(default_factory=dict)
+    count: dict[str, int] = field(default_factory=dict)
+    wire_bytes: float = 0.0
+
+    def add(self, op: str, b: float):
+        self.per_op[op] = self.per_op.get(op, 0.0) + b
+        self.count[op] = self.count.get(op, 0) + 1
+        self.wire_bytes += b
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-device bytes-on-wire, summed over collective ops in the module.
+
+    Ring factors (g = group size, S = per-device payload in the op result):
+      all-gather:  result is g×input -> wire = S_result × (g-1)/g
+      reduce-scatter: wire = S_input × (g-1)/g ≈ S_result × (g-1)
+      all-reduce:  wire = 2 × S × (g-1)/g
+      all-to-all:  wire = S × (g-1)/g
+      collective-permute: wire = S
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result, op = m.group(1), m.group(2)
+        size = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result))
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)
+        elif op == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif op == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = size
+        stats.add(op, wire)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                  # per-device (see module docstring)
+    hbm_bytes: float              # per-device
+    coll: CollectiveStats
+    chips: int
+    links_per_chip: int = 4       # v5e 2D torus: 4 ICI links
+
+    @property
+    def global_flops(self) -> float:
+        return self.flops * self.chips
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # wire bytes are already per-device (largest-group path)
+        return self.coll.wire_bytes / (self.links_per_chip * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound; the dominant term is the overlap bound."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops, "global_flops": self.global_flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_wire_bytes": self.coll.wire_bytes,
+            "collective_per_op": self.coll.per_op,
+            "collective_count": self.coll.count,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def from_compiled(compiled, mesh) -> Roofline:
+    n = mesh.devices.size
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text, n)
+    return Roofline(flops=flops, hbm_bytes=hbm, coll=coll, chips=n)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = batch
+    (one token per sequence)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,3 @@
+from .api import Model, build_model, input_specs
+from .steps import (cross_entropy, make_decode_step, make_loss_fn,
+                    make_prefill_step, make_train_step)

@@ -1,0 +1,226 @@
+"""Unified model API: one ``Model`` facade per architecture family.
+
+  model.init(key)                  -> (params, logical_specs)
+  model.forward(params, batch)     -> (logits (B,S,V), metrics)   [train]
+  model.prefill(params, batch)     -> (last logits (B,V), cache)
+  model.decode(params, cache, tok) -> (logits (B,V), cache')
+  model.init_cache(batch, cap)     -> family-specific cache pytree
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+entry-point input — the shape-only payloads the dry-run lowers against
+(no allocation), mirroring how Cppless deploys against abstract payloads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, hybrid, rwkv_model, transformer
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def _attn_impl(cfg: ModelConfig) -> str:
+    """pallas on the TPU runtime; the query-chunked XLA path elsewhere
+    (same math, flash-like memory; SPMD-partitionable, unlike interpret)."""
+    if cfg.attn_impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return cfg.attn_impl
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    impl = _attn_impl(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def forward(p, batch):
+            return transformer.lm_forward(
+                p, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), pos3d=batch.get("pos3d"),
+                attn_impl=impl)
+
+        def prefill(p, batch):
+            return transformer.lm_prefill(
+                p, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), pos3d=batch.get("pos3d"),
+                attn_impl=impl)
+
+        def decode(p, cache, tokens):
+            return transformer.lm_decode(p, cfg, cache, tokens,
+                                         attn_impl=impl)
+
+        return Model(cfg, lambda k: transformer.lm_init(k, cfg), forward,
+                     prefill, decode,
+                     lambda b, cap, **kw: transformer.lm_init_cache(
+                         cfg, b, cap, **kw))
+
+    if cfg.family == "hybrid":
+        def forward(p, batch):
+            return hybrid.hybrid_forward(p, cfg, batch["tokens"],
+                                         attn_impl=impl)
+
+        def prefill(p, batch):
+            logits, caches = hybrid.hybrid_forward(
+                p, cfg, batch["tokens"], attn_impl=impl,
+                collect_cache=True, last_only=True)
+            msts, (ck, cv) = caches
+            s_len = batch["tokens"].shape[1]
+
+            def _flat(a):   # (G, k, ...) -> (L, ...)
+                return a.reshape(a.shape[0] * a.shape[1], *a.shape[2:])
+
+            cache = {
+                "conv_x": _flat(msts["conv"][0]),
+                "conv_B": _flat(msts["conv"][1]),
+                "conv_C": _flat(msts["conv"][2]),
+                "ssd": _flat(msts["ssd"]), "k": ck, "v": cv,
+                "idx": jnp.int32(s_len),
+            }
+            return logits[:, -1], cache
+
+        def decode(p, cache, tokens):
+            return hybrid.hybrid_decode(p, cfg, cache, tokens,
+                                        attn_impl=impl)
+
+        return Model(cfg, lambda k: hybrid.hybrid_init(k, cfg), forward,
+                     prefill, decode,
+                     lambda b, cap, **kw: hybrid.hybrid_init_cache(
+                         cfg, b, cap, **kw))
+
+    if cfg.family == "ssm":
+        def forward(p, batch):
+            return rwkv_model.rwkv_forward(p, cfg, batch["tokens"])
+
+        def prefill(p, batch):
+            logits, cache = rwkv_model.rwkv_forward(
+                p, cfg, batch["tokens"], collect_cache=True, last_only=True)
+            return logits[:, -1], cache
+
+        def decode(p, cache, tokens):
+            return rwkv_model.rwkv_decode(p, cfg, cache, tokens)
+
+        return Model(cfg, lambda k: rwkv_model.rwkv_init(k, cfg), forward,
+                     prefill, decode,
+                     lambda b, cap, **kw: rwkv_model.rwkv_init_cache(
+                         cfg, b, cap, **kw))
+
+    if cfg.family == "encdec":
+        def forward(p, batch):
+            enc = encdec.encode(p, cfg, batch["frames"], attn_impl=impl)
+            logits, _ = encdec.decode_train(p, cfg, batch["tokens"], enc,
+                                            attn_impl=impl)
+            return logits, {}
+
+        def prefill(p, batch):
+            enc = encdec.encode(p, cfg, batch["frames"], attn_impl=impl)
+            logits, cache = encdec.decode_train(
+                p, cfg, batch["tokens"], enc, attn_impl=impl,
+                collect_cache=True, last_only=True)
+            return logits[:, -1], cache
+
+        def decode(p, cache, tokens):
+            return encdec.encdec_decode(p, cfg, cache, tokens,
+                                        attn_impl=impl)
+
+        return Model(cfg, lambda k: encdec.encdec_init(k, cfg), forward,
+                     prefill, decode,
+                     lambda b, cap, **kw: encdec.encdec_init_cache(
+                         cfg, b, cap, **kw))
+
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ------------------------------------------------------------ input specs --
+
+def cache_specs(cfg: ModelConfig):
+    """Logical-axis tree for the family's cache pytree (mirrors init_cache).
+
+    ``act_kv_seq`` defaults to replicated; re-mapping it to a mesh axis is
+    the flash-decode sequence-parallel hillclimb lever.
+    """
+    kv = ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.kv_quant == "int8":
+            sc = ("layers", "act_batch", "act_kv_seq", "act_kv_heads")
+            return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc,
+                    "idx": ()}
+        return {"k": kv, "v": kv, "idx": ()}
+    if cfg.family == "hybrid":
+        gkv = ("group", "act_batch", "act_kv_seq", "act_kv_heads", None)
+        return {"conv_x": ("layers", "act_batch", None, "act_inner"),
+                "conv_B": ("layers", "act_batch", None, None),
+                "conv_C": ("layers", "act_batch", None, None),
+                "ssd": ("layers", "act_batch", "act_inner", None, None),
+                "k": gkv, "v": gkv, "idx": ()}
+    if cfg.family == "ssm":
+        return {"wkv": ("layers", "act_batch", "act_inner", None, None),
+                "shift_att": ("layers", "act_batch", "act_embed"),
+                "shift_ffn": ("layers", "act_batch", "act_embed"),
+                "idx": ()}
+    if cfg.family == "encdec":
+        return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv, "idx": ()}
+    raise ValueError(cfg.family)
+
+
+def grow_cache(cfg: ModelConfig, cache, new_cap: int):
+    """Pad the seq-capacity dimension of a prefill cache so decode can
+    append: dynamic_update_slice clamps out-of-range starts, so writing
+    token S into a capacity-S cache silently corrupts the last slot."""
+    if cfg.family == "ssm":
+        return cache                                # O(1) state, no seq dim
+    out = dict(cache)
+    for k in ("k", "v", "k_scale", "v_scale"):      # NOT cross_k/v (static)
+        if k not in cache:
+            continue
+        a = cache[k]
+        pad = new_cap - a.shape[2]
+        if pad > 0:
+            widths = [(0, 0)] * a.ndim
+            widths[2] = (0, pad)
+            out[k] = jnp.pad(a, widths)
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract entry-point inputs for one (arch × shape) cell.
+
+    train/prefill -> {"batch": {...}};  decode -> {"cache": ..., "tokens"}.
+    Modality frontends are stubs: vlm/audio cells receive precomputed
+    patch/frame embeddings (embeds_input), per the assignment.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    cdt = cfg.compute_dtype
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((b, s, cfg.d_model), cdt)
+            batch["tokens"] = _sds((b, s), "int32")
+        elif cfg.embeds_input:
+            batch["embeds"] = _sds((b, s, cfg.d_model), cdt)
+            if cfg.mrope_sections:
+                batch["pos3d"] = _sds((3, b, s), "int32")
+        else:
+            batch["tokens"] = _sds((b, s), "int32")
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s), "int32")
+        return {"batch": batch}
+
+    # decode: one new token against a cache of capacity seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"cache": cache, "tokens": _sds((b, 1), "int32")}

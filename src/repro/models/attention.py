@@ -1,0 +1,140 @@
+"""GQA/MQA/MHA attention block with KV-cache, RoPE / M-RoPE, windows.
+
+Three execution modes, all from the same params:
+  * full  — training / prefill: flash kernel (TPU) or jnp oracle (CPU)
+  * prefill — full + returns the populated KV cache
+  * decode — one token against a cache (flash-decode kernel or oracle)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.decode_attention import decode_attention
+from ..kernels.flash_attention import attention
+from ..sharding import shard
+from .layers import apply_mrope, apply_rope, dense_init
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+              head_dim: int, dtype, *, bias: bool = False,
+              stack: tuple[int, ...] = ()):
+    ks = jax.random.split(key, 4)
+    pre = stack
+    ps = ("layers",) * len(stack)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (*pre, d_model, n_heads, head_dim),
+                                  (*ps, "embed", "heads", "head_dim"), dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], (*pre, d_model, n_kv_heads, head_dim),
+                                  (*ps, "embed", "kv_heads", "head_dim"), dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], (*pre, d_model, n_kv_heads, head_dim),
+                                  (*ps, "embed", "kv_heads", "head_dim"), dtype)
+    p["wo"], s["wo"] = dense_init(ks[3], (*pre, n_heads, head_dim, d_model),
+                                  (*ps, "heads", "head_dim", "embed"), dtype)
+    if bias:
+        for nm, hs, ax in (("bq", n_heads, "heads"),
+                           ("bk", n_kv_heads, "kv_heads"),
+                           ("bv", n_kv_heads, "kv_heads")):
+            p[nm] = jnp.zeros((*pre, hs, head_dim), dtype)
+            s[nm] = (*ps, ax, "head_dim")
+    return p, s
+
+
+def _project(p, x, positions, *, rope_theta, mrope_sections, pos3d):
+    """x (B,S,d) -> q (B,S,Hq,D), k/v (B,S,Hkv,D), rotary applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if rope_theta:
+        if mrope_sections:
+            q = apply_mrope(q, pos3d, rope_theta, mrope_sections)
+            k = apply_mrope(k, pos3d, rope_theta, mrope_sections)
+        else:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def attn_full(p, x, positions, *, causal=True, window=0, rope_theta=0.0,
+              mrope_sections=(), pos3d=None, impl="ref", kv_x=None,
+              return_kv=False) -> Any:
+    """Training / prefill attention.  kv_x: cross-attention source."""
+    if kv_x is None:
+        q, k, v = _project(p, x, positions, rope_theta=rope_theta,
+                           mrope_sections=mrope_sections, pos3d=pos3d)
+    else:  # cross-attn: q from x, k/v from encoder output (no rope)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        causal = False
+    o = attention(q, k, v, causal=causal, window=window, impl=impl)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = shard(out, "act_batch", "act_seq", "act_embed")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def quantize_kv(x):
+    """Per-(token, head) symmetric int8.  x (..., D) -> (q int8, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_decode(p, x, cache_k, cache_v, idx, *, window=0, rope_theta=0.0,
+                mrope_sections=(), pos3d=None, impl="ref",
+                update_cache=True, cache_ks=None, cache_vs=None):
+    """One-token attention.  x (B,1,d); cache_k/v (B,Smax,Hkv,D); idx scalar
+    position of the new token.  With int8-quantized caches, cache_ks/vs are
+    the (B,Smax,Hkv) scale planes (updated and returned alongside).
+    Returns (out, cache_k, cache_v[, cache_ks, cache_vs])."""
+    b = x.shape[0]
+    quant = cache_ks is not None
+    positions = jnp.full((b, 1), idx, jnp.int32)
+    q, k, v = _project(p, x, positions, rope_theta=rope_theta,
+                       mrope_sections=mrope_sections, pos3d=pos3d)
+    if update_cache:
+        if quant:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            cache_k = jax.lax.dynamic_update_slice(cache_k, kq,
+                                                   (0, idx, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(cache_v, vq,
+                                                   (0, idx, 0, 0))
+            cache_ks = jax.lax.dynamic_update_slice(cache_ks, ks,
+                                                    (0, idx, 0))
+            cache_vs = jax.lax.dynamic_update_slice(cache_vs, vs,
+                                                    (0, idx, 0))
+        else:
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, k.astype(cache_k.dtype), (0, idx, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, v.astype(cache_v.dtype), (0, idx, 0, 0))
+    kv_len = jnp.full((b,), idx + 1, jnp.int32)
+    if quant:
+        kd = dequantize_kv(cache_k, cache_ks, q.dtype)
+        vd = dequantize_kv(cache_v, cache_vs, q.dtype)
+    else:
+        kd, vd = cache_k, cache_v
+    o = decode_attention(q[:, 0], kd, vd, kv_len, window=window, impl=impl)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    if quant:
+        return out, cache_k, cache_v, cache_ks, cache_vs
+    return out, cache_k, cache_v

@@ -1,0 +1,189 @@
+"""Whisper-style encoder–decoder backbone.
+
+The conv/mel frontend is a stub per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, d).  Sinusoidal positions stand in
+for whisper's learned decoder positions (noted in DESIGN.md) so the decoder
+honors arbitrary stress lengths.  Pre-LN layers with biased QKV, GELU MLP,
+tied unembedding.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.decode_attention import decode_attention
+from ..sharding import shard
+from .attention import attn_decode, attn_full, attn_init
+from .layers import embed_apply, embed_init, layer_norm, mlp_apply, mlp_init
+from .stacking import scan_layers
+
+
+def _sinusoid(seq_len: int, d: int, dtype, offset: int | jnp.ndarray = 0):
+    pos = jnp.arange(seq_len) + offset                        # (S,)
+    inv = 1.0 / (10000.0 ** (np.arange(0, d, 2) / d))
+    ang = pos[:, None].astype(jnp.float32) * jnp.asarray(inv, jnp.float32)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _ln_init(L, d, dt):
+    return ({"w": jnp.ones((L, d) if L else (d,), dt),
+             "b": jnp.zeros((L, d) if L else (d,), dt)},
+            {"w": (("layers", "embed") if L else ("embed",)),
+             "b": (("layers", "embed") if L else ("embed",))})
+
+
+def encdec_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 12)
+    dt = jnp.dtype(cfg.param_dtype)
+    Le, Ld, d = cfg.encoder_layers, cfg.decoder_layers, cfg.d_model
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, d, dt)
+
+    ep, es = {}, {}
+    ep["ln1"], es["ln1"] = _ln_init(Le, d, dt)
+    ep["attn"], es["attn"] = attn_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim, dt, bias=True,
+                                       stack=(Le,))
+    ep["ln2"], es["ln2"] = _ln_init(Le, d, dt)
+    ep["mlp"], es["mlp"] = mlp_init(ks[2], d, cfg.d_ff, "gelu", dt,
+                                    stack=(Le,))
+    p["encoder"], s["encoder"] = ep, es
+    p["enc_norm"], s["enc_norm"] = _ln_init(0, d, dt)
+
+    dp, ds = {}, {}
+    dp["ln1"], ds["ln1"] = _ln_init(Ld, d, dt)
+    dp["attn"], ds["attn"] = attn_init(ks[3], d, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim, dt, bias=True,
+                                       stack=(Ld,))
+    dp["ln_x"], ds["ln_x"] = _ln_init(Ld, d, dt)
+    dp["cross"], ds["cross"] = attn_init(ks[4], d, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim, dt,
+                                         bias=True, stack=(Ld,))
+    dp["ln2"], ds["ln2"] = _ln_init(Ld, d, dt)
+    dp["mlp"], ds["mlp"] = mlp_init(ks[5], d, cfg.d_ff, "gelu", dt,
+                                    stack=(Ld,))
+    p["decoder"], s["decoder"] = dp, ds
+    p["dec_norm"], s["dec_norm"] = _ln_init(0, d, dt)
+    return p, s
+
+
+def _ln(x, lnp, eps):
+    return layer_norm(x, lnp["w"], lnp["b"], eps)
+
+
+def encode(p, cfg: ModelConfig, frames, attn_impl: str = "ref"):
+    """frames (B, S_enc, d) precomputed embeddings -> (B, S_enc, d)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s_len, _ = frames.shape
+    x = frames.astype(dt) + _sinusoid(s_len, cfg.d_model, dt)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
+                                 (b, s_len))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.rms_eps)
+        h = attn_full(lp["attn"], h, positions, causal=False, rope_theta=0.0,
+                      impl=attn_impl)
+        x = x + h
+        h = _ln(x, lp["ln2"], cfg.rms_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return shard(x, "act_batch", "act_seq", "act_embed"), None
+
+    x, _ = scan_layers(body, x, p["encoder"], use_scan=cfg.scan_layers)
+    return _ln(x, p["enc_norm"], cfg.rms_eps)
+
+
+def decode_train(p, cfg: ModelConfig, tokens, enc_out,
+                 attn_impl: str = "ref", collect_cache: bool = False,
+                 last_only: bool = False):
+    """Teacher-forcing decoder.  Returns logits (+ caches when prefilling)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s_len = tokens.shape
+    x = embed_apply(p["embed"], tokens).astype(dt)
+    x = x + _sinusoid(s_len, cfg.d_model, dt)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
+                                 (b, s_len))
+    cdt = jnp.dtype(cfg.param_dtype)
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.rms_eps)
+        h, (sk, sv) = attn_full(lp["attn"], h, positions, causal=True,
+                                rope_theta=0.0, impl=attn_impl,
+                                return_kv=True)
+        x = x + h
+        h = _ln(x, lp["ln_x"], cfg.rms_eps)
+        h, (xk, xv) = attn_full(lp["cross"], h, positions, kv_x=enc_out,
+                                impl=attn_impl, return_kv=True)
+        x = x + h
+        h = _ln(x, lp["ln2"], cfg.rms_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        ys = ((sk.astype(cdt), sv.astype(cdt)),
+              (xk.astype(cdt), xv.astype(cdt))) if collect_cache else 0
+        return x, ys
+
+    x, caches = scan_layers(body, x, p["decoder"],
+                            use_scan=cfg.scan_layers)
+    if last_only:
+        x = x[:, -1:]
+    x = _ln(x, p["dec_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,vd->...v", x, p["embed"])
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    logits = logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+    if collect_cache:
+        (sk, sv), (xk, xv) = caches
+        cache = {"k": sk, "v": sv, "cross_k": xk, "cross_v": xv,
+                 "idx": jnp.int32(s_len)}
+        return logits, cache
+    return logits, {}
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, cap: int,
+                      enc_len: int = 1500, filled: int | None = None):
+    cdt = jnp.dtype(cfg.param_dtype)
+    Ld = cfg.decoder_layers
+    shp = (Ld, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    xshp = (Ld, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    idx = cap - 1 if filled is None else filled
+    return {"k": jnp.zeros(shp, cdt), "v": jnp.zeros(shp, cdt),
+            "cross_k": jnp.zeros(xshp, cdt), "cross_v": jnp.zeros(xshp, cdt),
+            "idx": jnp.int32(idx)}
+
+
+def encdec_decode(p, cfg: ModelConfig, cache, tokens,
+                  attn_impl: str = "ref"):
+    """One decoder step against self + cross caches."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b = tokens.shape[0]
+    idx = cache["idx"]
+    x = embed_apply(p["embed"], tokens).astype(dt)
+    x = x + _sinusoid(1, cfg.d_model, dt, offset=idx)
+    enc_len = cache["cross_k"].shape[2]
+
+    def body(x, xs):
+        lp, sk, sv, xk, xv = xs
+        h = _ln(x, lp["ln1"], cfg.rms_eps)
+        h, sk, sv = attn_decode(lp["attn"], h, sk, sv, idx, rope_theta=0.0,
+                                impl=attn_impl)
+        x = x + h
+        h = _ln(x, lp["ln_x"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"])
+        q = q + lp["cross"]["bq"]
+        kv_len = jnp.full((b,), enc_len, jnp.int32)
+        o = decode_attention(q[:, 0], xk, xv, kv_len, impl=attn_impl)
+        x = x + jnp.einsum("bhk,hkd->bd", o, lp["cross"]["wo"])[:, None]
+        h = _ln(x, lp["ln2"], cfg.rms_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, (sk, sv)
+
+    x, (sk, sv) = scan_layers(
+        body, x, (p["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]),
+        use_scan=cfg.scan_layers)
+    x = _ln(x[:, -1], p["dec_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,vd->...v", x, p["embed"])
+    logits = logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+    return logits, {**cache, "k": sk, "v": sv, "idx": idx + 1}

@@ -1,0 +1,262 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with ONE shared attention
+block applied every k blocks, modulated per application by LoRA deltas.
+
+The shared block consumes concat(x, x0) (current hidden + original
+embedding, zamba2's re-injection trick) and projects back to d_model.
+Weight sharing means the attention params are closed over by the group-scan
+body (one HBM copy); only the per-group LoRA (9 × rank·d) is scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.decode_attention import decode_attention
+from ..kernels.flash_attention import attention
+from ..sharding import shard
+from .layers import apply_rope, dense_init, embed_apply, embed_init, \
+    mlp_apply, mlp_init, rms_norm
+from .mamba2 import mamba2_apply, mamba2_decode, mamba2_init
+from .stacking import scan_layers
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def hybrid_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.param_dtype)
+    L, G = cfg.n_layers, _n_groups(cfg)
+    d, r = cfg.d_model, cfg.shared_attn_lora_rank
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, d, dt)
+
+    mp, ms = mamba2_init(ks[1], d, expand=cfg.ssm.expand,
+                         state_dim=cfg.ssm.state_dim,
+                         head_dim=cfg.ssm.head_dim,
+                         conv_width=cfg.ssm.conv_width, dtype=dt, stack=(L,))
+    mln = jnp.zeros((L, d), dt)
+    p["mamba"], s["mamba"] = {"ln": mln, **mp}, \
+        {"ln": ("layers", "embed"), **ms}
+
+    # shared attention block on concat(x, x0) -> d
+    ap, asx = {}, {}
+    ap["ln"] = jnp.zeros((2 * d,), dt)
+    asx["ln"] = ("embed",)
+    ap["wq"], asx["wq"] = dense_init(
+        ks[2], (2 * d, cfg.n_heads, cfg.head_dim),
+        ("embed", "heads", "head_dim"), dt)
+    ap["wk"], asx["wk"] = dense_init(
+        ks[3], (2 * d, cfg.n_kv_heads, cfg.head_dim),
+        ("embed", "kv_heads", "head_dim"), dt)
+    ap["wv"], asx["wv"] = dense_init(
+        ks[4], (2 * d, cfg.n_kv_heads, cfg.head_dim),
+        ("embed", "kv_heads", "head_dim"), dt)
+    ap["wo"], asx["wo"] = dense_init(
+        ks[5], (cfg.n_heads, cfg.head_dim, d),
+        ("heads", "head_dim", "embed"), dt)
+    ap["ln2"] = jnp.zeros((2 * d,), dt)
+    asx["ln2"] = ("embed",)
+    mlp_p, mlp_s = mlp_init(ks[6], 2 * d, cfg.d_ff, cfg.act, dt)
+    # project the GLU output back to d (input was 2d)
+    mlp_p["wo"], mlp_s["wo"] = dense_init(
+        ks[7], (cfg.d_ff, d), ("mlp", "embed"), dt)
+    ap["mlp"], asx["mlp"] = mlp_p, mlp_s
+    p["shared"], s["shared"] = ap, asx
+
+    # per-application LoRA deltas on wq/wo
+    lora_p, lora_s = {}, {}
+    lora_p["qa"], lora_s["qa"] = dense_init(
+        ks[8], (G, 2 * d, r), ("group", "embed", "lora"), dt)
+    lora_p["qb"] = jnp.zeros((G, r, cfg.n_heads * cfg.head_dim), dt)
+    lora_s["qb"] = ("group", "lora", None)
+    lora_p["oa"], lora_s["oa"] = dense_init(
+        ks[9], (G, cfg.n_heads * cfg.head_dim, r),
+        ("group", None, "lora"), dt)
+    lora_p["ob"] = jnp.zeros((G, r, d), dt)
+    lora_s["ob"] = ("group", "lora", None)
+    p["lora"], s["lora"] = lora_p, lora_s
+
+    p["final_norm"] = jnp.zeros((d,), dt)
+    s["final_norm"] = ("embed",)
+    p["unembed"], s["unembed"] = embed_init(ks[0], cfg.vocab_size, d, dt)
+    return p, s
+
+
+def _shared_qkv(ap, lora, u, positions, cfg, pos_offset=None):
+    """Project concat-input u (B,S,2d) -> q/k/v with per-group LoRA on q."""
+    q = jnp.einsum("bsd,dhk->bshk", u, ap["wq"])
+    dq = jnp.einsum("bsd,dr->bsr", u, lora["qa"])
+    dq = jnp.einsum("bsr,ra->bsa", dq, lora["qb"])
+    q = q + dq.reshape(q.shape)
+    k = jnp.einsum("bsd,dhk->bshk", u, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", u, ap["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _shared_out(ap, lora, o):
+    """o (B,S,H,D) -> (B,S,d) with LoRA on the output proj."""
+    b, s_len = o.shape[:2]
+    out = jnp.einsum("bshk,hkd->bsd", o, ap["wo"])
+    flat = o.reshape(b, s_len, -1)
+    do = jnp.einsum("bsa,ar->bsr", flat, lora["oa"])
+    out = out + jnp.einsum("bsr,rd->bsd", do, lora["ob"])
+    return out
+
+
+def _shared_block(ap, lora, x, x0, positions, cfg, attn_impl,
+                  return_kv=False):
+    u = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(u, ap["ln"], cfg.rms_eps)
+    q, k, v = _shared_qkv(ap, lora, h, positions, cfg)
+    o = attention(q, k, v, causal=True, window=cfg.window, impl=attn_impl)
+    x = x + _shared_out(ap, lora, o)
+    h = rms_norm(jnp.concatenate([x, x0], axis=-1), ap["ln2"], cfg.rms_eps)
+    x = x + mlp_apply(ap["mlp"], h, cfg.act)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    if return_kv:
+        return x, (k, v)
+    return x
+
+
+def hybrid_forward(p, cfg: ModelConfig, tokens, attn_impl: str = "ref",
+                   ssm_impl: str = "chunked", collect_cache: bool = False,
+                   last_only: bool = False):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_apply(p["embed"], tokens).astype(dt)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    x0 = x
+    b, s_len = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
+                                 (b, s_len))
+    G, k_every = _n_groups(cfg), cfg.shared_attn_every
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, k_every, *a.shape[1:]), p["mamba"])
+
+    def group_body(x, xs):
+        mparams, lora = xs
+
+        def mamba_body(x, lp):
+            h = rms_norm(x, lp["ln"], cfg.rms_eps)
+            h, st = mamba2_apply(
+                {k: v for k, v in lp.items() if k != "ln"}, h,
+                head_dim=cfg.ssm.head_dim, chunk=cfg.ssm.chunk,
+                impl=ssm_impl, rms_eps=cfg.rms_eps)
+            return x + h, (st if collect_cache else 0)
+
+        x, msts = scan_layers(mamba_body, x, mparams,
+                              use_scan=cfg.scan_layers)
+        if collect_cache:
+            x, (ck, cv) = _shared_block(p["shared"], lora, x, x0, positions,
+                                        cfg, attn_impl, return_kv=True)
+            cdt = jnp.dtype(cfg.param_dtype)
+            return x, (msts, (ck.astype(cdt), cv.astype(cdt)))
+        x = _shared_block(p["shared"], lora, x, x0, positions, cfg,
+                          attn_impl)
+        return x, 0
+
+    body = group_body
+    if cfg.remat != "none" and not collect_cache:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots_saveable" else None)
+        body = jax.checkpoint(group_body, policy=policy)
+    x, caches = scan_layers(body, x, (grouped, p["lora"]),
+                             use_scan=cfg.scan_layers)
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,vd->...v", x, p["unembed"])
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    logits = logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+    if collect_cache:
+        return logits, caches
+    return logits, {}
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, cap: int,
+                      filled: int | None = None):
+    cdt = jnp.dtype(cfg.param_dtype)
+    L, G = cfg.n_layers, _n_groups(cfg)
+    d_in = cfg.ssm.expand * cfg.d_model
+    h = d_in // cfg.ssm.head_dim
+    w1 = cfg.ssm.conv_width - 1
+    gn = cfg.ssm.state_dim
+    idx = cap - 1 if filled is None else filled
+    return {
+        "conv_x": jnp.zeros((L, batch, w1, d_in), cdt),
+        "conv_B": jnp.zeros((L, batch, w1, gn), cdt),
+        "conv_C": jnp.zeros((L, batch, w1, gn), cdt),
+        "ssd": jnp.zeros((L, batch, h, cfg.ssm.head_dim, cfg.ssm.state_dim),
+                         jnp.float32),
+        "k": jnp.zeros((G, batch, cap, cfg.n_kv_heads, cfg.head_dim), cdt),
+        "v": jnp.zeros((G, batch, cap, cfg.n_kv_heads, cfg.head_dim), cdt),
+        "idx": jnp.int32(idx),
+    }
+
+
+def hybrid_decode(p, cfg: ModelConfig, cache, tokens,
+                  attn_impl: str = "ref"):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_apply(p["embed"], tokens).astype(dt)
+    x0 = x
+    b = x.shape[0]
+    idx = cache["idx"]
+    G, k_every = _n_groups(cfg), cfg.shared_attn_every
+    grouped = jax.tree.map(
+        lambda a: a.reshape(G, k_every, *a.shape[1:]), p["mamba"])
+    gcache = {k: cache[k].reshape(G, k_every, *cache[k].shape[1:])
+              for k in ("conv_x", "conv_B", "conv_C", "ssd")}
+    positions = jnp.full((b, 1), idx, jnp.int32)
+
+    def group_body(x, xs):
+        mparams, lora, mc, ck, cv = xs
+
+        def mamba_body(x, xs2):
+            lp, cx, cb, cc, st = xs2
+            h = rms_norm(x, lp["ln"], cfg.rms_eps)
+            h, new = mamba2_decode(
+                {k: v for k, v in lp.items() if k != "ln"}, h,
+                {"conv": (cx, cb, cc), "ssd": st},
+                head_dim=cfg.ssm.head_dim, rms_eps=cfg.rms_eps)
+            return x + h, (*new["conv"], new["ssd"])
+
+        x, mnew = scan_layers(
+            mamba_body, x,
+            (mparams, mc["conv_x"], mc["conv_B"], mc["conv_C"], mc["ssd"]),
+            use_scan=cfg.scan_layers)
+
+        u = jnp.concatenate([x, x0], axis=-1)
+        h = rms_norm(u, p["shared"]["ln"], cfg.rms_eps)
+        q, k, v = _shared_qkv(p["shared"], lora, h, positions, cfg)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, idx, 0, 0))
+        kv_len = jnp.full((b,), idx + 1, jnp.int32)
+        o = decode_attention(q[:, 0], ck, cv, kv_len, window=cfg.window,
+                             impl=attn_impl)[:, None]
+        x = x + _shared_out(p["shared"], lora, o)
+        h2 = rms_norm(jnp.concatenate([x, x0], axis=-1),
+                      p["shared"]["ln2"], cfg.rms_eps)
+        x = x + mlp_apply(p["shared"]["mlp"], h2, cfg.act)
+        return x, (mnew, ck, cv)
+
+    x, (mnew, ck, cv) = scan_layers(
+        group_body, x,
+        (grouped, p["lora"], gcache, cache["k"], cache["v"]),
+        use_scan=cfg.scan_layers)
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,vd->...v", x[:, -1], p["unembed"])
+    logits = logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+    newc = {
+        "conv_x": mnew[0].reshape(cache["conv_x"].shape),
+        "conv_B": mnew[1].reshape(cache["conv_B"].shape),
+        "conv_C": mnew[2].reshape(cache["conv_C"].shape),
+        "ssd": mnew[3].reshape(cache["ssd"].shape),
+        "k": ck, "v": cv, "idx": idx + 1,
+    }
+    return logits, newc

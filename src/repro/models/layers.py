@@ -1,0 +1,148 @@
+"""Shared neural layers: norms, rotary embeddings (incl. M-RoPE), GLU MLPs.
+
+Everything is functional: ``*_init`` builds (params, logical_specs) pairs —
+the spec tree mirrors the param tree with tuples of logical axis names
+consumed by ``repro.sharding.rules``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+Specs = Any
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, shape, specs, dtype, scale: float | None = None):
+    """Truncated-normal init with 1/sqrt(fan_in) scale; returns (p, spec)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    p = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+         * scale).astype(dtype)
+    return p, specs
+
+
+def zeros_init(shape, specs, dtype):
+    return jnp.zeros(shape, dtype), specs
+
+
+def ones_init(shape, specs, dtype):
+    return jnp.ones(shape, dtype), specs
+
+
+# ----------------------------------------------------------------- norms ----
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)     # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, theta: float, sections: tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL): positions (3, ..., S) for (t, h, w);
+    frequency lanes are partitioned among the three position streams."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)      # (half,)
+    # choose which position stream drives each frequency lane
+    sel = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos = jnp.stack([positions[i] for i in range(3)], axis=0)   # (3, ..., S)
+    pos_per_lane = jnp.take(pos, jnp.asarray(sel), axis=0)      # (half, ..., S)
+    pos_per_lane = jnp.moveaxis(pos_per_lane, 0, -1)            # (..., S, half)
+    ang = pos_per_lane.astype(jnp.float32) * freqs              # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP ----
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype,
+             stack: tuple[int, ...] = ()) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 3)
+    pre = stack
+    pre_spec = ("layers",) * len(stack)
+    if act in ("swiglu", "geglu"):
+        wi, wi_s = dense_init(ks[0], (*pre, d_model, d_ff),
+                              (*pre_spec, "embed", "mlp"), dtype)
+        wg, wg_s = dense_init(ks[1], (*pre, d_model, d_ff),
+                              (*pre_spec, "embed", "mlp"), dtype)
+        wo, wo_s = dense_init(ks[2], (*pre, d_ff, d_model),
+                              (*pre_spec, "mlp", "embed"), dtype)
+        return ({"wi": wi, "wg": wg, "wo": wo},
+                {"wi": wi_s, "wg": wg_s, "wo": wo_s})
+    wi, wi_s = dense_init(ks[0], (*pre, d_model, d_ff),
+                          (*pre_spec, "embed", "mlp"), dtype)
+    wo, wo_s = dense_init(ks[2], (*pre, d_ff, d_model),
+                          (*pre_spec, "mlp", "embed"), dtype)
+    return {"wi": wi, "wo": wo}, {"wi": wi_s, "wo": wo_s}
+
+
+def mlp_apply(params, x, act: str):
+    if act in ("swiglu", "geglu"):
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        g = jnp.einsum("...d,df->...f", x, params["wg"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = h * g
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["wi"]))
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ------------------------------------------------------------- embedding ----
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    p, s = dense_init(key, (vocab, d_model), ("vocab", "embed"), dtype,
+                      scale=1.0)
+    return p, s
+
+
+def embed_apply(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_apply(table_or_w, x, fp32: bool = True):
+    """Logits projection; table is (vocab, d) (tied) or (d, vocab)."""
+    w = table_or_w
+    if w.shape[0] < w.shape[1]:      # (d, vocab)
+        out = jnp.einsum("...d,dv->...v", x, w)
+    else:                            # (vocab, d) tied table
+        out = jnp.einsum("...d,vd->...v", x, w)
+    return out.astype(jnp.float32) if fp32 else out

@@ -1,0 +1,141 @@
+"""Mamba2 block (zamba2's SSM component): in-proj, causal depthwise conv,
+SSD scan (kernels/mamba2_ssd), gated RMSNorm, out-proj.
+
+Conv is expressed as W static shifts (W=4) — cheap, and each of x/B/C gets
+its own conv so the TP-sharded d_inner stream never concatenates with the
+replicated B/C streams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mamba2_ssd import ssd, ssd_decode
+from ..sharding import shard
+from .layers import dense_init, rms_norm
+
+
+def mamba2_init(key, d_model: int, *, expand: int, state_dim: int,
+                head_dim: int, conv_width: int, dtype,
+                stack: tuple[int, ...] = ()):
+    d_in = expand * d_model
+    n_heads = d_in // head_dim
+    g = 1                                    # B/C groups
+    ks = jax.random.split(key, 8)
+    pre, ps = stack, ("layers",) * len(stack)
+    p, s = {}, {}
+    p["wz"], s["wz"] = dense_init(ks[0], (*pre, d_model, d_in),
+                                  (*ps, "embed", "inner"), dtype)
+    p["wx"], s["wx"] = dense_init(ks[1], (*pre, d_model, d_in),
+                                  (*ps, "embed", "inner"), dtype)
+    p["wB"], s["wB"] = dense_init(ks[2], (*pre, d_model, g, state_dim),
+                                  (*ps, "embed", None, None), dtype)
+    p["wC"], s["wC"] = dense_init(ks[3], (*pre, d_model, g, state_dim),
+                                  (*ps, "embed", None, None), dtype)
+    p["wdt"], s["wdt"] = dense_init(ks[4], (*pre, d_model, n_heads),
+                                    (*ps, "embed", "inner"), dtype)
+    p["dt_bias"] = jnp.zeros((*pre, n_heads), dtype)
+    s["dt_bias"] = (*ps, "inner")
+    # A_log in [log 0.5, log 8] (mamba2 default init range)
+    p["A_log"] = jnp.log(jnp.linspace(0.5, 8.0, n_heads, dtype=jnp.float32)
+                         ).astype(dtype) * jnp.ones((*pre, n_heads), dtype)
+    s["A_log"] = (*ps, "inner")
+    p["D"] = jnp.ones((*pre, n_heads), dtype)
+    s["D"] = (*ps, "inner")
+    for nm, ch in (("conv_x", d_in), ("conv_B", g * state_dim),
+                   ("conv_C", g * state_dim)):
+        p[nm], s[nm] = dense_init(
+            ks[5], (*pre, conv_width, ch),
+            (*ps, "conv", "inner" if nm == "conv_x" else None), dtype,
+            scale=1.0 / conv_width)
+    p["norm"] = jnp.zeros((*pre, d_in), dtype)
+    s["norm"] = (*ps, "inner")
+    p["wo"], s["wo"] = dense_init(ks[6], (*pre, d_in, d_model),
+                                  (*ps, "inner", "embed"), dtype)
+    return p, s
+
+
+def _conv_shift(w, x):
+    """Causal depthwise conv as static shifts.  w (W, C); x (B, S, C)."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _conv_step(w, state, xt):
+    """state (B, W-1, C); xt (B, 1, C) -> (yt (B, 1, C), new state)."""
+    full = jnp.concatenate([state, xt], axis=1)           # (B, W, C)
+    yt = jnp.einsum("bwc,wc->bc", full, w)[:, None]
+    return yt, full[:, 1:]
+
+
+def _inner(p, x, *, head_dim):
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])
+    xc = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    Bc = jnp.einsum("bsd,dgn->bsgn", x, p["wB"])
+    Cc = jnp.einsum("bsd,dgn->bsgn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    return z, xc, Bc, Cc, dt
+
+
+def mamba2_apply(p, x, *, head_dim: int, chunk: int = 64, impl: str = "chunked",
+                 rms_eps: float = 1e-6):
+    """Train/prefill path.  x (B,S,d) -> (y, final_state (conv+ssd))."""
+    b, s_len, d = x.shape
+    z, xc, Bc, Cc, dt = _inner(p, x, head_dim=head_dim)
+    g, n = Bc.shape[-2:]
+
+    conv_in = (xc, Bc.reshape(b, s_len, g * n), Cc.reshape(b, s_len, g * n))
+    xc = jax.nn.silu(_conv_shift(p["conv_x"], conv_in[0]))
+    Bc = jax.nn.silu(_conv_shift(p["conv_B"], conv_in[1])).reshape(
+        b, s_len, g, n)
+    Cc = jax.nn.silu(_conv_shift(p["conv_C"], conv_in[2])).reshape(
+        b, s_len, g, n)
+
+    h = xc.shape[-1] // head_dim
+    xh = xc.reshape(b, s_len, h, head_dim)
+    xh = shard(xh, "act_batch", "act_seq", "act_inner", None)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, ssd_state = ssd(xh, dt, A, Bc, Cc, chunk=chunk, impl=impl)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s_len, h * head_dim)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    conv_tail = tuple(
+        jnp.pad(ci, ((0, 0), (max(0, w.shape[0] - 1 - ci.shape[1]), 0),
+                     (0, 0)))[:, -(w.shape[0] - 1):]
+        for ci, w in zip(conv_in, (p["conv_x"], p["conv_B"], p["conv_C"])))
+    return shard(out, "act_batch", "act_seq", "act_embed"), \
+        {"conv": conv_tail, "ssd": ssd_state}
+
+
+def mamba2_decode(p, x, state, *, head_dim: int, rms_eps: float = 1e-6):
+    """One token.  x (B,1,d); state {conv: (cx,cB,cC), ssd: (B,H,P,N)}."""
+    b = x.shape[0]
+    z, xc, Bc, Cc, dt = _inner(p, x, head_dim=head_dim)
+    g, n = Bc.shape[-2:]
+
+    cx, cB, cC = state["conv"]
+    xc, cx = _conv_step(p["conv_x"], cx, xc)
+    Bc2, cB = _conv_step(p["conv_B"], cB, Bc.reshape(b, 1, g * n))
+    Cc2, cC = _conv_step(p["conv_C"], cC, Cc.reshape(b, 1, g * n))
+    xc = jax.nn.silu(xc)
+    Bc = jax.nn.silu(Bc2).reshape(b, g, n)
+    Cc = jax.nn.silu(Cc2).reshape(b, g, n)
+
+    h = xc.shape[-1] // head_dim
+    xh = xc.reshape(b, h, head_dim)
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]          # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, ssd_state = ssd_decode(xh, dt, A, Bc, Cc, state["ssd"])
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, h * head_dim)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    return out, {"conv": (cx, cB, cC), "ssd": ssd_state}

@@ -1,0 +1,147 @@
+"""RWKV-6 (Finch) block: data-dependent-decay time-mix + channel-mix.
+
+Time-mix uses the ddlerp token-shift (5-way LoRA-modulated interpolation
+with the previous token), a LoRA-projected per-channel decay
+w = exp(-exp(w0 + lora(x))), and the WKV recurrence from kernels/rwkv6_wkv.
+The model passes log-w = -exp(...) straight to the kernel — w itself is
+never materialized, which keeps the exp() composition stable in bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.rwkv6_wkv import wkv6, wkv6_decode
+from ..sharding import shard
+from .layers import dense_init
+
+MIX_LORA = 32
+DECAY_LORA = 64
+
+
+def rwkv6_init(key, d_model: int, d_ff: int, *, n_heads: int, head_dim: int,
+               dtype, stack: tuple[int, ...] = ()):
+    att = n_heads * head_dim
+    ks = jax.random.split(key, 16)
+    pre, ps = stack, ("layers",) * len(stack)
+    p, s = {}, {}
+
+    # ---- time-mix
+    for i, nm in enumerate(("wr", "wk", "wv", "wg")):
+        p[nm], s[nm] = dense_init(ks[i], (*pre, d_model, att),
+                                  (*ps, "embed", "inner"), dtype)
+    p["wo"], s["wo"] = dense_init(ks[4], (*pre, att, d_model),
+                                  (*ps, "inner", "embed"), dtype)
+    p["mu_x"] = jnp.full((*pre, d_model), 0.5, dtype)
+    s["mu_x"] = (*ps, "embed")
+    p["mu_rkvwg"] = jnp.full((*pre, 5, d_model), 0.5, dtype)
+    s["mu_rkvwg"] = (*ps, None, "embed")
+    p["mix_a"], s["mix_a"] = dense_init(
+        ks[5], (*pre, d_model, 5 * MIX_LORA), (*ps, "embed", None), dtype)
+    p["mix_b"], s["mix_b"] = dense_init(
+        ks[6], (*pre, 5, MIX_LORA, d_model), (*ps, None, "lora", "embed"),
+        dtype)
+    p["w0"] = jnp.zeros((*pre, att), dtype) - 0.5   # exp(-exp(-0.5)) ≈ .55
+    s["w0"] = (*ps, "inner")
+    p["decay_a"], s["decay_a"] = dense_init(
+        ks[7], (*pre, d_model, DECAY_LORA), (*ps, "embed", None), dtype)
+    p["decay_b"], s["decay_b"] = dense_init(
+        ks[8], (*pre, DECAY_LORA, att), (*ps, "lora", "inner"), dtype)
+    p["u"] = jnp.zeros((*pre, att), dtype)
+    s["u"] = (*ps, "inner")
+    p["ln_x_w"] = jnp.ones((*pre, att), dtype)
+    s["ln_x_w"] = (*ps, "inner")
+    p["ln_x_b"] = jnp.zeros((*pre, att), dtype)
+    s["ln_x_b"] = (*ps, "inner")
+
+    # ---- channel-mix
+    p["cm_mu_k"] = jnp.full((*pre, d_model), 0.5, dtype)
+    s["cm_mu_k"] = (*ps, "embed")
+    p["cm_mu_r"] = jnp.full((*pre, d_model), 0.5, dtype)
+    s["cm_mu_r"] = (*ps, "embed")
+    p["cm_wk"], s["cm_wk"] = dense_init(ks[9], (*pre, d_model, d_ff),
+                                        (*ps, "embed", "mlp"), dtype)
+    p["cm_wv"], s["cm_wv"] = dense_init(ks[10], (*pre, d_ff, d_model),
+                                        (*ps, "mlp", "embed"), dtype)
+    p["cm_wr"], s["cm_wr"] = dense_init(ks[11], (*pre, d_model, d_model),
+                                        (*ps, "embed", None), dtype)
+    return p, s
+
+
+def _group_norm(x, w, b, n_heads: int, eps: float = 1e-5):
+    """Per-head layernorm over the head channel dim.  x (..., H, V)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    shape = x.shape[:-2] + (n_heads * x.shape[-1],)
+    y = y.reshape(shape) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _ddlerp(p, x, xprev):
+    """5-way LoRA-modulated token-shift; returns (xr, xk, xv, xw, xg)."""
+    dx = xprev - x
+    xxx = x + dx * p["mu_x"]
+    t = jnp.tanh(jnp.einsum("...d,dm->...m", xxx, p["mix_a"]))
+    t = t.reshape(*t.shape[:-1], 5, MIX_LORA)
+    offs = jnp.einsum("...fm,fmd->f...d", t, p["mix_b"])     # (5, ..., d)
+    mus = jnp.moveaxis(p["mu_rkvwg"], -2, 0)                 # (5, d)
+    mus = mus.reshape(5, *(1,) * (offs.ndim - 2), -1) + offs
+    return tuple(x + dx * mus[i] for i in range(5))
+
+
+def _tmix_projections(p, x, xprev, n_heads: int, head_dim: int):
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xprev)
+    shp = x.shape[:-1] + (n_heads, head_dim)
+    r = jnp.einsum("...d,da->...a", xr, p["wr"]).reshape(shp)
+    k = jnp.einsum("...d,da->...a", xk, p["wk"]).reshape(shp)
+    v = jnp.einsum("...d,da->...a", xv, p["wv"]).reshape(shp)
+    g = jnp.einsum("...d,da->...a", xg, p["wg"])
+    dec = jnp.einsum("...d,dl->...l", xw, p["decay_a"])
+    dec = jnp.einsum("...l,la->...a", jnp.tanh(dec), p["decay_b"])
+    logw = -jnp.exp((p["w0"] + dec).astype(jnp.float32)).reshape(shp)
+    return r, k, v, g, logw
+
+
+def rwkv6_time_mix(p, x, *, n_heads: int, head_dim: int, s0=None,
+                   shift0=None, chunk: int = 64, impl: str = "chunked"):
+    """x (B,S,d) -> (y, wkv_state, last_x)."""
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if shift0 is not None:
+        xprev = xprev.at[:, 0].set(shift0)
+    r, k, v, g, logw = _tmix_projections(p, x, xprev, n_heads, head_dim)
+    r = shard(r, "act_batch", "act_seq", "act_inner", None)
+    u = p["u"].astype(jnp.float32).reshape(n_heads, head_dim)
+    o, s_last = wkv6(r, k, v, logw, u, s0, chunk=chunk, impl=impl)
+    o = _group_norm(o, p["ln_x_w"], p["ln_x_b"], n_heads)
+    o = o * jax.nn.silu(g)
+    y = jnp.einsum("bsa,ad->bsd", o, p["wo"])
+    return shard(y, "act_batch", "act_seq", "act_embed"), s_last, x[:, -1]
+
+
+def rwkv6_time_mix_decode(p, x, s0, shift0, *, n_heads: int, head_dim: int):
+    """x (B,1,d); shift0 (B,d); s0 (B,H,K,V)."""
+    xprev = shift0[:, None]
+    r, k, v, g, logw = _tmix_projections(p, x, xprev, n_heads, head_dim)
+    u = p["u"].astype(jnp.float32).reshape(n_heads, head_dim)
+    o, s_new = wkv6_decode(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, s0)
+    o = _group_norm(o[:, None], p["ln_x_w"], p["ln_x_b"], n_heads)
+    o = o * jax.nn.silu(g)
+    y = jnp.einsum("bsa,ad->bsd", o, p["wo"])
+    return y, s_new, x[:, -1]
+
+
+def rwkv6_channel_mix(p, x, shift0=None):
+    """x (B,S,d) -> (y, last_x)."""
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if shift0 is not None:
+        xprev = xprev.at[:, 0].set(shift0)
+    dx = xprev - x
+    xk = x + dx * p["cm_mu_k"]
+    xr = x + dx * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_wk"])))
+    kk = shard(kk, "act_batch", "act_seq", "act_mlp")
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"]))
+    return shard(r * kv, "act_batch", "act_seq", "act_embed"), x[:, -1]

@@ -1,0 +1,121 @@
+"""RWKV-6 full model: embed -> [time-mix + channel-mix] x L -> unembed.
+
+Attention-free: the "cache" is O(1) in sequence length — per-layer WKV state
+(B, H, K, V) plus two token-shift vectors (B, d).  This is why rwkv6 runs
+the long_500k cell that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .layers import embed_apply, embed_init, layer_norm, rms_norm
+from .rwkv6 import (rwkv6_channel_mix, rwkv6_init, rwkv6_time_mix,
+                    rwkv6_time_mix_decode)
+from .stacking import scan_layers
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    L = cfg.n_layers
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt)
+    lp, ls = rwkv6_init(ks[1], cfg.d_model, cfg.d_ff,
+                        n_heads=cfg.ssm.n_heads, head_dim=cfg.ssm.head_dim,
+                        dtype=dt, stack=(L,))
+    lp["ln1"] = jnp.zeros((L, cfg.d_model), dt)
+    ls["ln1"] = ("layers", "embed")
+    lp["ln2"] = jnp.zeros((L, cfg.d_model), dt)
+    ls["ln2"] = ("layers", "embed")
+    p["layers"], s["layers"] = lp, ls
+    p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+    s["final_norm"] = ("embed",)
+    p["unembed"], s["unembed"] = embed_init(ks[2], cfg.vocab_size,
+                                            cfg.d_model, dt)
+    return p, s
+
+
+def _split(lp):
+    tm = {k: v for k, v in lp.items()
+          if not k.startswith("cm_") and k not in ("ln1", "ln2")}
+    cm = {k: v for k, v in lp.items() if k.startswith("cm_")}
+    return tm, cm
+
+
+def rwkv_forward(p, cfg: ModelConfig, tokens, ssm_impl: str = "chunked",
+                 collect_cache: bool = False, last_only: bool = False):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_apply(p["embed"], tokens).astype(dt)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(x, lp):
+        tm, cm = _split(lp)
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        h, s_last, tshift = rwkv6_time_mix(
+            tm, h, n_heads=cfg.ssm.n_heads, head_dim=cfg.ssm.head_dim,
+            chunk=cfg.ssm.chunk, impl=ssm_impl)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        h, cshift = rwkv6_channel_mix(cm, h)
+        x = x + h
+        ys = (s_last, tshift, cshift) if collect_cache else 0
+        return x, ys
+
+    x, caches = scan_layers(body, x, p["layers"],
+                            use_scan=cfg.scan_layers)
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,vd->...v", x, p["unembed"])
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    logits = logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+    if collect_cache:
+        wkv, tshift, cshift = caches
+        cache = {"wkv": wkv, "shift_att": tshift, "shift_ffn": cshift,
+                 "idx": jnp.int32(tokens.shape[1])}
+        return logits, cache
+    return logits, {}
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int, cap: int,
+                    filled: int | None = None):
+    L, h, k = cfg.n_layers, cfg.ssm.n_heads, cfg.ssm.head_dim
+    d = cfg.d_model
+    cdt = jnp.dtype(cfg.compute_dtype)
+    idx = cap - 1 if filled is None else filled
+    return {"wkv": jnp.zeros((L, batch, h, k, k), jnp.float32),
+            "shift_att": jnp.zeros((L, batch, d), cdt),
+            "shift_ffn": jnp.zeros((L, batch, d), cdt),
+            "idx": jnp.int32(idx)}
+
+
+def rwkv_decode(p, cfg: ModelConfig, cache, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = embed_apply(p["embed"], tokens).astype(dt)   # (B, 1, d)
+
+    def body(x, xs):
+        lp, wkv, sa, sf = xs
+        tm, cm = _split(lp)
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        sa_new = h[:, -1]
+        h, wkv, _ = rwkv6_time_mix_decode(
+            tm, h, wkv, sa, n_heads=cfg.ssm.n_heads,
+            head_dim=cfg.ssm.head_dim)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        sf_new = h[:, -1]
+        h, _ = rwkv6_channel_mix(cm, h, shift0=sf)
+        x = x + h
+        return x, (wkv, sa_new, sf_new)
+
+    x, (wkv, sa, sf) = scan_layers(
+        body, x, (p["layers"], cache["wkv"], cache["shift_att"],
+                  cache["shift_ffn"]), use_scan=cfg.scan_layers)
+    x = rms_norm(x[:, -1], p["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("...d,vd->...v", x, p["unembed"])
+    logits = logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+    return logits, {"wkv": wkv, "shift_att": sa, "shift_ffn": sf,
+                    "idx": cache["idx"] + 1}

@@ -1,0 +1,26 @@
+"""scan-vs-unroll over stacked layer params.
+
+`lax.scan` keeps HLO size independent of depth (fast compiles, the smoke/
+training default).  Unrolling (`use_scan=False`) is what the dry-run lowers:
+XLA's HloCostAnalysis counts a while body ONCE (trip count unknown), so
+scanned modules under-report FLOPs/bytes by ~L×; unrolling also lets the
+scheduler overlap per-layer collectives — the production-perf choice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(body, carry, xs, *, use_scan: bool = True):
+    """Like ``jax.lax.scan(body, carry, xs)`` with an unrolled variant."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    return carry, stacked

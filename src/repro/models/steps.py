@@ -1,0 +1,71 @@
+"""Entry-point builders: train_step / prefill_step / decode_step.
+
+These are the functions the launcher lowers against the production mesh —
+each one is an "alternative entry point" (paper §3.1): same model source,
+separately compiled programs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..optim.adamw import AdamW
+from ..sharding import shard
+from .api import Model
+
+
+def cross_entropy(logits, labels, *, z_weight: float = 1e-4):
+    """Mean next-token xent over valid (label >= 0) positions + z-loss."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    loss = jnp.sum(nll * valid) / n
+    zloss = jnp.sum(jnp.square(logz) * valid) / n
+    return loss + z_weight * zloss, loss
+
+
+def make_loss_fn(model: Model, aux_weight: float = 0.01):
+    def loss_fn(params, batch):
+        logits, metrics = model.forward(params, batch)
+        total, xent = cross_entropy(logits, batch["labels"])
+        if "moe_aux" in metrics:
+            total = total + aux_weight * metrics["moe_aux"] \
+                + 1e-3 * metrics.get("moe_zloss", 0.0)
+        return total, {"xent": xent, **metrics}
+    return loss_fn
+
+
+def make_train_step(model: Model, opt: AdamW):
+    """(params, opt_state, batch) -> (params', opt_state', metrics)."""
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens):
+        logits, cache = model.decode(params, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+    return decode_step

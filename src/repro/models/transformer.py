@@ -1,0 +1,229 @@
+"""Decoder-only LM stack (dense / MoE / VLM) with scan-over-layers.
+
+Three lowered entry points from one parameter tree — the LM-side analogue of
+Cppless's alternative entry points (one source, several compiled programs):
+
+  forward  (train)    tokens/embeds -> logits (B, S, V)
+  prefill             tokens/embeds -> last-token logits (B, V) + KV cache
+  decode              one token + cache -> logits (B, V) + updated cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .attention import attn_decode, attn_full, attn_init
+from .layers import embed_apply, embed_init, mlp_apply, mlp_init, rms_norm
+from .moe import moe_apply, moe_init
+from .stacking import scan_layers
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def lm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    L = cfg.n_layers
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt)
+
+    lp, ls = {}, {}
+    lp["ln1"] = jnp.zeros((L, cfg.d_model), dt)
+    ls["ln1"] = ("layers", "embed")
+    lp["ln2"] = jnp.zeros((L, cfg.d_model), dt)
+    ls["ln2"] = ("layers", "embed")
+    lp["attn"], ls["attn"] = attn_init(
+        ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt,
+        bias=cfg.qkv_bias, stack=(L,))
+    if cfg.moe.n_experts:
+        lp["moe"], ls["moe"] = moe_init(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.moe.n_experts, cfg.act, dt,
+            stack=(L,))
+    else:
+        lp["mlp"], ls["mlp"] = mlp_init(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.act, dt, stack=(L,))
+    p["layers"], s["layers"] = lp, ls
+
+    p["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+    s["final_norm"] = ("embed",)
+    if not cfg.tie_embeddings:
+        p["unembed"], s["unembed"] = embed_init(
+            ks[3], cfg.vocab_size, cfg.d_model, dt)
+    return p, s
+
+
+def _embed_in(p, cfg, tokens, embeds):
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed_apply(p["embed"], tokens).astype(
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "act_batch", "act_seq", "act_embed")
+
+
+def _logits(p, cfg, x):
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    out = jnp.einsum("...d,vd->...v", x, table)
+    out = shard(out, "act_batch", "act_seq", "act_vocab") if out.ndim == 3 \
+        else shard(out, "act_batch", "act_vocab")
+    return out.astype(jnp.float32) if cfg.logits_fp32 else out
+
+
+def _ffn(lp, cfg: ModelConfig, h):
+    """Dense MLP or MoE; returns (y, (aux, zloss, drop))."""
+    if cfg.moe.n_experts:
+        y, m = moe_apply(
+            lp["moe"], h, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
+            impl=("ep_a2a" if cfg.moe.impl == "ep" else "replicated"))
+        return y, (m["moe_aux"], m["moe_zloss"], m["moe_drop"])
+    y = mlp_apply(lp["mlp"], h, cfg.act)
+    y = shard(y, "act_batch", "act_seq", "act_embed")
+    return y, (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots_saveable" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def lm_forward(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
+               attn_impl: str = "ref"):
+    """Training forward: full logits (B, S, V) + moe metrics."""
+    x = _embed_in(p, cfg, tokens, embeds)
+    b, s_len = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
+                                 (b, s_len))
+
+    def body(carry, lp):
+        x, aux = carry
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        h = attn_full(lp["attn"], h, positions, causal=True,
+                      window=cfg.window, rope_theta=cfg.rope_theta,
+                      mrope_sections=cfg.mrope_sections, pos3d=pos3d,
+                      impl=attn_impl)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        h, m = _ffn(lp, cfg, h)
+        x = x + h
+        return (x, tuple(a + mm for a, mm in zip(aux, m))), None
+
+    zero = (jnp.float32(0),) * 3
+    (x, aux), _ = scan_layers(_remat(cfg, body), (x, zero), p["layers"],
+                              use_scan=cfg.scan_layers)
+    metrics = {"moe_aux": aux[0] / cfg.n_layers,
+               "moe_zloss": aux[1] / cfg.n_layers,
+               "moe_drop": aux[2] / cfg.n_layers}
+    return _logits(p, cfg, x), metrics
+
+
+def lm_prefill(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
+               attn_impl: str = "ref"):
+    """Prefill: last-token logits + populated KV cache."""
+    x = _embed_in(p, cfg, tokens, embeds)
+    b, s_len = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
+                                 (b, s_len))
+    cdt = jnp.dtype(cfg.param_dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        h, (k, v) = attn_full(lp["attn"], h, positions, causal=True,
+                              window=cfg.window, rope_theta=cfg.rope_theta,
+                              mrope_sections=cfg.mrope_sections, pos3d=pos3d,
+                              impl=attn_impl, return_kv=True)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        h, _ = _ffn(lp, cfg, h)
+        if cfg.kv_quant == "int8":
+            from .attention import quantize_kv
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            return x + h, (kq, vq, ks, vs)
+        return x + h, (k.astype(cdt), v.astype(cdt))
+
+    x, caches = scan_layers(body, x, p["layers"], use_scan=cfg.scan_layers)
+    logits = _logits(p, cfg, x[:, -1])
+    if cfg.kv_quant == "int8":
+        ck, cv, cks, cvs = caches
+        cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                 "idx": jnp.int32(s_len)}
+    else:
+        ck, cv = caches
+        cache = {"k": ck, "v": cv, "idx": jnp.int32(s_len)}
+    return logits, cache
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, cap: int,
+                  filled: int | None = None):
+    """Abstract/zero cache of capacity ``cap``; idx = filled (default cap-1,
+    i.e. the decode_32k cell: a full cache, new token in the last slot)."""
+    cdt = jnp.dtype(cfg.param_dtype)
+    shp = (cfg.n_layers, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    idx = cap - 1 if filled is None else filled
+    if cfg.kv_quant == "int8":
+        return {"k": jnp.zeros(shp, jnp.int8), "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(shp[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shp[:-1], jnp.float32),
+                "idx": jnp.int32(idx)}
+    return {"k": jnp.zeros(shp, cdt), "v": jnp.zeros(shp, cdt),
+            "idx": jnp.int32(idx)}
+
+
+def lm_decode(p, cfg: ModelConfig, cache, tokens, pos3d=None,
+              attn_impl: str = "ref"):
+    """One decode step.  tokens (B, 1) -> logits (B, V), updated cache."""
+    x = _embed_in(p, cfg, tokens, None)
+    idx = cache["idx"]
+    if cfg.mrope_sections and pos3d is None:
+        b = tokens.shape[0]
+        pos3d = jnp.broadcast_to(idx.astype(jnp.int32), (3, b, 1))
+
+    quant = cfg.kv_quant == "int8"
+
+    def body(x, xs):
+        if quant:
+            lp, ck, cv, cks, cvs = xs
+        else:
+            lp, ck, cv = xs
+            cks = cvs = None
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        out = attn_decode(lp["attn"], h, ck, cv, idx,
+                          window=cfg.window, rope_theta=cfg.rope_theta,
+                          mrope_sections=cfg.mrope_sections,
+                          pos3d=pos3d, impl=attn_impl,
+                          cache_ks=cks, cache_vs=cvs)
+        h, ck, cv = out[:3]
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        h, _ = _ffn(lp, cfg, h)
+        if quant:
+            return x + h, (ck, cv, out[3], out[4])
+        return x + h, (ck, cv)
+
+    if quant:
+        xs = (p["layers"], cache["k"], cache["v"], cache["k_scale"],
+              cache["v_scale"])
+        x, (ck, cv, cks, cvs) = scan_layers(body, x, xs,
+                                            use_scan=cfg.scan_layers)
+        logits = _logits(p, cfg, x[:, -1])
+        return logits, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                        "idx": idx + 1}
+    x, (ck, cv) = scan_layers(body, x,
+                              (p["layers"], cache["k"], cache["v"]),
+                              use_scan=cfg.scan_layers)
+    logits = _logits(p, cfg, x[:, -1])
+    return logits, {"k": ck, "v": cv, "idx": idx + 1}

@@ -1,0 +1,3 @@
+from .adamw import (AdamW, accumulate_grads, clip_by_global_norm,
+                    compress_int8, cosine_schedule, decompress_int8,
+                    ef_compress_tree, global_norm)

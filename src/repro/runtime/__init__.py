@@ -1,0 +1,2 @@
+from .server import Completion, LMServer, Request, make_generate_fn
+from .trainer import SimulatedPreemption, TrainReport, train

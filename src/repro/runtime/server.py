@@ -1,0 +1,125 @@
+"""Serverless LM serving — the paper's offload model applied to inference.
+
+Each generation request is a stateless task (prompt -> completion), exactly
+the paper's fork-join unit.  The serve path is deployed through the same
+core pipeline as any Cppless function: AOT-compiled entry points (prefill +
+decode), content-addressed names in the manifest, binary payloads, and the
+pooled dispatcher with retry/hedging — so LM serving inherits the fault-
+tolerance and cost accounting (GB-seconds per request) of the framework.
+
+Batched mode packs concurrent requests into one decode batch (continuous-
+batching-lite: a fresh batch per wave) and dispatches the *wave* as a task.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import FunctionConfig, RemoteFunction
+from ..dispatch import Dispatcher
+from ..models import build_model
+from ..configs.base import ModelConfig
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 16
+
+
+@dataclass
+class Completion:
+    tokens: list[int]
+    latency_ms: float = 0.0
+    cost_gb_s: float = 0.0
+
+
+def _pad_prompts(prompts: Sequence[Sequence[int]], pad: int = 0):
+    b = len(prompts)
+    s = max(len(p) for p in prompts)
+    out = np.full((b, s), pad, np.int32)
+    for i, p in enumerate(prompts):
+        out[i, s - len(p):] = p          # left-pad so last token aligns
+    return out
+
+
+def make_generate_fn(cfg: ModelConfig, max_new: int):
+    """Build the stateless serve task: (params, tokens) -> generated ids.
+
+    Capture discipline (the Cppless contract): the closure's *data*
+    captures (`max_new`) ship in the payload; everything model-shaped is
+    captured as *callables*, which travel with the deployed artifact like
+    statically-linked deps, not over the wire.
+    """
+    from ..models.api import grow_cache
+    model = build_model(cfg)
+    prefill, decode = model.prefill, model.decode
+    grow = functools.partial(grow_cache, cfg)
+
+    def generate(params, tokens):
+        b, s = tokens.shape
+        logits, cache = prefill(params, {"tokens": tokens})
+        cache = grow(cache, s + max_new)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+
+        def step(carry, _):
+            cache, tok = carry
+            logits, cache = decode(params, cache, tok)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            return (cache, nxt), tok[:, 0]
+
+        (_, _), toks = jax.lax.scan(step, (cache, tok), None,
+                                    length=max_new)
+        return jnp.moveaxis(toks, 0, 1)           # (B, max_new)
+
+    return generate
+
+
+class LMServer:
+    """Serverless serving facade over the repro dispatcher."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 dispatcher: Dispatcher | None = None,
+                 memory_mb: int = 2048, max_new: int = 16):
+        self.cfg = cfg
+        self.params = params
+        self.max_new = max_new
+        self.d = dispatcher or Dispatcher()
+        self.inst = self.d.create_instance()
+        gen = make_generate_fn(cfg, max_new)
+        self.remote = RemoteFunction(
+            gen, name=f"serve_{cfg.name}",
+            config=FunctionConfig(memory_mb=memory_mb, serializer="binary"))
+
+    def serve_wave(self, requests: Sequence[Request]) -> list[Completion]:
+        """One batched wave: pack requests, dispatch, unpack."""
+        tokens = _pad_prompts([r.prompt for r in requests])
+        fut = self.inst.dispatch(self.remote, self.params,
+                                 jnp.asarray(tokens))
+        out = np.asarray(fut.result())
+        rec = fut.record
+        comps = []
+        for i, r in enumerate(requests):
+            comps.append(Completion(
+                tokens=[int(t) for t in out[i][:r.max_new]],
+                latency_ms=(rec.server_s * 1000.0) if rec else 0.0,
+                cost_gb_s=(rec.billed_gb_s if rec else 0.0)
+                / max(1, len(requests))))
+        return comps
+
+    def serve(self, requests: Sequence[Request],
+              wave_size: int = 8) -> list[Completion]:
+        """Fork-join over request waves (each wave = one serverless task)."""
+        out: list[Completion] = []
+        for i in range(0, len(requests), wave_size):
+            out.extend(self.serve_wave(requests[i:i + wave_size]))
+        return out
+
+    @property
+    def cost_report(self):
+        return self.inst.cost

@@ -1,0 +1,128 @@
+"""Pytree reflection: the JAX analogue of Cppless's lambda-capture reflection.
+
+Cppless adds a compiler extension exposing constexpr accessors to the unnamed
+capture members of a C++ lambda so that generic serialization can visit every
+captured value (paper §4.3).  In JAX the captured state of a task is a pytree,
+and ``jax.tree_util`` already provides the generic, typed traversal — this
+module pins down a *stable, wire-format-friendly* spec for that traversal so a
+tree can be rebuilt on the remote side without Python pickling.
+
+The spec is a JSON-able recursive description::
+
+    {"t": "dict",   "keys": [...], "children": [spec, ...]}
+    {"t": "list",   "children": [...]}
+    {"t": "tuple",  "children": [...]}
+    {"t": "none"}
+    {"t": "leaf"}                      # consumes the next leaf in order
+    {"t": "custom", "name": <registered>, "child": spec}
+
+Custom types mirror cereal's user-supplied ``serialize`` methods: users
+register a (to_tree, from_tree) pair per class (paper §3.3: "the user only has
+to manually add serialization for custom types").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+# Leaf types the wire format understands natively.
+LEAF_TYPES = (np.ndarray, np.generic, int, float, bool, str, bytes)
+
+_CUSTOM_BY_CLS: dict[type, tuple[str, Callable, Callable]] = {}
+_CUSTOM_BY_NAME: dict[str, tuple[type, Callable, Callable]] = {}
+
+
+def register_custom(
+    cls: type,
+    name: str | None = None,
+    to_tree: Callable[[Any], Any] | None = None,
+    from_tree: Callable[[Any], Any] | None = None,
+) -> None:
+    """Register serialization for a custom type (cereal-style).
+
+    Defaults handle ``@dataclasses.dataclass`` classes automatically.
+    """
+    name = name or f"{cls.__module__}.{cls.__qualname__}"
+    if to_tree is None or from_tree is None:
+        if not dataclasses.is_dataclass(cls):
+            raise TypeError(
+                f"{cls!r} is not a dataclass; provide to_tree/from_tree "
+                "(the cereal analogue of a custom serialize method)"
+            )
+        fields = [f.name for f in dataclasses.fields(cls)]
+        to_tree = lambda obj, _f=fields: {k: getattr(obj, k) for k in _f}  # noqa: E731
+        from_tree = lambda tree, _c=cls: _c(**tree)  # noqa: E731
+    _CUSTOM_BY_CLS[cls] = (name, to_tree, from_tree)
+    _CUSTOM_BY_NAME[name] = (cls, to_tree, from_tree)
+
+
+def _is_jax_array(x: Any) -> bool:
+    # Avoid importing jax at module scope cost; duck-type on __array__ + dtype.
+    mod = type(x).__module__
+    return mod.startswith("jax") and hasattr(x, "dtype")
+
+
+def flatten(tree: Any) -> tuple[dict, list]:
+    """Flatten ``tree`` into (spec, leaves).  JAX arrays become numpy."""
+    leaves: list = []
+
+    def rec(node: Any) -> dict:
+        if node is None:
+            return {"t": "none"}
+        if _is_jax_array(node):
+            node = np.asarray(node)
+        if isinstance(node, LEAF_TYPES):
+            leaves.append(node)
+            return {"t": "leaf"}
+        if type(node) in _CUSTOM_BY_CLS:
+            name, to_tree, _ = _CUSTOM_BY_CLS[type(node)]
+            return {"t": "custom", "name": name, "child": rec(to_tree(node))}
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if not all(isinstance(k, str) for k in keys):
+                raise TypeError("only str dict keys are wire-serializable")
+            return {"t": "dict", "keys": keys,
+                    "children": [rec(node[k]) for k in keys]}
+        if isinstance(node, tuple):
+            return {"t": "tuple", "children": [rec(c) for c in node]}
+        if isinstance(node, list):
+            return {"t": "list", "children": [rec(c) for c in node]}
+        raise TypeError(
+            f"cannot serialize {type(node)!r}; register_custom() it first"
+        )
+
+    spec = rec(tree)
+    return spec, leaves
+
+
+def unflatten(spec: dict, leaves: list) -> Any:
+    """Rebuild a tree from (spec, leaves)."""
+    it = iter(leaves)
+
+    def rec(s: dict) -> Any:
+        t = s["t"]
+        if t == "none":
+            return None
+        if t == "leaf":
+            return next(it)
+        if t == "dict":
+            return {k: rec(c) for k, c in zip(s["keys"], s["children"])}
+        if t == "tuple":
+            return tuple(rec(c) for c in s["children"])
+        if t == "list":
+            return [rec(c) for c in s["children"]]
+        if t == "custom":
+            name = s["name"]
+            if name not in _CUSTOM_BY_NAME:
+                raise KeyError(f"custom type {name!r} not registered on this side")
+            _, _, from_tree = _CUSTOM_BY_NAME[name]
+            return from_tree(rec(s["child"]))
+        raise ValueError(f"bad spec node {s!r}")
+
+    out = rec(spec)
+    rest = list(it)
+    if rest:
+        raise ValueError(f"{len(rest)} unconsumed leaves")
+    return out

@@ -1,0 +1,6 @@
+from .presets import PRESETS, resolve
+from .rules import (AxisRules, DEFAULT_RULES, current_rules, shard,
+                    tree_pspecs, tree_shardings, use_rules)
+
+__all__ = ["PRESETS", "resolve", "AxisRules", "DEFAULT_RULES", "current_rules", "shard",
+           "tree_pspecs", "tree_shardings", "use_rules"]

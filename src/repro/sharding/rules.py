@@ -1,0 +1,162 @@
+"""Logical-axis sharding with divisibility fallback.
+
+Params and activations are annotated with *logical* axis names; a rule table
+maps each logical axis to mesh axes.  A dimension that does not divide the
+product of its mesh axes falls back by dropping mesh axes from the right
+until it divides (ultimately unsharded) — fallbacks are recorded so the
+roofline report can show where replication was forced.
+
+Param logical axes:   layers, embed, mlp, heads, kv_heads, head_dim, vocab,
+                      experts, inner, state, conv, lora, group
+Activation axes:      act_batch, act_seq, act_embed, act_heads, act_mlp,
+                      act_vocab, act_experts, act_cap, act_kv_seq
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rule table: TP on the `model` axis, FSDP-style weight sharding on
+# the `data` axis (ZeRO-3 analogue: XLA all-gathers at use), batch over
+# (pod, data).  `None` = always replicated.
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    # ---- params
+    "layers": None,
+    "embed": ("data",),          # FSDP dim on weight matrices
+    "mlp": ("model",),           # Megatron TP: column/row parallel ffn
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "vocab": ("model",),
+    "experts": ("model",),       # EP: 16 experts over 16-way model axis
+    "inner": ("model",),         # mamba2 d_inner channels
+    "state": None,
+    "conv": None,
+    "lora": None,
+    "group": None,
+    None: None,
+    # ---- activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "act_cap": None,
+    "act_kv_seq": None,          # hillclimb lever: ("model",) = flash-decode SP
+    "act_inner": ("model",),
+    "act_state": None,
+}
+
+
+@dataclass
+class AxisRules:
+    """Rule table bound to a mesh; resolves logical specs with fallback."""
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...] | None] = field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    fallbacks: list[tuple[str, int, tuple[str, ...]]] = field(
+        default_factory=list)
+
+    def replace(self, **overrides) -> "AxisRules":
+        r = dict(self.rules)
+        r.update(overrides)
+        return AxisRules(self.mesh, r)
+
+    def _axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+    def resolve_dim(self, logical: str | None, dim: int,
+                    used: set[str]) -> tuple[str, ...] | None:
+        """Mesh axes for one dimension, with divisibility + reuse fallback."""
+        cand = self.rules.get(logical)
+        if not cand:
+            return None
+        cand = tuple(a for a in cand
+                     if a in self.mesh.axis_names and a not in used)
+        while cand:
+            prod = 1
+            for a in cand:
+                prod *= self._axis_size(a)
+            if dim % prod == 0 and prod > 1:
+                return cand
+            dropped = cand
+            cand = cand[:-1]
+            if cand != dropped[:-1]:  # pragma: no cover
+                break
+        if self.rules.get(logical):
+            self.fallbacks.append((str(logical), dim,
+                                   tuple(self.rules[logical] or ())))
+        return None
+
+    def spec(self, logical_axes: tuple, shape: tuple) -> P:
+        """PartitionSpec for an array given its logical axes and shape."""
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        used: set[str] = set()
+        out = []
+        for name, dim in zip(logical_axes, shape):
+            axes = self.resolve_dim(name, dim, used)
+            if axes is None:
+                out.append(None)
+            else:
+                used.update(axes)
+                out.append(axes if len(axes) > 1 else axes[0])
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical_axes: tuple, shape: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def tree_shardings(rules: AxisRules, params, specs):
+    """NamedSharding tree for a (params, logical-specs) pair of trees."""
+    def one(p, s):
+        shape = p.shape if hasattr(p, "shape") else ()
+        return rules.sharding(tuple(s), tuple(shape))
+    return jax.tree.map(one, params, specs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_pspecs(rules: AxisRules, params, specs):
+    def one(p, s):
+        shape = p.shape if hasattr(p, "shape") else ()
+        return rules.spec(tuple(s), tuple(shape))
+    return jax.tree.map(one, params, specs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ------------------------------------------------------- activation context --
+
+_TLS = threading.local()
+
+
+@contextmanager
+def use_rules(rules: AxisRules | None):
+    """Enable `shard(x, ...)` activation constraints during tracing."""
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield rules
+    finally:
+        _TLS.rules = prev
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_TLS, "rules", None)
+
+
+def shard(x, *logical):
+    """with_sharding_constraint by logical names; no-op outside use_rules()."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(tuple(logical), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run is the only 512-device
+# context, and it sets its own XLA_FLAGS before jax import).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,71 @@
+"""Paper applications + serverless LM serving."""
+import jax
+import numpy as np
+import pytest
+
+from repro.apps import (KNOWN, compute_pi, prefixes, random_scene,
+                        render_serial, render_serverless, solve_serial,
+                        solve_serverless)
+from repro.configs import get_smoke
+from repro.dispatch import Dispatcher
+from repro.models import build_model
+from repro.runtime import LMServer, Request
+
+
+def test_nqueens_serial_known():
+    for n in (5, 6, 7, 8):
+        assert solve_serial(n) == KNOWN[n]
+
+
+def test_nqueens_prefix_decomposition_complete():
+    """Prefix tasks partition the search space: counts sum to the total."""
+    for n, p in ((7, 1), (7, 2), (8, 2)):
+        total, ntasks, _ = solve_serverless(n, p)
+        assert total == KNOWN[n], (n, p, total)
+        assert ntasks == len(prefixes(n, p))
+
+
+def test_nqueens_longer_prefix_more_tasks():
+    assert len(prefixes(9, 2)) > len(prefixes(9, 1))
+
+
+def test_pi_estimate():
+    pi, inst = compute_pi(100_000, 8)
+    assert abs(pi - np.pi) < 0.05
+    assert inst.cost.invocations == 8
+
+
+def test_raytracer_serverless_matches_serial_statistics():
+    sc = random_scene(width=32, height=32, n_spheres=6)
+    a = render_serial(sc, spp=2)
+    b, inst = render_serverless(sc, tile=16, spp=2)
+    assert b.shape == (32, 32, 3) and np.isfinite(b).all()
+    # different MC seeds per tile -> compare statistics, not pixels
+    assert abs(a.mean() - b.mean()) < 0.05
+    assert inst.cost.invocations == 4
+    assert inst.cost.gb_seconds > 0
+
+
+def test_raytracer_tile_count_scales():
+    sc = random_scene(width=32, height=32, n_spheres=4)
+    _, i16 = render_serverless(sc, tile=16, spp=1)
+    _, i8 = render_serverless(sc, tile=8, spp=1)
+    assert i8.cost.invocations == 4 * i16.cost.invocations
+
+
+def test_lm_server_serves_and_bills():
+    cfg = get_smoke("smollm-360m")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    server = LMServer(cfg, params, max_new=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, 8)),
+                    max_new=4) for _ in range(4)]
+    comps = server.serve(reqs, wave_size=2)
+    assert len(comps) == 4
+    assert all(len(c.tokens) == 4 for c in comps)
+    assert server.cost_report.invocations == 2          # two waves
+    assert server.cost_report.gb_seconds > 0
+    # determinism: same prompts -> same greedy tokens
+    comps2 = server.serve(reqs, wave_size=2)
+    assert [c.tokens for c in comps] == [c.tokens for c in comps2]

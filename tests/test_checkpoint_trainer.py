@@ -1,0 +1,79 @@
+"""Checkpoint store + fault-tolerant trainer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.configs import get_smoke
+from repro.runtime import train
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 3, t)
+    out = restore(str(tmp_path), 3, jax.tree.map(lambda x: x, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_commit_marker_and_discovery(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save(str(tmp_path), 5, _tree())
+    save(str(tmp_path), 9, _tree())
+    # an uncommitted (torn) checkpoint must be ignored
+    os.makedirs(tmp_path / "step_00000012")
+    assert latest_step(str(tmp_path)) == 9
+
+
+def test_async_checkpointer_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree())
+    ck.close()
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_train_loss_decreases():
+    cfg = get_smoke("smollm-360m")
+    rep = train(cfg, steps=30, global_batch=4, seq_len=32, peak_lr=5e-3)
+    assert rep.steps_run == 30
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first, (first, last)
+
+
+def test_train_survives_preemption_and_resumes(tmp_path):
+    """Kill the 'node' mid-run; the loop restores the newest committed
+    checkpoint and finishes with the same final loss as an undisturbed run
+    (deterministic data skip-ahead)."""
+    cfg = get_smoke("smollm-360m")
+    kw = dict(steps=24, global_batch=4, seq_len=32, peak_lr=5e-3,
+              ckpt_every=8)
+    clean = train(cfg, ckpt_dir=str(tmp_path / "clean"), **kw)
+    faulty = train(cfg, ckpt_dir=str(tmp_path / "faulty"),
+                   fail_at={13, 19}, **kw)
+    assert faulty.restarts == 2
+    assert faulty.restored_from  # recovery actually used a checkpoint
+    assert abs(clean.final_loss - faulty.final_loss) < 0.05, \
+        (clean.final_loss, faulty.final_loss)
+
+
+def test_restart_from_disk_continues(tmp_path):
+    """A brand-new process picks up where the old one died."""
+    cfg = get_smoke("smollm-360m")
+    kw = dict(global_batch=4, seq_len=32, peak_lr=5e-3, ckpt_every=5)
+    train(cfg, steps=10, ckpt_dir=str(tmp_path), **kw)
+    rep2 = train(cfg, steps=20, ckpt_dir=str(tmp_path), **kw)
+    assert rep2.restored_from and rep2.restored_from[0] == 10
+    assert rep2.steps_run == 10          # only the remaining steps

@@ -1,0 +1,166 @@
+"""Dispatcher runtime tests: fork-join, retry, hedging, cost, latency model."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import FunctionConfig, RemoteFunction
+from repro.dispatch import (DEFAULT_LATENCY, Dispatcher, FaultPlan,
+                            LatencyModel, dispatch, wait)
+
+
+@pytest.fixture()
+def disp():
+    d = Dispatcher(os_threads=8)
+    yield d
+    d.shutdown()
+
+
+def test_pi_estimation_paper_fig6(disp):
+    """The paper's flagship example: parallel PI via 128 lambda tasks."""
+    n = 200_000
+    np_ = 32
+    inst = disp.create_instance()
+    cfg = (FunctionConfig()
+           .with_memory(512)
+           .with_ephemeral_storage(64))
+
+    def pi_estimate(seed):
+        import jax
+        k = jax.random.key(seed)
+        pts = jax.random.uniform(k, (n // np_, 2))
+        return 4.0 * jnp.mean((pts ** 2).sum(-1) <= 1.0)
+
+    futs = [dispatch(inst, pi_estimate, i, config=cfg) for i in range(np_)]
+    wait(inst)
+    pi = float(np.mean([f.result() for f in futs]))
+    assert abs(pi - 3.14159) < 0.05
+    # one deployed function, many invocations (type-keyed dedup)
+    assert disp.deployment.compile_count == 1
+    assert inst.cost.invocations == np_
+    assert inst.cost.gb_seconds > 0
+
+
+def test_wait_n_semantics(disp):
+    inst = disp.create_instance()
+    futs = [inst.dispatch(lambda x: x * 2, jnp.float32(i)) for i in range(8)]
+    inst.wait()  # all
+    assert all(f.done() for f in futs)
+    assert sorted(float(f.result()) for f in futs) == [0, 2, 4, 6, 8, 10, 12, 14]
+
+
+def test_map_fork_join(disp):
+    inst = disp.create_instance()
+    out = inst.map(lambda x: jnp.sum(x),
+                   [(jnp.ones(4) * i,) for i in range(5)])
+    assert [float(o) for o in out] == [0.0, 4.0, 8.0, 12.0, 16.0]
+
+
+def test_retry_on_worker_crash():
+    """Fault tolerance: sandbox loss is retried transparently."""
+    d = Dispatcher(os_threads=4,
+                   fault_plan=FaultPlan(failure_rate=0.3, seed=42))
+    try:
+        inst = d.create_instance()
+        cfg = FunctionConfig(max_retries=8)
+        out = inst.map(lambda x: x + 1,
+                       [(jnp.float32(i),) for i in range(20)], config=cfg)
+        assert [float(o) for o in out] == [float(i + 1) for i in range(20)]
+        assert sum(r.attempts for r in inst.records) > 20  # retries happened
+    finally:
+        d.shutdown()
+
+
+def test_crash_without_retry_budget_raises():
+    d = Dispatcher(os_threads=2,
+                   fault_plan=FaultPlan(failure_rate=1.0, seed=1))
+    try:
+        inst = d.create_instance()
+        cfg = FunctionConfig(max_retries=1)
+        fut = inst.dispatch(lambda x: x, jnp.float32(0), config=cfg)
+        with pytest.raises(Exception):
+            fut.result(timeout=30)
+    finally:
+        d.shutdown()
+
+
+def test_hedging_mitigates_stragglers():
+    """Beyond-paper: backup requests cut the tail the paper observed."""
+    d = Dispatcher(os_threads=8,
+                   fault_plan=FaultPlan(straggler_rate=0.2,
+                                        straggler_sleep_s=0.5, seed=7))
+    try:
+        inst = d.create_instance()
+        out = inst.map(lambda x: x * 2, [(jnp.float32(i),) for i in range(10)],
+                       hedge_quantile=0.5)
+        assert [float(o) for o in out] == [2.0 * i for i in range(10)]
+    finally:
+        d.shutdown()
+
+
+def test_cold_warm_accounting(disp):
+    inst = disp.create_instance()
+    inst.map(lambda x: x, [(jnp.float32(i),) for i in range(12)])
+    cold = sum(1 for r in inst.records if r.cold_start)
+    assert 1 <= cold <= 8        # ≤ os_threads sandboxes provisioned
+    # drain & re-invoke: cold starts again (elastic scale-in)
+    disp.pool.drain_warm()
+    inst2 = disp.create_instance()
+    inst2.map(lambda x: x, [(jnp.float32(0),)])
+    assert inst2.records[0].cold_start
+
+
+def test_cost_model_flat_with_parallelism(disp):
+    """Fig 14's claim: GB-s cost ~independent of the parallelism scale."""
+    def run(ntasks, total=64):
+        inst = disp.create_instance()
+        size = total // ntasks
+        inst.map(lambda x: jnp.sum(x * x),
+                 [(jnp.ones((size, 64)),) for _ in range(ntasks)])
+        return inst.cost.compute_seconds
+
+    c8, c32 = run(8), run(32)
+    # total productive compute should not grow dramatically with parallelism
+    assert c32 < c8 * 20
+
+
+def test_latency_model_fig11_shape():
+    """Fig 11: ~50 ms single; ~linear to ~150 ms near the stream budget;
+    queuing growth beyond it; HTTP/1.1 client slower than HTTP/2 pool."""
+    m = DEFAULT_LATENCY
+    single = m.simulate_burst([20.0])[0]
+    assert 40 <= single <= 120
+    k = 1500
+    lats = m.simulate_burst([20.0] * k)
+    assert np.mean(lats[:100]) < np.mean(lats[-100:])   # grows with pressure
+    mid = m.simulate_burst([20.0] * 1000)
+    assert 100 <= np.mean(mid[900:]) <= 400
+    # beyond capacity (16*100=1600): queuing kicks in
+    over = m.simulate_burst([20.0] * 4000)
+    assert np.mean(over[-100:]) > np.mean(mid[-100:])
+    # HTTP/1.1 per-request client pays handshakes
+    h1 = m.simulate_burst([20.0] * 100, client="http1_per_request")
+    h2 = m.simulate_burst([20.0] * 100, client="http2_pool")
+    assert np.mean(h1) > np.mean(h2)
+
+
+def test_dispatch_rate_ten_per_ms():
+    """Paper: 'client dispatches ~10 invocations per millisecond'."""
+    m = LatencyModel()
+    lats = m.simulate_burst([0.0] * 1000)
+    # issue times span ~100 ms for 1000 invocations
+    assert 80 <= (max(lats) - lats[0]) <= 250
+
+
+def test_modeled_instance_metrics(disp):
+    inst = disp.create_instance()
+    inst.map(lambda x: jnp.sum(x), [(jnp.ones(16),) for _ in range(4)])
+    lats = inst.modeled_latencies_ms()
+    assert len(lats) == 4 and all(l > 0 for l in lats)
+    assert inst.modeled_makespan_ms() >= max(lats) - 1e-9
+
+
+def test_instances_are_namespaces(disp):
+    a, b = disp.create_instance(), disp.create_instance()
+    a.map(lambda x: x, [(jnp.float32(1),)])
+    assert b.cost.invocations == 0 and a.cost.invocations == 1

@@ -1,0 +1,64 @@
+"""Beyond-paper perf features: int8 KV cache, sharding presets, EP config."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.models.api import grow_cache
+from repro.models.attention import dequantize_kv, quantize_kv
+from repro.sharding import PRESETS, resolve
+
+
+def test_kv_quant_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 7, 3, 16)) * 3.0, jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    back = dequantize_kv(q, s, jnp.float32)
+    # max error is half an LSB of the per-(token,head) scale
+    err = jnp.abs(back - x)
+    bound = s[..., None] * 0.5 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "gemma-2b"])
+def test_int8_kv_decode_matches_argmax(arch):
+    cfg = get_smoke(arch).replace(kv_quant="int8")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    logits, _ = jax.jit(model.forward)(params, {"tokens": toks})
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :-1]})
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    cache = grow_cache(cfg, cache, S + 1)
+    lgd, c2 = jax.jit(model.decode)(params, cache, toks[:, -1:])
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(lgd), -1),
+        np.argmax(np.asarray(logits[:, -1]), -1))
+    assert int(c2["idx"]) == S
+
+
+def test_int8_cache_is_half_the_bytes():
+    cfg = get_smoke("qwen2-7b")
+    m_fp = build_model(cfg)
+    m_q = build_model(cfg.replace(kv_quant="int8"))
+    fp = jax.eval_shape(lambda: m_fp.init_cache(4, 128))
+    q = jax.eval_shape(lambda: m_q.init_cache(4, 128))
+    nbytes = lambda c: sum(  # noqa: E731
+        np.prod(v.shape) * v.dtype.itemsize for v in jax.tree.leaves(c))
+    # smoke head_dim=16 -> f32 scale adds 25% overhead (0.625x); the real
+    # configs at head_dim=128 reach 0.52x.
+    assert nbytes(q) <= 0.63 * nbytes(fp)
+
+
+def test_presets_resolve():
+    assert resolve("baseline") == {}
+    assert resolve("flashdecode")["act_kv_seq"] == ("model",)
+    assert set(PRESETS) >= {"baseline", "fulldp_zero", "seqparallel",
+                            "flashdecode"}
+    with pytest.raises(KeyError):
+        resolve("nope")

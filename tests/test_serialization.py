@@ -1,0 +1,155 @@
+"""Serialization layer tests (paper §5.1 substrate)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serialization import (FORMATS, deserialize, flatten,
+                                 register_custom, serialize, unflatten)
+
+
+def trees_equal(a, b):
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (np.asarray(a).dtype == np.asarray(b).dtype
+                and np.asarray(a).shape == np.asarray(b).shape
+                and np.array_equal(np.asarray(a), np.asarray(b)))
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(trees_equal(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(trees_equal(x, y) for x, y in zip(a, b)))
+    return a == b and type(a) is type(b)
+
+
+SAMPLE = {
+    "weights": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+    "step": 7,
+    "lr": 1e-3,
+    "tags": ["a", "b"],
+    "nested": {"flag": True, "blob": b"\x00\x01\xff", "none": None},
+    "tup": (np.array([1, 2], dtype=np.int64), "x"),
+}
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_roundtrip_all_formats(fmt):
+    data = serialize(SAMPLE, format=fmt)
+    assert isinstance(data, bytes)
+    out = deserialize(data, format=fmt)
+    assert trees_equal(SAMPLE, out)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_sniffing(fmt):
+    data = serialize(SAMPLE, format=fmt)
+    out = deserialize(data)  # format inferred
+    assert trees_equal(SAMPLE, out)
+
+
+def test_binary_zstd_roundtrip():
+    data = serialize(SAMPLE, format="binary", compress=True)
+    raw = serialize(SAMPLE, format="binary")
+    out = deserialize(data)
+    assert trees_equal(SAMPLE, out)
+    # zeros-heavy payload should compress
+    big = {"z": np.zeros((1024, 1024), np.float32)}
+    assert len(serialize(big, compress=True)) < len(serialize(big)) / 10
+
+
+def test_jax_arrays_become_numpy():
+    import jax.numpy as jnp
+
+    tree = {"x": jnp.ones((4, 4), jnp.bfloat16)}
+    out = deserialize(serialize(tree))
+    assert isinstance(out["x"], np.ndarray)
+    assert str(out["x"].dtype) == "bfloat16"
+    assert np.array_equal(out["x"].astype(np.float32), np.ones((4, 4), np.float32))
+
+
+def test_custom_type_cereal_style():
+    @dataclasses.dataclass
+    class SceneCfg:
+        width: int
+        height: int
+        name: str
+
+    register_custom(SceneCfg)
+    tree = {"cfg": SceneCfg(500, 500, "weekend")}
+    out = deserialize(serialize(tree))
+    assert out["cfg"] == SceneCfg(500, 500, "weekend")
+
+
+def test_unregistered_type_raises():
+    class Opaque:
+        pass
+
+    with pytest.raises(TypeError):
+        serialize({"o": Opaque()})
+
+
+def test_binary_json_is_valid_json():
+    """AWS Lambda requires the payload to be a valid JSON object (paper §5.1)."""
+    doc = json.loads(serialize(SAMPLE, format="binary_json").decode())
+    assert doc["format"] == "binary_json"
+    assert isinstance(doc["payload"], str)
+
+
+def test_structured_json_is_pure_json():
+    doc = json.loads(serialize({"a": np.arange(3)}, format="structured_json"))
+    assert doc["leaves"][0]["data"] == [0, 1, 2]
+
+
+# ------------------------------------------------------ property tests ------
+
+_DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.uint64,
+           np.bool_, np.float16]
+
+leaf_st = st.one_of(
+    st.integers(min_value=-(2**62), max_value=2**62),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    st.booleans(),
+    st.text(max_size=20),
+    st.binary(max_size=20),
+    st.sampled_from(_DTYPES).flatmap(
+        lambda dt: st.integers(0, 3).flatmap(
+            lambda nd: st.lists(st.integers(1, 4), min_size=nd, max_size=nd).map(
+                lambda shape: np.arange(int(np.prod(shape)) if shape else 1)
+                .reshape(shape or ())
+                .astype(dt)
+            )
+        )
+    ),
+)
+
+tree_st = st.recursive(
+    leaf_st | st.none(),
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.dictionaries(st.text(max_size=6), children, max_size=4),
+        st.tuples(children, children),
+    ),
+    max_leaves=12,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(tree=tree_st)
+def test_property_binary_roundtrip(tree):
+    assert trees_equal(tree, deserialize(serialize(tree, format="binary")))
+
+
+@settings(max_examples=30, deadline=None)
+@given(tree=tree_st)
+def test_property_flatten_unflatten_identity(tree):
+    spec, leaves = flatten(tree)
+    assert trees_equal(tree, unflatten(spec, leaves))
+
+
+@settings(max_examples=30, deadline=None)
+@given(tree=tree_st)
+def test_property_binary_json_roundtrip(tree):
+    assert trees_equal(tree, deserialize(serialize(tree, format="binary_json")))
