@@ -11,8 +11,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import FunctionConfig, RemoteFunction
-from repro.dispatch import DEFAULT_LATENCY, Dispatcher
+from repro.cloud import Session
+from repro.dispatch import DEFAULT_LATENCY
 
 
 def run(concurrencies=(1, 10, 50, 100, 400, 800, 1200, 1600, 2000),
@@ -43,21 +43,19 @@ def run(concurrencies=(1, 10, 50, 100, 400, 800, 1200, 1600, 2000),
         "paper_dispatch_rate_per_ms": 10.0,
     }
 
-    # real end-to-end micro-burst through the worker pool (execution is
-    # real, latency accounting modeled)
-    d = Dispatcher()
-    inst = d.create_instance()
-    fn = RemoteFunction(lambda x: x + 1, name="noop",
-                        config=FunctionConfig(memory_mb=256))
-    futs = [inst.dispatch(fn, np.float32(i)) for i in range(64)]
-    inst.wait()
-    lats = inst.modeled_latencies_ms()
-    out["real_burst_64"] = {
-        "median_ms": float(np.median(lats)),
-        "max_ms": float(np.max(lats)),
-        "invocations": inst.cost.invocations,
-    }
-    d.shutdown()
+    # real end-to-end micro-burst on the "sim-aws" backend (execution is
+    # real, every record stamped with modeled client-observed latency)
+    with Session("sim-aws") as sess:
+        noop = sess.function(lambda x: x + 1, name="noop", memory_mb=256)
+        noop.map([(np.float32(i),) for i in range(64)])
+        lats = sess.modeled_latencies_ms()
+        per_record = [r.modeled_latency_ms for r in sess.records]
+        out["real_burst_64"] = {
+            "median_ms": float(np.median(lats)),
+            "max_ms": float(np.max(lats)),
+            "median_per_record_ms": float(np.median(per_record)),
+            "invocations": sess.cost.invocations,
+        }
     return out
 
 

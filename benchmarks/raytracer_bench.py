@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.apps.raytracer import random_scene, render_serial, \
     render_serverless
-from repro.dispatch import DEFAULT_LATENCY, Dispatcher
+from repro.cloud import Session
+from repro.dispatch import DEFAULT_LATENCY
 
 
 def run(width: int = 96, spp: int = 3, tiles=(48, 24, 12)):
@@ -35,14 +36,13 @@ def run(width: int = 96, spp: int = 3, tiles=(48, 24, 12)):
         # each task its true single-worker duration (cloud workers are
         # independent machines), and the latency model supplies the
         # parallel makespan.
-        d = Dispatcher(os_threads=1)
-        img, inst = render_serverless(scene, tile=tile, spp=spp,
-                                      dispatcher=d)
+        sess = Session("threads", os_threads=1)
+        img, _ = render_serverless(scene, tile=tile, spp=spp, session=sess)
         assert np.isfinite(img).all()
-        durs_ms = [r.server_s * 1e3 for r in inst.records]
+        durs_ms = [r.server_s * 1e3 for r in sess.records]
         lats = DEFAULT_LATENCY.simulate_burst(durs_ms)
         makespan_s = max(lats) / 1e3
-        cost = inst.cost
+        cost = sess.cost
         out["tiles"][tile] = {
             "workers": len(durs_ms),
             "mean_abs_err_vs_serial": float(np.abs(img - img_serial).mean()),
@@ -54,9 +54,9 @@ def run(width: int = 96, spp: int = 3, tiles=(48, 24, 12)):
             "gb_seconds": cost.gb_seconds,
             "dollars": cost.dollars,
             "payload_bytes_per_invocation": int(np.mean(
-                [r.payload_bytes for r in inst.records])),
+                [r.payload_bytes for r in sess.records])),
         }
-        d.shutdown()
+        sess.close()
 
     gbs = [v["gb_seconds"] for v in out["tiles"].values()]
     out["claims"] = {

@@ -1,9 +1,11 @@
 """N-Queens with prefix-task offload (paper §5.2, Figs 12/13).
 
-    PYTHONPATH=src python examples/nqueens.py [--n 10] [--p 2]
+    PYTHONPATH=src python examples/nqueens.py [--n 10] [--p 2] \
+        [--backend threads|inline|sim-aws]
 
 Shows the decomposition (longer prefix -> more, smaller, heterogeneous
-tasks), the exactness of the parallel count, and the pay-per-use bill.
+tasks), the exactness of the parallel count, and the pay-per-use bill —
+on any registered backend, with no solver-code changes.
 """
 import argparse
 import sys
@@ -12,12 +14,15 @@ import time
 sys.path.insert(0, "src")
 
 from repro.apps import KNOWN, prefixes, solve_serial, solve_serverless  # noqa: E402
+from repro.cloud import Session, available_backends                     # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=10)
     ap.add_argument("--p", type=int, default=2)
+    ap.add_argument("--backend", default="threads",
+                    choices=available_backends())
     args = ap.parse_args()
 
     t0 = time.perf_counter()
@@ -28,14 +33,15 @@ def main():
 
     for p in (1, args.p):
         t0 = time.perf_counter()
-        total, ntasks, inst = solve_serverless(args.n, p)
-        wall = time.perf_counter() - t0
-        assert total == serial
-        print(f"prefix={p}: {ntasks} tasks, wall {wall:.2f}s "
-              f"(1-core container; modeled cloud makespan "
-              f"{inst.modeled_makespan_ms():.0f} ms), "
-              f"bill {inst.cost.gb_seconds:.2f} GB-s "
-              f"= ${inst.cost.dollars:.6f}")
+        with Session(args.backend) as sess:
+            total, ntasks, _ = solve_serverless(args.n, p, session=sess)
+            wall = time.perf_counter() - t0
+            assert total == serial
+            print(f"prefix={p}: {ntasks} tasks, wall {wall:.2f}s "
+                  f"(1-core container; modeled cloud makespan "
+                  f"{sess.modeled_makespan_ms():.0f} ms), "
+                  f"bill {sess.cost.gb_seconds:.2f} GB-s "
+                  f"= ${sess.cost.dollars:.6f}")
 
 
 if __name__ == "__main__":

@@ -1,44 +1,63 @@
-"""Quickstart — the paper's PI example (Fig 6), start to finish.
+"""Quickstart — the paper's PI example (Fig 6) on the session API.
 
     PYTHONPATH=src python examples/quickstart.py
 
+One source, many targets: the same functions run locally, on real threads,
+or synchronously inline — only the ``cloud.Session(backend)`` line changes.
 A jax-traceable task is deployed as a serverless function (AOT-compiled
-entry point, content-addressed name, binary payloads), dispatched 32 times
-fork-join style, and billed in GB-seconds.
+entry point, content-addressed name, binary payloads), fanned out fork-join
+style, and billed in GB-seconds.
 """
 import sys
 
 sys.path.insert(0, "src")
 
+from repro import cloud                                 # noqa: E402
 from repro.apps import compute_pi                       # noqa: E402
-from repro.core import FunctionConfig, remote           # noqa: E402
-from repro.dispatch import Dispatcher                   # noqa: E402
+
+
+def run(backend: str) -> None:
+    print(f"\n=== backend: {backend} ===")
+    with cloud.Session(backend) as sess:
+        # ---- high-level: the paper's compute_pi workflow on this session
+        pi, _ = compute_pi(n=1_000_000, np_=32, session=sess)
+        print(f"pi ≈ {pi:.5f}")
+
+        # ---- low-level: define and bind your own serverless function
+        @sess.remote(memory_mb=512, serializer="binary")
+        def square_sum(n):
+            import jax.numpy as jnp
+            x = jnp.arange(n, dtype=jnp.float32)
+            return jnp.sum(x * x)
+
+        # single-source: the handle is still a plain local callable
+        print("local call:", float(square_sum(1000)))
+
+        # streaming fork-join: as_completed yields futures as they finish
+        futs = [square_sum.submit(1000 * (i + 1)) for i in range(8)]
+        print("results:", [float(f.result()) for f in cloud.as_completed(futs)])
+
+        # gather resolves the same futures in submit order
+        ordered = cloud.gather(futs)
+        print("gathered (submit order):", [float(r) for r in ordered])
+
+        # per-call overrides chain off the handle (call > handle > function)
+        big = square_sum.options(memory_mb=2048).submit(1_000_000)
+        print("with 2 GiB:", float(big.result()),
+              f"billed at {big.record.memory_gb:.0f} GB")
+
+        print("cost:", sess.cost.summary())
+        print("deployments:", sess.deployment.compile_count,
+              "cache hits:", sess.deployment.cache_hits)
+        print("manifest entries:",
+              sorted({e.human_name
+                      for e in sess.deployment.manifest.entries.values()}))
 
 
 def main():
-    # ---- high-level: the paper's compute_pi workflow
-    pi, inst = compute_pi(n=1_000_000, np_=32)
-    print(f"pi ≈ {pi:.5f}")
-    print("cost:", inst.cost.summary())
-
-    # ---- low-level: define your own serverless function
-    d = Dispatcher()
-    inst = d.create_instance()
-
-    @remote(config=FunctionConfig(memory_mb=512, serializer="binary"))
-    def square_sum(n):
-        import jax.numpy as jnp
-        x = jnp.arange(n, dtype=jnp.float32)
-        return jnp.sum(x * x)
-
-    futs = [inst.dispatch(square_sum, 1000 * (i + 1)) for i in range(8)]
-    inst.wait()
-    print("results:", [float(f.result()) for f in futs])
-    print("deployments:", d.deployment.compile_count,
-          "cache hits:", d.deployment.cache_hits)
-    print("manifest entries:",
-          [e.human_name for e in d.deployment.manifest.entries.values()])
-    d.shutdown()
+    # identical application code on every backend — the single-source claim
+    for backend in ("threads", "inline"):
+        run(backend)
 
 
 if __name__ == "__main__":

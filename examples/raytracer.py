@@ -1,6 +1,7 @@
 """Tiled Monte-Carlo raytracer offload (paper Figs 1/14).
 
-    PYTHONPATH=src python examples/raytracer.py [--size 64] [--spp 2]
+    PYTHONPATH=src python examples/raytracer.py [--size 64] [--spp 2] \
+        [--backend threads|inline|sim-aws]
 
 Renders the same random sphere scene serially and as per-tile serverless
 tasks; writes a PPM you can actually look at, and prints the Fig 14-style
@@ -15,6 +16,7 @@ sys.path.insert(0, "src")
 import numpy as np                                       # noqa: E402
 
 from repro.apps import random_scene, render_serial, render_serverless  # noqa: E402
+from repro.cloud import Session, available_backends      # noqa: E402
 
 
 def write_ppm(path, img):
@@ -28,6 +30,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", type=int, default=64)
     ap.add_argument("--spp", type=int, default=2)
+    ap.add_argument("--backend", default="threads",
+                    choices=available_backends())
     args = ap.parse_args()
 
     scene = random_scene(width=args.size, height=args.size, n_spheres=24)
@@ -38,12 +42,14 @@ def main():
 
     for tile in (args.size // 2, args.size // 4):
         t0 = time.perf_counter()
-        img_s, inst = render_serverless(scene, tile=tile, spp=args.spp)
-        wall = time.perf_counter() - t0
-        print(f"tile {tile}x{tile}: {inst.cost.invocations} tasks, "
-              f"wall {wall:.2f}s (1 core), modeled cloud makespan "
-              f"{inst.modeled_makespan_ms()/1e3:.2f}s, "
-              f"bill {inst.cost.gb_seconds:.2f} GB-s")
+        with Session(args.backend) as sess:
+            img_s, _ = render_serverless(scene, tile=tile, spp=args.spp,
+                                         session=sess)
+            wall = time.perf_counter() - t0
+            print(f"tile {tile}x{tile}: {sess.cost.invocations} tasks, "
+                  f"wall {wall:.2f}s (1 core), modeled cloud makespan "
+                  f"{sess.modeled_makespan_ms()/1e3:.2f}s, "
+                  f"bill {sess.cost.gb_seconds:.2f} GB-s")
         write_ppm(f"render_tile{tile}.ppm", img_s)
     print("wrote render_*.ppm")
 

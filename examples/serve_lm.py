@@ -15,6 +15,7 @@ sys.path.insert(0, "src")
 import jax                                              # noqa: E402
 import numpy as np                                      # noqa: E402
 
+from repro.cloud import Session, available_backends     # noqa: E402
 from repro.configs import get_smoke                     # noqa: E402
 from repro.models import build_model                    # noqa: E402
 from repro.runtime import LMServer, Request             # noqa: E402
@@ -27,12 +28,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--wave", type=int, default=4)
+    ap.add_argument("--backend", default="threads",
+                    choices=available_backends())
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
-    server = LMServer(cfg, params, max_new=args.max_new)
+    session = Session(args.backend)
+    server = LMServer(cfg, params, session=session, max_new=args.max_new)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
@@ -45,6 +49,7 @@ def main():
         print(f"req {i}: {c.tokens}  ({c.cost_gb_s:.4f} GB-s)")
     print(f"{len(comps)} requests in {wall:.2f}s; bill:",
           server.cost_report.summary())
+    session.close()
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import FunctionConfig, RemoteFunction
+from ..cloud import Session, session_scope
 from ..dispatch import Dispatcher
 
 
@@ -88,20 +88,23 @@ def solve_serial(n: int) -> int:
 
 
 def solve_serverless(n: int, p: int,
-                     dispatcher: Dispatcher | None = None):
-    """Offload one task per prefix; sum the counts (paper Figs 12/13)."""
-    d = dispatcher or Dispatcher()
-    inst = d.create_instance()
-    tasks = prefixes(n, p)
-    fn = RemoteFunction(
-        lambda ld, rd, col: count_completions(n, ld, rd, col),
-        name=f"nqueens_{n}",
-        config=FunctionConfig(memory_mb=2048))     # paper: 2 GiB for N-Queens
-    futs = [inst.dispatch(fn, jnp.int32(ld), jnp.int32(rd), jnp.int32(col))
-            for ld, rd, col in tasks]
-    inst.wait()
-    total = sum(int(f.result()) for f in futs)
-    return total, len(tasks), inst
+                     dispatcher: Dispatcher | None = None,
+                     session: Session | None = None):
+    """Offload one task per prefix; sum the counts (paper Figs 12/13).
+
+    The subtree counts are summed as tasks *complete* (streaming
+    fork-join) — the reduction is order-independent, so nothing waits on
+    the heterogeneous stragglers the paper highlights.
+    """
+    with session_scope(session, dispatcher) as sess:
+        tasks = prefixes(n, p)
+        count = sess.function(
+            lambda ld, rd, col: count_completions(n, ld, rd, col),
+            name=f"nqueens_{n}", memory_mb=2048)  # paper: 2 GiB for N-Queens
+        total = sum(int(c) for c in count.map_unordered(
+            [(jnp.int32(ld), jnp.int32(rd), jnp.int32(col))
+             for ld, rd, col in tasks]))
+    return total, len(tasks), sess
 
 
 # ground truth for tests

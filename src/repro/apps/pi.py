@@ -3,15 +3,17 @@
     auto fn = [=] { return pi_estimate(n / np); };
     for (...) cppless::dispatch<config>(aws, fn, result);
 
-Here the same shape: a jax-traceable task closed over its sample count,
-dispatched np_ times, reduced on the host.
+Here the same shape through the session API: a jax-traceable task closed
+over its sample count, bound to a ``cloud.Session``, fanned out ``np_``
+times, reduced on the host.  The backend (threads / inline / sim-aws) is a
+session argument — the application code never changes.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..core import FunctionConfig, RemoteFunction
+from ..cloud import Session, session_scope
 from ..dispatch import Dispatcher
 
 
@@ -25,15 +27,16 @@ def pi_estimate(n: int, seed):
 
 
 def compute_pi(n: int = 1_000_000, np_: int = 32,
-               dispatcher: Dispatcher | None = None) -> float:
-    """Offload np_ estimation tasks; average the results (paper Fig 6)."""
-    d = dispatcher or Dispatcher()
-    inst = d.create_instance()
-    per = n // np_
-    fn = RemoteFunction(lambda seed: pi_estimate(per, seed),
-                        name="pi_estimate",
-                        config=FunctionConfig(memory_mb=512))
-    futs = [inst.dispatch(fn, i) for i in range(np_)]
-    inst.wait()
-    vals = [float(f.result()) for f in futs]
-    return sum(vals) / len(vals), inst
+               dispatcher: Dispatcher | None = None,
+               session: Session | None = None) -> tuple[float, Session]:
+    """Offload np_ estimation tasks; average the results (paper Fig 6).
+
+    Returns ``(pi, session)`` — the session carries cost/records/latency
+    accounting for the run.
+    """
+    with session_scope(session, dispatcher) as sess:
+        per = n // np_
+        estimate = sess.function(lambda seed: pi_estimate(per, seed),
+                                 name="pi_estimate", memory_mb=512)
+        vals = [float(v) for v in estimate.map(range(np_))]
+    return sum(vals) / len(vals), sess

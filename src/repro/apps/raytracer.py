@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import FunctionConfig, RemoteFunction
+from ..cloud import Session, as_completed, session_scope
 from ..dispatch import Dispatcher
 
 
@@ -174,28 +174,32 @@ def render_serial(scene: Scene, spp: int = 4):
 
 
 def render_serverless(scene: Scene, tile: int = 32, spp: int = 4,
-                      dispatcher: Dispatcher | None = None):
-    """One serverless task per tile (paper Fig 1); returns (img, inst)."""
-    d = dispatcher or Dispatcher()
-    inst = d.create_instance()
-    arrays = tuple(np.asarray(a) for a in
-                   (scene.center, scene.radius, scene.albedo, scene.fuzz))
-    cam = camera(scene)
-    w, h = scene.width, scene.height
+                      dispatcher: Dispatcher | None = None,
+                      session: Session | None = None):
+    """One serverless task per tile (paper Fig 1); returns (img, session).
 
-    def task(x0, y0, seed):
-        return render_tile(tuple(jnp.asarray(a) for a in arrays), cam,
-                           x0, y0, tile, w, h, spp, seed)
+    Tiles are blitted into the framebuffer in *completion* order
+    (streaming fork-join): fast sky tiles land while the dense-geometry
+    stragglers of Fig 1 are still tracing.
+    """
+    with session_scope(session, dispatcher) as sess:
+        arrays = tuple(np.asarray(a) for a in
+                       (scene.center, scene.radius, scene.albedo, scene.fuzz))
+        cam = camera(scene)
+        w, h = scene.width, scene.height
 
-    fn = RemoteFunction(task, name=f"rt_tile{tile}",
-                        config=FunctionConfig(memory_mb=1024))
-    coords = [(x, y) for y in range(0, h, tile) for x in range(0, w, tile)]
-    futs = [inst.dispatch(fn, jnp.int32(x), jnp.int32(y),
-                          jnp.int32(i))
-            for i, (x, y) in enumerate(coords)]
-    inst.wait()
-    img = np.zeros((h, w, 3), np.float32)
-    for (x, y), f in zip(coords, futs):
-        t = np.asarray(f.result())
-        img[y:y + tile, x:x + tile] = t[: h - y, : w - x]
-    return img, inst
+        def task(x0, y0, seed):
+            return render_tile(tuple(jnp.asarray(a) for a in arrays), cam,
+                               x0, y0, tile, w, h, spp, seed)
+
+        render = sess.function(task, name=f"rt_tile{tile}", memory_mb=1024)
+        coords = [(x, y) for y in range(0, h, tile)
+                  for x in range(0, w, tile)]
+        futs = {render.submit(jnp.int32(x), jnp.int32(y), jnp.int32(i)):
+                (x, y) for i, (x, y) in enumerate(coords)}
+        img = np.zeros((h, w, 3), np.float32)
+        for f in as_completed(futs):
+            x, y = futs[f]
+            t = np.asarray(f.result())
+            img[y:y + tile, x:x + tile] = t[: h - y, : w - x]
+    return img, sess

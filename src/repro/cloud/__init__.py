@@ -1,0 +1,24 @@
+"""repro.cloud — the single-source serverless API (see API.md).
+
+    from repro import cloud
+
+    with cloud.Session("threads") as sess:
+        f = sess.function(my_fn, memory_mb=512)
+        f(x)              # local call — the single-source property
+        f.submit(x)       # one serverless invocation -> future
+        f.map(items)      # ordered fork-join
+        f.map_unordered(items)                  # streaming fork-join
+        cloud.gather(futs, return_exceptions=True)
+"""
+from ..dispatch.backends import (Backend, BackendCapabilities,
+                                 available_backends, register_backend,
+                                 resolve_backend)
+from ..dispatch.futures import InvocationFuture, as_completed, gather
+from .session import BoundFunction, Session, session_for, session_scope
+
+__all__ = [
+    "Session", "BoundFunction", "session_for", "session_scope",
+    "as_completed", "gather", "InvocationFuture",
+    "Backend", "BackendCapabilities", "register_backend",
+    "resolve_backend", "available_backends",
+]

@@ -1,0 +1,294 @@
+"""``cloud.Session`` — the single-source serverless session (ISSUE 1).
+
+The paper's promise is that one function object runs locally or in the
+cloud with no per-backend code changes (Fig 1).  A ``Session`` is where
+that promise lives: it owns a deployment, an execution backend (selected
+by registry name — ``"threads"``, ``"inline"``, ``"sim-aws"``, …), and the
+cost ledger, and it *binds* remote functions into handles::
+
+    with cloud.Session("threads") as sess:
+
+        @sess.remote(memory_mb=512)
+        def square_sum(n):
+            x = jnp.arange(n, dtype=jnp.float32)
+            return jnp.sum(x * x)
+
+        square_sum(8)                      # plain local call (single-source)
+        fut = square_sum.submit(1_000)     # one serverless invocation
+        outs = square_sum.map(range(8))    # ordered fork-join
+        for r in square_sum.map_unordered(range(8)):
+            ...                            # streaming, completion order
+        big = square_sum.options(memory_mb=2048).submit(10_000_000)
+
+    print(sess.cost.summary())             # GB-seconds, $, cold starts
+
+Switching ``"threads"`` → ``"inline"`` → ``"sim-aws"`` touches only the
+``Session(...)`` line — never the functions, never the call sites.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Iterable, Iterator, Sequence
+
+from ..core.config import FunctionConfig
+from ..core.deploy import Deployment
+from ..core.function import RemoteFunction
+from ..dispatch.backends import Backend
+from ..dispatch.dispatcher import Dispatcher, DispatcherInstance
+from ..dispatch.futures import InvocationFuture, as_completed
+from ..dispatch.latency_model import DEFAULT_LATENCY, LatencyModel
+from ..dispatch.workers import FaultPlan
+
+_CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(FunctionConfig))
+
+
+def _override(cfg: FunctionConfig, overrides: dict) -> FunctionConfig:
+    unknown = set(overrides) - _CONFIG_FIELDS
+    if unknown:
+        raise TypeError(
+            f"unknown function option(s) {sorted(unknown)}; "
+            f"valid: {sorted(_CONFIG_FIELDS)}")
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def _as_args(item: Any) -> tuple:
+    """``map`` items may be pre-built argument tuples or single arguments."""
+    return item if isinstance(item, tuple) else (item,)
+
+
+class BoundFunction:
+    """A remote function bound to a session — the Ray-style handle.
+
+    Carries its own resolved :class:`FunctionConfig`; ``options()`` returns
+    a derived handle, so override precedence is naturally
+    *call (latest ``options``) > handle > function config*.
+    """
+
+    def __init__(self, session: "Session", rf: RemoteFunction,
+                 config: FunctionConfig):
+        self._session = session
+        self._rf = rf
+        self.config = config
+
+    @property
+    def name(self) -> str:
+        return self._rf.human_name
+
+    # -- single-source: the local call path is untouched --------------------
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self._rf.fn(*args, **kwargs)
+
+    # -- per-call overrides --------------------------------------------------
+    def options(self, **overrides: Any) -> "BoundFunction":
+        """Chainable per-call overrides: ``f.options(memory_mb=512,
+        serializer="binary_json").submit(x)``.  Any ``FunctionConfig``
+        field is accepted; later calls win."""
+        return BoundFunction(self._session, self._rf,
+                             _override(self.config, overrides))
+
+    # -- remote invocation ---------------------------------------------------
+    def submit(self, *args: Any, **kwargs: Any) -> InvocationFuture:
+        """Fire one serverless invocation; returns a future."""
+        return self._session.dispatch(self._rf, *args,
+                                      config=self.config, **kwargs)
+
+    def map(self, items: Iterable[Any], *,
+            hedge_quantile: float | None = None) -> list[Any]:
+        """Ordered fork-join over ``items`` (each an args-tuple or a single
+        argument), with optional straggler hedging."""
+        arglists = [_as_args(i) for i in items]
+        return self._session.map(self._rf, arglists, config=self.config,
+                                 hedge_quantile=hedge_quantile)
+
+    def map_unordered(self, items: Iterable[Any], *,
+                      timeout: float | None = None) -> Iterator[Any]:
+        """Streaming fork-join: yield results in *completion* order.
+
+        Replaces the blocking ordered-only map when the reduction is
+        order-independent — consumers start folding while stragglers run.
+        Tasks are submitted eagerly (the fork happens at the call, like
+        ``submit``/``map``); only the result drain is lazy.
+        """
+        futs = [self.submit(*_as_args(i)) for i in items]
+
+        def drain():
+            for fut in as_completed(futs, timeout=timeout):
+                yield fut.result()
+        return drain()
+
+    def __repr__(self) -> str:
+        return (f"BoundFunction({self.name!r}, "
+                f"backend={type(self._session.backend).__name__}, "
+                f"memory_mb={self.config.memory_mb})")
+
+
+class Session:
+    """One serverless 'cloud' — deployment + backend + cost accounting.
+
+    Context manager; on exit the backend is shut down — unless the session
+    wraps a caller-owned resource (an existing ``Dispatcher`` or a live
+    ``Backend`` instance, both possibly shared across sessions), which the
+    caller keeps responsibility for.  A session is also an invocation
+    namespace: everything submitted through it lands in ``session.cost`` /
+    ``session.records``.
+    """
+
+    def __init__(self, backend: str | Backend = "threads", *,
+                 deployment: Deployment | None = None,
+                 client: str = "http2_pool",
+                 latency: LatencyModel = DEFAULT_LATENCY,
+                 max_concurrency: int = 1000, os_threads: int = 16,
+                 fault_plan: FaultPlan | None = None,
+                 manifest_path: str | None = None,
+                 dispatcher: Dispatcher | None = None):
+        if dispatcher is not None:
+            self._dispatcher = dispatcher
+            self._owns_dispatcher = False
+        else:
+            self._dispatcher = Dispatcher(
+                backend=backend, deployment=deployment, client=client,
+                latency=latency, max_concurrency=max_concurrency,
+                os_threads=os_threads, fault_plan=fault_plan,
+                manifest_path=manifest_path)
+            # a live Backend instance is caller-owned (it may be shared
+            # across sessions); names/classes/factories produce one for us
+            self._owns_dispatcher = (
+                isinstance(backend, (str, type))
+                or not isinstance(backend, Backend))
+        self._inst: DispatcherInstance = self._dispatcher.create_instance()
+        self._closed = False
+
+    @classmethod
+    def from_dispatcher(cls, dispatcher: Dispatcher) -> "Session":
+        """Wrap an existing dispatcher (shared fleet, caller-owned)."""
+        return cls(dispatcher=dispatcher)
+
+    # ------------------------------------------------------------- binding
+    def function(self, fn: Callable | RemoteFunction, *,
+                 name: str | None = None, jax_traceable: bool | None = None,
+                 **overrides: Any) -> BoundFunction:
+        """Bind ``fn`` to this session; keyword overrides are
+        ``FunctionConfig`` fields (handle-level config)."""
+        if isinstance(fn, RemoteFunction):
+            if name is not None or jax_traceable is not None:
+                raise TypeError(
+                    "name/jax_traceable are fixed on an existing "
+                    "RemoteFunction; set them at RemoteFunction creation")
+            rf = fn
+        else:
+            rf = RemoteFunction(
+                fn, name=name,
+                jax_traceable=True if jax_traceable is None else jax_traceable)
+        return BoundFunction(self, rf, _override(rf.config, overrides))
+
+    def remote(self, fn: Callable | None = None, *, name: str | None = None,
+               jax_traceable: bool | None = None, **overrides: Any):
+        """Decorator form: ``@sess.remote`` or
+        ``@sess.remote(memory_mb=512, serializer="binary")``."""
+        def wrap(f):
+            return self.function(f, name=name, jax_traceable=jax_traceable,
+                                 **overrides)
+        return wrap(fn) if fn is not None else wrap
+
+    # ----------------------------------------------- paper-style namespace
+    # (these make a Session a drop-in invocation namespace for the
+    #  paper-style ``dispatch(x, fn)`` / ``wait(x, n)`` module shim)
+    def dispatch(self, fn, *args: Any, config: FunctionConfig | None = None,
+                 **kwargs: Any) -> InvocationFuture:
+        if self._closed:
+            raise RuntimeError("session is closed; submissions would never "
+                               "complete on a shut-down backend")
+        return self._inst.dispatch(fn, *args, config=config, **kwargs)
+
+    def map(self, fn, arglists: Sequence[tuple],
+            config: FunctionConfig | None = None,
+            hedge_quantile: float | None = None) -> list[Any]:
+        if self._closed:
+            raise RuntimeError("session is closed; submissions would never "
+                               "complete on a shut-down backend")
+        return self._inst.map(fn, arglists, config=config,
+                              hedge_quantile=hedge_quantile)
+
+    def wait(self, n: int | None = None, timeout: float = 300.0) -> None:
+        self._inst.wait(n, timeout=timeout)
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def dispatcher(self) -> Dispatcher:
+        return self._dispatcher
+
+    @property
+    def backend(self) -> Backend:
+        return self._dispatcher.backend
+
+    @property
+    def deployment(self) -> Deployment:
+        return self._dispatcher.deployment
+
+    # ---------------------------------------------------------- accounting
+    @property
+    def cost(self):
+        return self._inst.cost
+
+    @property
+    def records(self):
+        return self._inst.records
+
+    def modeled_latencies_ms(self) -> list[float]:
+        return self._inst.modeled_latencies_ms()
+
+    def modeled_makespan_ms(self) -> float:
+        return self._inst.modeled_makespan_ms()
+
+    # ------------------------------------------------------------ lifetime
+    def close(self) -> None:
+        if not self._closed and self._owns_dispatcher:
+            self._dispatcher.shutdown()
+        self._closed = True
+
+    shutdown = close
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (f"Session(backend={type(self.backend).__name__}, "
+                f"invocations={self.cost.invocations}, "
+                f"closed={self._closed})")
+
+
+def session_for(session: Session | None = None,
+                dispatcher: Dispatcher | None = None,
+                backend: str | Backend = "threads") -> Session:
+    """Resolve the session an app-level helper should run in.
+
+    Accepts an explicit session, a legacy dispatcher (wrapped), or neither
+    (fresh session on ``backend``) — keeps ``compute_pi``-style helpers
+    source-compatible across both API generations.
+    """
+    if session is not None:
+        return session
+    if dispatcher is not None:
+        return Session.from_dispatcher(dispatcher)
+    return Session(backend)
+
+
+@contextlib.contextmanager
+def session_scope(session: Session | None = None,
+                  dispatcher: Dispatcher | None = None,
+                  backend: str | Backend = "threads"):
+    """``session_for`` with helper-side ownership: a session the helper
+    created itself is closed on exit (even on error; cost/records stay
+    readable afterwards), while a caller-provided session/dispatcher is
+    left untouched."""
+    sess = session_for(session, dispatcher, backend)
+    owned = session is None and dispatcher is None
+    try:
+        yield sess
+    finally:
+        if owned:
+            sess.close()

@@ -40,13 +40,20 @@ class Bridge:
     # executor(args, kwargs, captures) -> result; already specialized/compiled.
     executor: Callable[..., Any]
     kind: str = "aot_xla"  # or "generic_worker" for non-traceable tasks
+    # Last-completed stats, best-effort observability only: one bridge may be
+    # entered concurrently (warm sandboxes of the same function), so per-
+    # invocation accounting must use the stats *returned* by ``entry``.
     last_stats: EntryStats = field(default_factory=EntryStats)
 
     def pack(self, args: tuple, kwargs: dict, captures: dict) -> bytes:
         return serialize((args, kwargs, captures), format=self.config.serializer)
 
-    def entry(self, payload: bytes) -> bytes:
-        """The remote main(): bytes in, bytes out (paper Fig 4)."""
+    def entry(self, payload: bytes) -> tuple[bytes, EntryStats]:
+        """The remote main(): bytes in, (bytes, stats) out (paper Fig 4).
+
+        Stats are returned (not only stored) so concurrent invocations of
+        the same deployed function cannot corrupt each other's accounting.
+        """
         stats = EntryStats()
         t0 = time.perf_counter()
         args, kwargs, captures = deserialize(payload)
@@ -59,7 +66,7 @@ class Bridge:
         stats.deserialize_s, stats.compute_s, stats.serialize_s = (
             t1 - t0, t2 - t1, t3 - t2)
         self.last_stats = stats
-        return blob
+        return blob, stats
 
     def unpack_result(self, blob: bytes) -> Any:
         return deserialize(blob, format=self.config.serializer)

@@ -9,6 +9,7 @@ deploy of an unchanged function is a cache hit — no recompilation.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -52,8 +53,17 @@ class Deployment:
         captures = data_captures(rf.fn)
         payload = (example_args, example_kwargs, captures)
 
-        name = rf.stable_name(*example_args, salt=cfg.serializer,
-                              **example_kwargs)
+        # Artifact/billing config is part of the function's type (Cppless:
+        # compile-time template metadata), so it salts the deployed name:
+        # same code with different memory/serializer is a *different* cloud
+        # function — this is what makes `.options()` overrides take effect.
+        # Pure client policy (timeout, retries, hedging) travels with each
+        # invocation instead, so overriding it never forces a redeploy.
+        cfg_d = cfg.to_json()
+        salt = json.dumps({k: cfg_d[k] for k in
+                           ("memory_mb", "ephemeral_mb", "serializer")},
+                          sort_keys=True)
+        name = rf.stable_name(*example_args, salt=salt, **example_kwargs)
         if name in self._functions:
             self.cache_hits += 1          # unchanged code → no redeploy
             return self._functions[name]

@@ -1,12 +1,19 @@
+from .backends import (Backend, InlineBackend, SimAWSBackend, ThreadsBackend,
+                       available_backends, register_backend, resolve_backend)
 from .cost import PRICE_PER_GB_S, PRICE_PER_REQUEST, CostReport
 from .dispatcher import Dispatcher, DispatcherInstance, dispatch, wait
-from .futures import Invocation, InvocationFuture, InvocationRecord
+from .futures import (Invocation, InvocationFuture, InvocationRecord,
+                      as_completed, gather)
 from .latency_model import DEFAULT_LATENCY, LatencyModel
-from .workers import FaultPlan, WorkerCrash, WorkerPool
+from .workers import (BackendCapabilities, FaultPlan, WorkerCrash,
+                      WorkerPool)
 
 __all__ = [
     "Dispatcher", "DispatcherInstance", "dispatch", "wait", "CostReport",
     "InvocationFuture", "InvocationRecord", "Invocation", "LatencyModel",
     "DEFAULT_LATENCY", "WorkerPool", "WorkerCrash", "FaultPlan",
     "PRICE_PER_GB_S", "PRICE_PER_REQUEST",
+    "Backend", "BackendCapabilities", "ThreadsBackend", "InlineBackend",
+    "SimAWSBackend", "register_backend", "resolve_backend",
+    "available_backends", "as_completed", "gather",
 ]

@@ -1,0 +1,188 @@
+"""Pluggable execution backends behind the dispatcher (API redesign, PR 1).
+
+Cppless's promise is that *switching backends never touches application
+code* (paper §4.1: one dispatcher type per cloud).  Here that boundary is an
+explicit protocol: anything with ``submit / scale_to / drain_warm /
+shutdown`` plus ``capabilities`` can stand in for the FaaS fleet, and a
+string registry lets ``Dispatcher(backend="...")`` / ``cloud.Session("...")``
+select one without importing it.
+
+Built-in backends:
+
+* ``"threads"``  — today's elastic ``WorkerPool`` (real OS threads, warm
+                   sandbox reuse, fault injection).
+* ``"inline"``   — synchronous, zero-thread execution on the caller's
+                   thread; deterministic, ideal for tests and debugging.
+* ``"sim-aws"``  — threads plus the calibrated ``LatencyModel`` composed in:
+                   every record gets a modeled client-observed latency
+                   (cold start + RTT + congestion), so cloud-shaped numbers
+                   come out of ordinary runs.
+
+Third-party backends register with ``register_backend("name")`` — the
+ROADMAP directions (process-pool, remote-HTTP) drop in here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol, runtime_checkable
+
+from .futures import Invocation
+from .latency_model import DEFAULT_LATENCY, LatencyModel
+from .workers import BackendCapabilities, FaultPlan, WorkerPool
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The execution-backend contract the dispatcher programs against."""
+
+    capabilities: BackendCapabilities
+
+    def submit(self, inv: Invocation) -> None:
+        """Accept one invocation; deliver completion via the future /
+        ``inv.on_complete`` (may happen synchronously)."""
+
+    def scale_to(self, os_threads: int) -> None:
+        """Elastic scale-out of real executors (no-op where meaningless)."""
+
+    def drain_warm(self, function_name: str | None = None) -> int:
+        """Scale-in: drop warm sandboxes; returns how many were dropped."""
+
+    def shutdown(self) -> None:
+        """Stop accepting work and release executors."""
+
+
+# ------------------------------------------------------------- registry ----
+
+_REGISTRY: dict[str, Callable[..., Backend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., Backend] | None = None):
+    """Register a backend factory under ``name`` (usable as a decorator).
+
+    Factories are called with the dispatcher's standard keyword set
+    (``max_concurrency, os_threads, fault_plan, latency, client``) and must
+    tolerate extras (accept ``**_``).
+    """
+    def _register(f):
+        _REGISTRY[name] = f
+        return f
+    return _register(factory) if factory is not None else _register
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(spec: str | Backend | Callable[..., Backend],
+                    **opts: Any) -> Backend:
+    """Turn a backend spec into a live backend.
+
+    ``spec`` may be a registry name, an already-constructed backend
+    (returned as-is), or a factory callable.
+    """
+    if isinstance(spec, str):
+        try:
+            factory = _REGISTRY[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {spec!r}; available: "
+                f"{', '.join(available_backends())}") from None
+        return factory(**opts)
+    if isinstance(spec, type):               # backend class → construct it
+        return spec(**opts)
+    if isinstance(spec, Backend):            # structural check: live backend
+        return spec
+    if callable(spec):
+        return spec(**opts)
+    raise TypeError(f"backend spec must be a name, Backend, or factory; "
+                    f"got {type(spec).__name__}")
+
+
+# ------------------------------------------------------------- builtins ----
+
+class InlineBackend(WorkerPool):
+    """Synchronous zero-thread backend: ``submit`` runs the task in place.
+
+    Keeps the full sandbox simulation (cold/warm accounting, fault
+    injection, retry/hedging policy via ``on_complete``) but with
+    deterministic caller-thread execution — the debugger-friendly mode.
+    """
+
+    capabilities = BackendCapabilities(concurrent=False, warm_reuse=True,
+                                       fault_injection=True)
+
+    def __init__(self, *, max_concurrency: int = 1000,
+                 fault_plan: FaultPlan | None = None, **_):
+        super().__init__(max_concurrency=max_concurrency, os_threads=0,
+                         fault_plan=fault_plan)
+
+    def submit(self, inv: Invocation) -> None:
+        if inv.future.done():               # hedged sibling already won
+            return
+        try:
+            self._execute(inv)              # retries recurse through submit
+        except BaseException as e:          # executor bug must not propagate
+            inv.future.set_error(e)
+
+    def scale_to(self, os_threads: int) -> None:
+        pass                                # there is nothing to scale
+
+
+class SimAWSBackend(WorkerPool):
+    """Threads backend with the cloud-client model composed in.
+
+    Execution is real (inherited worker pool + ``FaultPlan``); on every
+    completion the calibrated ``LatencyModel`` stamps the record with the
+    client-observed latency an AWS deployment would see: per-invoke RTT +
+    server time + cold-start penalty + congestion for the current in-flight
+    load.  This is the backend benchmarks use to report cloud-shaped
+    latencies from container runs.
+    """
+
+    capabilities = BackendCapabilities(concurrent=True, warm_reuse=True,
+                                       fault_injection=True,
+                                       models_latency=True)
+
+    def __init__(self, *, max_concurrency: int = 1000, os_threads: int = 16,
+                 fault_plan: FaultPlan | None = None,
+                 latency: LatencyModel = DEFAULT_LATENCY,
+                 client: str = "http2_pool", **_):
+        super().__init__(max_concurrency=max_concurrency,
+                         os_threads=os_threads, fault_plan=fault_plan)
+        self.latency = latency
+        self.client = client
+        self._inflight = 0
+
+    def submit(self, inv: Invocation) -> None:
+        with self._lock:
+            self._inflight += 1
+        super().submit(inv)
+
+    def _skipped(self, inv) -> None:
+        with self._lock:
+            self._inflight -= 1
+
+    def _post_execute(self, inv, rec, ok: bool) -> None:
+        with self._lock:
+            inflight = self._inflight
+            self._inflight -= 1
+        m = self.latency
+        rec.modeled_latency_ms = (
+            m.per_invoke_overhead_ms(self.client)
+            + rec.server_s * 1000.0
+            + (m.cold_start_ms if rec.cold_start else 0.0)
+            + m.congestion_ms_per_inflight
+            * min(inflight, m.capacity(self.client)))
+
+
+@register_backend("threads")
+def _threads_backend(*, max_concurrency: int = 1000, os_threads: int = 16,
+                     fault_plan: FaultPlan | None = None, **_) -> WorkerPool:
+    return WorkerPool(max_concurrency=max_concurrency, os_threads=os_threads,
+                      fault_plan=fault_plan)
+
+
+register_backend("inline", InlineBackend)
+register_backend("sim-aws", SimAWSBackend)
+
+# the "threads" backend IS the worker pool — exported under both names
+ThreadsBackend = WorkerPool

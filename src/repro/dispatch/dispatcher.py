@@ -10,17 +10,24 @@ Paper user model::
 
 Here::
 
-    disp = Dispatcher(client="http2_pool")
+    disp = Dispatcher(backend="threads", client="http2_pool")
     inst = disp.create_instance()
     futs = [inst.dispatch(fn) for _ in range(np_)]
     inst.wait()
     results = [f.result() for f in futs]
 
-Dispatchers encapsulate one "cloud" (deployment + worker pool + client model)
-so switching backends never touches application code.  Beyond the paper, the
-dispatcher owns *fault tolerance* (idempotent retry on sandbox loss) and
-*straggler mitigation* (quantile-triggered hedged backups), both enabled by
-the serverless statelessness contract.
+Dispatchers encapsulate one "cloud" (deployment + execution backend + client
+model) so switching backends never touches application code: the execution
+strategy is a pluggable ``Backend`` (see ``backends.py``) selected by name —
+``"threads"``, ``"inline"``, ``"sim-aws"``, or anything registered.  The
+dispatcher itself is a thin *policy* layer: it owns fault tolerance
+(idempotent retry on sandbox loss) and straggler mitigation (quantile-
+triggered hedged backups), both enabled by the serverless statelessness
+contract, while the backend owns execution.
+
+Most application code should use the higher-level ``repro.cloud.Session``
+facade, which binds remote functions to a dispatcher and adds streaming
+fork-join (``map_unordered`` / ``as_completed`` / ``gather``).
 """
 from __future__ import annotations
 
@@ -30,16 +37,18 @@ from typing import Any, Callable, Sequence
 from ..core.config import DEFAULT_CONFIG, FunctionConfig
 from ..core.deploy import DeployedFunction, Deployment
 from ..core.function import RemoteFunction, data_captures
+from .backends import Backend, resolve_backend
 from .cost import CostReport
 from .futures import Invocation, InvocationFuture, InvocationRecord
 from .latency_model import DEFAULT_LATENCY, LatencyModel
-from .workers import FaultPlan, WorkerCrash, WorkerPool
+from .workers import FaultPlan, WorkerCrash
 
 
 class Dispatcher:
-    """One cloud backend: deployment + elastic worker fleet + client model."""
+    """One cloud: deployment + pluggable execution backend + client model."""
 
-    def __init__(self, *, deployment: Deployment | None = None,
+    def __init__(self, *, backend: str | Backend = "threads",
+                 deployment: Deployment | None = None,
                  client: str = "http2_pool",
                  latency: LatencyModel = DEFAULT_LATENCY,
                  max_concurrency: int = 1000, os_threads: int = 16,
@@ -49,9 +58,15 @@ class Dispatcher:
         self.client = client
         self.latency = latency
         self.max_concurrency = max_concurrency
-        self.pool = WorkerPool(max_concurrency=max_concurrency,
-                               os_threads=os_threads, fault_plan=fault_plan)
+        self.backend = resolve_backend(
+            backend, max_concurrency=max_concurrency, os_threads=os_threads,
+            fault_plan=fault_plan, latency=latency, client=client)
         self._instances: list[DispatcherInstance] = []
+
+    @property
+    def pool(self) -> Backend:
+        """Legacy alias for the execution backend."""
+        return self.backend
 
     def create_instance(self) -> "DispatcherInstance":
         inst = DispatcherInstance(self)
@@ -59,7 +74,7 @@ class Dispatcher:
         return inst
 
     def shutdown(self) -> None:
-        self.pool.shutdown()
+        self.backend.shutdown()
 
 
 class DispatcherInstance:
@@ -91,8 +106,9 @@ class DispatcherInstance:
             self._pending.add(task_id)
         fut = InvocationFuture(task_id)
         inv = Invocation(task_id=task_id, deployed=deployed, payload=payload,
-                         future=fut, on_complete=self._on_complete)
-        self.d.pool.submit(inv)
+                         future=fut, config=self._resolve_config(fn, config),
+                         on_complete=self._on_complete)
+        self.d.backend.submit(inv)
         return fut
 
     def map(self, fn: Callable | RemoteFunction, arglists: Sequence[tuple],
@@ -106,7 +122,8 @@ class DispatcherInstance:
         """
         futs = [self.dispatch(fn, *a, config=config) for a in arglists]
         cfg = self._resolve_config(fn, config)
-        hq = hedge_quantile or cfg.hedge_after_quantile
+        hq = (hedge_quantile if hedge_quantile is not None
+              else cfg.hedge_after_quantile)
         if hq is not None and len(futs) > 1:
             self._hedge(fn, arglists, futs, cfg, hq)
         return [f.result(timeout=cfg.timeout_s) for f in futs]
@@ -143,26 +160,31 @@ class DispatcherInstance:
 
     def _on_complete(self, inv: Invocation, ok: bool, value,
                      rec: InvocationRecord) -> None:
-        cfg = inv.deployed.config
+        cfg = inv.config or inv.deployed.config
         if not ok and isinstance(value, WorkerCrash) and \
                 inv.attempt <= cfg.max_retries:
             # fault tolerance: stateless task → resubmit, same payload
             retry = Invocation(task_id=inv.task_id, deployed=inv.deployed,
                                payload=inv.payload, future=inv.future,
                                attempt=inv.attempt + 1, is_hedge=inv.is_hedge,
-                               on_complete=self._on_complete)
-            self.d.pool.submit(retry)
+                               config=inv.config, on_complete=self._on_complete)
+            self.d.backend.submit(retry)
             return
-        first = not inv.future.done()
+        # claim → record → resolve → unblock wait(): exactly one of a hedge
+        # pair wins the claim, and accounting lands BEFORE result() waiters
+        # wake — callers joining via map()/gather() must see complete
+        # cost/records, not only wait()-joiners (who synchronize on
+        # _pending, discarded last so wait() implies resolved futures).
+        if not inv.future.claim():
+            return                       # hedged sibling already completed
+        self._record(rec)
         if ok:
             inv.future.set_result(value, rec)
         else:
             inv.future.set_error(value, rec)
-        if first:
-            self._record(rec)
-            with self._cv:
-                self._pending.discard(inv.task_id)
-                self._cv.notify_all()
+        with self._cv:
+            self._pending.discard(inv.task_id)
+            self._cv.notify_all()
 
     def _record(self, rec: InvocationRecord | None) -> None:
         if rec is None:
@@ -189,8 +211,9 @@ class DispatcherInstance:
                 payload = deployed.bridge.pack(tuple(a), {}, captures)
                 backup = Invocation(
                     task_id=f.task_id, deployed=deployed, payload=payload,
-                    future=f, is_hedge=True, on_complete=self._on_complete)
-                self.d.pool.submit(backup)
+                    future=f, is_hedge=True, config=cfg,
+                    on_complete=self._on_complete)
+                self.d.backend.submit(backup)
 
     # ------------------------------------------------------------- metrics
     def modeled_latencies_ms(self) -> list[float]:
@@ -204,13 +227,16 @@ class DispatcherInstance:
 
 
 # --------------------------------------------------------- paper-style API --
+# Thin compatibility shim: ``instance`` is any invocation namespace — a
+# ``DispatcherInstance`` (this module) or a ``repro.cloud.Session`` (the
+# redesigned API) — both expose ``dispatch``/``wait``.
 
-def dispatch(instance: DispatcherInstance, fn, *args,
+def dispatch(instance, fn, *args,
              config: FunctionConfig | None = None) -> InvocationFuture:
     """``cppless::dispatch<config>(aws, fn, result)`` analogue."""
     return instance.dispatch(fn, *args, config=config)
 
 
-def wait(instance: DispatcherInstance, n: int | None = None) -> None:
+def wait(instance, n: int | None = None) -> None:
     """``cppless::wait(aws, n)`` analogue."""
     instance.wait(n)

@@ -1,9 +1,16 @@
-"""Invocation futures and per-invocation records."""
+"""Invocation futures, per-invocation records, and streaming fork-join.
+
+``as_completed`` / ``gather`` are the composition primitives of the
+session API (ISSUE 1): results stream in completion order instead of
+blocking on submit order, and partial failure is a policy, not a crash.
+"""
 from __future__ import annotations
 
+import queue
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Iterable, Iterator, Sequence
 
 
 @dataclass
@@ -45,32 +52,58 @@ class InvocationFuture:
         self.record: InvocationRecord | None = None
         self._callbacks: list[Callable[["InvocationFuture"], None]] = []
         self._lock = threading.Lock()
+        self._claimed = False
 
     def done(self) -> bool:
         return self._event.is_set()
 
-    def set_result(self, value: Any, record: InvocationRecord) -> None:
+    def claim(self) -> bool:
+        """Atomically claim the right to complete this future.
+
+        Exactly one completion (original, retry, or hedged backup) wins.
+        The winner may then do pre-resolution bookkeeping (cost records)
+        *before* calling ``set_result``/``set_error`` — guaranteeing the
+        accounting is visible by the time ``result()`` waiters wake.
+        """
+        with self._lock:
+            if self._claimed or self._event.is_set():
+                return False
+            self._claimed = True
+            return True
+
+    def set_result(self, value: Any, record: InvocationRecord) -> bool:
+        """Returns True iff this call won the write race (hedging: first
+        writer wins) — the atomic signal completion policy keys off."""
         with self._lock:
             if self._event.is_set():
-                return                      # hedging: first writer wins
+                return False
             self._result = value
             self.record = record
             self._event.set()
             callbacks = list(self._callbacks)
-        for cb in callbacks:
-            cb(self)
+        self._run_callbacks(callbacks)
+        return True
 
     def set_error(self, err: BaseException,
-                  record: InvocationRecord | None = None) -> None:
+                  record: InvocationRecord | None = None) -> bool:
         with self._lock:
             if self._event.is_set():
-                return
+                return False
             self._error = err
             self.record = record
             self._event.set()
             callbacks = list(self._callbacks)
+        self._run_callbacks(callbacks)
+        return True
+
+    def _run_callbacks(self, callbacks) -> None:
         for cb in callbacks:
-            cb(self)
+            try:
+                cb(self)
+            except Exception:
+                # a user callback bug must not corrupt the completion flow
+                # (double finish, negative in-flight counts, hung wait())
+                pass
 
     def add_done_callback(self, cb: Callable[["InvocationFuture"], None]) -> None:
         run_now = False
@@ -80,7 +113,7 @@ class InvocationFuture:
             else:
                 self._callbacks.append(cb)
         if run_now:
-            cb(self)
+            self._run_callbacks([cb])
 
     def result(self, timeout: float | None = None) -> Any:
         if not self._event.wait(timeout):
@@ -88,6 +121,65 @@ class InvocationFuture:
         if self._error is not None:
             raise self._error
         return self._result
+
+
+def as_completed(futs: Iterable[InvocationFuture],
+                 timeout: float | None = None) -> Iterator[InvocationFuture]:
+    """Yield futures as they complete, earliest-done first.
+
+    The streaming half of fork-join: consumers overlap reduction with the
+    remaining remote work instead of blocking on submit order.  ``timeout``
+    bounds the *total* wait for the whole set.
+    """
+    futs = list(futs)
+    done: "queue.Queue[InvocationFuture]" = queue.Queue()
+    for f in futs:
+        f.add_done_callback(done.put)       # fires immediately if already done
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for _ in range(len(futs)):
+        remaining = None
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError("as_completed() timed out")
+        try:
+            yield done.get(timeout=remaining)
+        except queue.Empty:
+            raise TimeoutError("as_completed() timed out") from None
+
+
+def gather(futs: Sequence[InvocationFuture], *,
+           return_exceptions: bool = False,
+           timeout: float | None = None) -> list[Any]:
+    """Resolve a batch of futures, in submit order.
+
+    Partial-failure policy: by default the first failed invocation raises
+    (after letting in-flight siblings run on); with
+    ``return_exceptions=True`` the exception object takes the failed slot —
+    the caller decides what a partial fan-out is worth.  ``timeout`` bounds
+    the total wait across the batch and always raises ``TimeoutError`` when
+    exceeded — an unfinished task is not a settled failure, so the batch
+    deadline is never folded into the partial-failure policy.
+    """
+    deadline = None if timeout is None else time.monotonic() + timeout
+    out: list[Any] = []
+    first_error: Exception | None = None
+    for f in futs:
+        remaining = None
+        if deadline is not None:
+            remaining = max(0.0, deadline - time.monotonic())
+        try:
+            out.append(f.result(timeout=remaining))
+        except Exception as e:      # KeyboardInterrupt etc. must propagate
+            if isinstance(e, TimeoutError) and not f.done():
+                raise               # batch deadline hit: task still in flight
+            if return_exceptions:
+                out.append(e)
+            elif first_error is None:
+                first_error = e     # keep draining so siblings settle
+    if first_error is not None:
+        raise first_error
+    return out
 
 
 @dataclass
@@ -101,6 +193,10 @@ class Invocation:
     is_hedge: bool = False
     submit_order: int = 0
     tags: dict = field(default_factory=dict)
+    # per-call policy config (timeout/retries/hedging); falls back to the
+    # deployed function's config when None.  Policy travels with the
+    # invocation so overriding it never forces a redeploy.
+    config: Any = None                 # core.config.FunctionConfig
     # set by the dispatcher: (inv, ok, value_or_error, record) -> None.
     # Lets retry/hedging policy live in the dispatcher, not the pool.
     on_complete: Callable[["Invocation", bool, Any, InvocationRecord], None] | None = None

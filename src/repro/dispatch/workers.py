@@ -21,6 +21,16 @@ class WorkerCrash(RuntimeError):
     """Injected sandbox failure (node loss) — retried by the dispatcher."""
 
 
+@dataclass(frozen=True)
+class BackendCapabilities:
+    """What an execution backend can do — policy layers branch on these
+    instead of isinstance checks (see ``dispatch.backends.Backend``)."""
+    concurrent: bool = True        # real OS-thread parallelism
+    warm_reuse: bool = True        # sandbox cold/warm bookkeeping
+    fault_injection: bool = False  # honors a FaultPlan
+    models_latency: bool = False   # fills InvocationRecord.modeled_latency_ms
+
+
 @dataclass
 class WorkerInstance:
     worker_id: int
@@ -56,7 +66,14 @@ class WorkerPool:
     (paper: 1000); ``os_threads`` bounds real parallelism in this container.
     Instances scale out on demand (cold start) and are reused warm, per
     function name — matching FaaS semantics.
+
+    ``WorkerPool`` is the ``"threads"`` backend of the registry in
+    ``dispatch.backends``; subclasses there reuse its sandbox model with
+    different execution strategies (inline, simulated-AWS).
     """
+
+    capabilities = BackendCapabilities(concurrent=True, warm_reuse=True,
+                                       fault_injection=True)
 
     def __init__(self, max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None):
@@ -123,11 +140,21 @@ class WorkerPool:
             if inv is None:
                 return
             if inv.future.done():       # hedged sibling already won
+                self._skipped(inv)
                 continue
             try:
                 self._execute(inv)
             except BaseException as e:  # executor bug must not kill the thread
                 inv.future.set_error(e)
+
+    # Subclass hooks (see dispatch.backends): called for every invocation
+    # that is dropped unexecuted / right before its completion is delivered.
+    def _skipped(self, inv: Invocation) -> None:
+        pass
+
+    def _post_execute(self, inv: Invocation, rec: InvocationRecord,
+                      ok: bool) -> None:
+        pass
 
     def _execute(self, inv: Invocation) -> None:
         bridge = inv.deployed.bridge
@@ -139,6 +166,7 @@ class WorkerPool:
             hedged=inv.is_hedge, payload_bytes=len(inv.payload),
             memory_gb=bridge.config.memory_gb)
         def finish(ok: bool, value, record: InvocationRecord) -> None:
+            self._post_execute(inv, record, ok)
             if inv.on_complete is not None:
                 inv.on_complete(inv, ok, value, record)
             elif ok:
@@ -154,13 +182,14 @@ class WorkerPool:
                     f"sandbox {inst.worker_id} lost (task {inv.task_id} "
                     f"attempt {inv.attempt})")
             t0 = time.perf_counter()
-            blob = bridge.entry(inv.payload)
+            # stats come back with the blob: concurrent entries of the same
+            # bridge must not read each other's accounting (shared-attr race)
+            blob, stats = bridge.entry(inv.payload)
             server_s = time.perf_counter() - t0
             if straggle:
                 if self.fault_plan.straggler_sleep_s:
                     time.sleep(self.fault_plan.straggler_sleep_s)
                 server_s *= self.fault_plan.straggler_factor
-            stats = bridge.last_stats
             rec.deserialize_s = stats.deserialize_s
             rec.compute_s = stats.compute_s
             rec.serialize_s = stats.serialize_s

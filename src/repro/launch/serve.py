@@ -1,7 +1,10 @@
-"""Serving launcher: batched requests through the serverless dispatcher.
+"""Serving launcher: batched requests through a serverless cloud session.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-      --requests 16 --max-new 8
+      --requests 16 --max-new 8 [--backend threads|inline|sim-aws]
+
+``--backend`` switches the execution backend without touching any serving
+code — the single-source property the session API guarantees.
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import time
 import jax
 import numpy as np
 
+from ..cloud import Session, available_backends
 from ..configs import get_config, get_smoke
 from ..models import build_model
 from ..runtime.server import LMServer, Request
@@ -25,12 +29,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--wave", type=int, default=8)
+    ap.add_argument("--backend", default="threads",
+                    choices=available_backends())
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
-    server = LMServer(cfg, params, max_new=args.max_new)
+    session = Session(args.backend)
+    server = LMServer(cfg, params, session=session, max_new=args.max_new)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
@@ -41,12 +48,13 @@ def main():
     comps = server.serve(reqs, wave_size=args.wave)
     wall = time.perf_counter() - t0
     print(json.dumps({
-        "arch": cfg.name, "requests": len(comps),
+        "arch": cfg.name, "backend": args.backend, "requests": len(comps),
         "wall_s": round(wall, 3),
         "tokens_generated": sum(len(c.tokens) for c in comps),
         "cost": server.cost_report.summary(),
         "sample": comps[0].tokens,
     }, indent=1))
+    session.close()
 
 
 if __name__ == "__main__":

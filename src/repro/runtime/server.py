@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import FunctionConfig, RemoteFunction
+from ..cloud import Session, gather, session_for
 from ..dispatch import Dispatcher
 from ..models import build_model
 from ..configs.base import ModelConfig
@@ -81,45 +81,66 @@ def make_generate_fn(cfg: ModelConfig, max_new: int):
 
 
 class LMServer:
-    """Serverless serving facade over the repro dispatcher."""
+    """Serverless serving facade over a ``cloud.Session``.
+
+    The generate task is *bound* once (``session.function``); waves are
+    submitted concurrently and gathered in order — per-wave accounting
+    stays correct because entry-point stats travel with each result.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *,
+                 session: Session | None = None,
                  dispatcher: Dispatcher | None = None,
                  memory_mb: int = 2048, max_new: int = 16):
         self.cfg = cfg
         self.params = params
         self.max_new = max_new
-        self.d = dispatcher or Dispatcher()
-        self.inst = self.d.create_instance()
-        gen = make_generate_fn(cfg, max_new)
-        self.remote = RemoteFunction(
-            gen, name=f"serve_{cfg.name}",
-            config=FunctionConfig(memory_mb=memory_mb, serializer="binary"))
+        self.session = session_for(session, dispatcher)
+        self.generate = self.session.function(
+            make_generate_fn(cfg, max_new), name=f"serve_{cfg.name}",
+            memory_mb=memory_mb, serializer="binary")
+
+    def _submit_wave(self, requests: Sequence[Request]):
+        tokens = _pad_prompts([r.prompt for r in requests])
+        return self.generate.submit(self.params, jnp.asarray(tokens))
+
+    def _unpack_wave(self, requests: Sequence[Request], fut) -> list[Completion]:
+        out = np.asarray(fut.result())
+        rec = fut.record
+        return [Completion(
+            tokens=[int(t) for t in out[i][:r.max_new]],
+            latency_ms=(rec.server_s * 1000.0) if rec else 0.0,
+            cost_gb_s=(rec.billed_gb_s if rec else 0.0)
+            / max(1, len(requests)))
+            for i, r in enumerate(requests)]
 
     def serve_wave(self, requests: Sequence[Request]) -> list[Completion]:
         """One batched wave: pack requests, dispatch, unpack."""
-        tokens = _pad_prompts([r.prompt for r in requests])
-        fut = self.inst.dispatch(self.remote, self.params,
-                                 jnp.asarray(tokens))
-        out = np.asarray(fut.result())
-        rec = fut.record
-        comps = []
-        for i, r in enumerate(requests):
-            comps.append(Completion(
-                tokens=[int(t) for t in out[i][:r.max_new]],
-                latency_ms=(rec.server_s * 1000.0) if rec else 0.0,
-                cost_gb_s=(rec.billed_gb_s if rec else 0.0)
-                / max(1, len(requests))))
-        return comps
+        return self._unpack_wave(requests, self._submit_wave(requests))
 
-    def serve(self, requests: Sequence[Request],
-              wave_size: int = 8) -> list[Completion]:
-        """Fork-join over request waves (each wave = one serverless task)."""
+    def serve(self, requests: Sequence[Request], wave_size: int = 8,
+              max_inflight: int = 4) -> list[Completion]:
+        """Fork-join over request waves (each wave = one serverless task).
+
+        Waves run concurrently on the backend; completions return in
+        request order.  ``max_inflight`` bounds queued payloads — each one
+        embeds the serialized params, so unbounded submission would hold
+        n_waves copies of the model in memory at once.
+        """
+        max_inflight = max(1, max_inflight)       # 0/negative = synchronous
+        waves = [requests[i:i + wave_size]
+                 for i in range(0, len(requests), wave_size)]
+        futs: list = []
+        for i, w in enumerate(waves):
+            if i >= max_inflight:
+                futs[i - max_inflight].result()   # free the oldest payload
+            futs.append(self._submit_wave(w))
+        gather(futs)                      # settle, surface first failure
         out: list[Completion] = []
-        for i in range(0, len(requests), wave_size):
-            out.extend(self.serve_wave(requests[i:i + wave_size]))
+        for w, f in zip(waves, futs):
+            out.extend(self._unpack_wave(w, f))
         return out
 
     @property
     def cost_report(self):
-        return self.inst.cost
+        return self.session.cost

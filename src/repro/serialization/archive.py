@@ -188,7 +188,10 @@ def encode_binary_json(tree: Any) -> bytes:
 
 
 def decode_binary_json(data: bytes) -> Any:
-    doc = json.loads(data.decode())
+    return _decode_binary_json_doc(json.loads(data.decode()))
+
+
+def _decode_binary_json_doc(doc: dict) -> Any:
     return decode_binary(base64.b64decode(doc["payload"]))
 
 
@@ -230,7 +233,10 @@ def encode_structured_json(tree: Any) -> bytes:
 
 
 def decode_structured_json(data: bytes) -> Any:
-    doc = json.loads(data.decode())
+    return _decode_structured_json_doc(json.loads(data.decode()))
+
+
+def _decode_structured_json_doc(doc: dict) -> Any:
     leaves = [_leaf_from_json(o) for o in doc["leaves"]]
     return pytree.unflatten(doc["spec"], leaves)
 
@@ -250,13 +256,18 @@ def serialize(tree: Any, format: str = "binary", **kw) -> bytes:
 def deserialize(data: bytes, format: str | None = None) -> Any:
     if format is None:  # sniff
         if data[:4] == MAGIC:
-            format = "binary"
-        else:
-            doc_head = data[:64].lstrip()
-            format = ("binary_json"
-                      if doc_head.startswith(b'{"format": "binary_json"')
-                      or doc_head.startswith(b'{"format":"binary_json"')
-                      else "structured_json")
+            return decode_binary(data)
+        # JSON envelope: dispatch on the parsed "format" field, not on a
+        # byte-prefix match — key order, whitespace, and indentation are
+        # producer choices the wire format must not depend on.
+        doc = json.loads(data.decode())
+        fmt = doc.get("format", "structured_json") if isinstance(doc, dict) \
+            else "structured_json"
+        if fmt == "binary_json":
+            return _decode_binary_json_doc(doc)
+        if fmt == "structured_json":
+            return _decode_structured_json_doc(doc)
+        raise ValueError(f"unknown archive format field {fmt!r}")
     if format == "binary":
         return decode_binary(data)
     if format == "binary_json":

@@ -102,11 +102,12 @@ def test_deploy_and_invoke_roundtrip():
     d = dep.deploy(estimate, jnp.arange(8, dtype=jnp.float32))
     payload = d.bridge.pack((jnp.arange(8, dtype=jnp.float32),), {},
                             data_captures(estimate.fn))
-    blob = d.bridge.entry(payload)
+    blob, stats = d.bridge.entry(payload)
     out = d.bridge.unpack_result(blob)
     assert float(np.asarray(out)) == pytest.approx(3500.0)
     assert d.bridge.kind == "aot_xla"
-    assert d.bridge.last_stats.total_s > 0
+    assert stats.total_s > 0
+    assert d.bridge.last_stats.total_s == stats.total_s
 
 
 def test_deploy_dedup_no_recompile():
@@ -138,7 +139,7 @@ def test_deploy_generic_worker_fallback():
 
     rf = RemoteFunction(pytask, jax_traceable=False)
     d = dep.deploy(rf, 10)
-    blob = d.bridge.entry(d.bridge.pack((10,), {}, {}))
+    blob, _ = d.bridge.entry(d.bridge.pack((10,), {}, {}))
     assert d.bridge.unpack_result(blob) == 285
     assert d.bridge.kind == "generic_worker"
 
@@ -158,6 +159,34 @@ def test_manifest_persists(tmp_path):
     assert entry.kind == "aot_xla"
 
 
+def test_entry_stats_are_per_invocation():
+    """Concurrent entries of one bridge must not share accounting: stats
+    travel with the return value, not through a mutable attribute."""
+    import threading
+    import time
+
+    dep = Deployment()
+
+    def sleepy(s):
+        time.sleep(s)
+        return s
+
+    d = dep.deploy(RemoteFunction(sleepy, jax_traceable=False), 0.01)
+    out = {}
+
+    def call(s):
+        _, stats = d.bridge.entry(d.bridge.pack((s,), {}, {}))
+        out[s] = stats.compute_s
+
+    ts = [threading.Thread(target=call, args=(s,)) for s in (0.05, 0.3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    # the fast call must see its own ~0.05 s, not the slow sibling's ~0.3 s
+    assert out[0.05] < 0.2 < out[0.3]
+
+
 def test_config_fluent_api_matches_paper_listing():
     cfg = (FunctionConfig()
            .with_memory(512)
@@ -175,7 +204,7 @@ def test_captures_travel_in_payload():
 
     d = dep.deploy(task, jnp.ones((4,), jnp.float32))
     # invoke with *different* capture values — payload carries state
-    blob = d.bridge.entry(
+    blob, _ = d.bridge.entry(
         d.bridge.pack((jnp.ones((4,), jnp.float32),), {},
                       {"scale": np.float32(9.0)}))
     out = d.bridge.unpack_result(blob)

@@ -4,8 +4,7 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.serialization import (FORMATS, deserialize, flatten,
                                  register_custom, serialize, unflatten)
@@ -50,7 +49,29 @@ def test_sniffing(fmt):
     assert trees_equal(SAMPLE, out)
 
 
+def test_sniffing_envelope_is_layout_independent():
+    """Sniffing must parse the envelope's ``format`` field, not match a byte
+    prefix: key order, whitespace, and indentation are producer choices."""
+    doc = json.loads(serialize(SAMPLE, format="binary_json").decode())
+    variants = [
+        # reordered keys: "payload" first
+        json.dumps({"payload": doc["payload"], "format": "binary_json"}),
+        # pretty-printed (space after colon, newlines)
+        json.dumps(doc, indent=2),
+        # leading whitespace before the envelope
+        "  \n" + json.dumps(doc),
+    ]
+    for v in variants:
+        assert trees_equal(SAMPLE, deserialize(v.encode())), v[:40]
+
+
+def test_sniffing_unknown_format_field_raises():
+    with pytest.raises(ValueError):
+        deserialize(json.dumps({"format": "protobuf", "payload": ""}).encode())
+
+
 def test_binary_zstd_roundtrip():
+    pytest.importorskip("zstandard")
     data = serialize(SAMPLE, format="binary", compress=True)
     raw = serialize(SAMPLE, format="binary")
     out = deserialize(data)

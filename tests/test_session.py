@@ -1,0 +1,328 @@
+"""Session API tests (ISSUE 1): backend registry, bound-function handles,
+streaming fork-join, partial-failure policies, and the paper-style shim."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cloud
+from repro.cloud import (Session, as_completed, available_backends, gather,
+                         register_backend, resolve_backend)
+from repro.core import FunctionConfig
+from repro.dispatch import (Dispatcher, FaultPlan, InlineBackend,
+                            SimAWSBackend, WorkerPool, dispatch, wait)
+
+
+# ------------------------------------------------------------- registry ----
+
+def test_registry_resolution():
+    for name, cls in (("threads", WorkerPool), ("inline", InlineBackend),
+                      ("sim-aws", SimAWSBackend)):
+        b = resolve_backend(name, os_threads=2)
+        assert isinstance(b, cls)
+        b.shutdown()
+    assert {"threads", "inline", "sim-aws"} <= set(available_backends())
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(ValueError, match="threads"):
+        resolve_backend("gcp-functions")
+
+
+def test_registry_accepts_instances_and_factories():
+    pool = WorkerPool(os_threads=1)
+    assert resolve_backend(pool) is pool
+    pool.shutdown()
+    b = resolve_backend(InlineBackend)          # a class is a factory
+    assert isinstance(b, InlineBackend)
+
+
+def test_register_custom_backend():
+    register_backend("test-inline-alias", InlineBackend)
+    try:
+        with Session("test-inline-alias") as sess:
+            f = sess.function(lambda x: x + 1)
+            assert float(f.submit(jnp.float32(1)).result()) == 2.0
+    finally:
+        from repro.dispatch.backends import _REGISTRY
+        _REGISTRY.pop("test-inline-alias")
+
+
+def test_capability_flags():
+    assert WorkerPool.capabilities.concurrent
+    assert not InlineBackend.capabilities.concurrent
+    assert SimAWSBackend.capabilities.models_latency
+    assert not WorkerPool.capabilities.models_latency
+
+
+# ------------------------------------------------------ session basics ----
+
+def test_inline_backend_is_zero_thread_and_synchronous():
+    with Session("inline") as sess:
+        assert len(sess.backend._threads) == 0
+        fut = sess.function(lambda x: x * 2).submit(jnp.float32(3))
+        assert fut.done()                       # resolved during submit
+        assert float(fut.result()) == 6.0
+
+
+def test_same_code_runs_on_every_backend():
+    """The acceptance property: no per-backend application-code changes."""
+    def flow(backend):
+        with Session(backend, os_threads=4) as sess:
+            f = sess.function(lambda x: jnp.sum(x * x), name="ssq")
+            return [float(r) for r in f.map([(jnp.ones(4) * i,)
+                                             for i in range(4)])]
+
+    results = {b: flow(b) for b in ("threads", "inline", "sim-aws")}
+    assert results["threads"] == results["inline"] == results["sim-aws"] \
+        == [0.0, 4.0, 16.0, 36.0]
+
+
+def test_session_owns_cost_accounting():
+    with Session("inline") as sess:
+        f = sess.function(lambda x: x + 1)
+        f.map([(jnp.float32(i),) for i in range(5)])
+        assert sess.cost.invocations == 5
+        assert sess.cost.gb_seconds > 0
+        assert len(sess.records) == 5
+
+
+def test_accounting_complete_when_map_returns():
+    """map()/gather() join on futures, not wait(): cost and records must be
+    fully recorded by the time the join returns (claim→record→resolve)."""
+    with Session("threads", os_threads=4) as sess:
+        f = sess.function(lambda x: x, jax_traceable=False)
+        for i in range(200):
+            before = sess.cost.invocations
+            f.map([(j,) for j in range(4)])
+            assert sess.cost.invocations == before + 4
+            assert len(sess.records) == before + 4
+
+
+def test_local_call_is_untouched():
+    with Session("inline") as sess:
+        calls = []
+
+        def tracked(x):
+            calls.append(x)
+            return x
+
+        f = sess.function(tracked, jax_traceable=False)
+        assert f(7) == 7                        # plain local execution
+        assert calls == [7]
+        assert sess.cost.invocations == 0       # nothing billed
+
+
+# ------------------------------------------------- options precedence ----
+
+def test_options_override_precedence():
+    """call (.options) > handle (session.function kwargs) > function config."""
+    from repro.core import RemoteFunction
+    rf = RemoteFunction(lambda x: x + 1,
+                        config=FunctionConfig(memory_mb=1024))
+    with Session("inline") as sess:
+        handle = sess.function(rf, memory_mb=512)
+        assert handle.config.memory_mb == 512           # handle beats function
+        call = handle.options(memory_mb=256)
+        assert call.config.memory_mb == 256             # call beats handle
+        assert handle.config.memory_mb == 512           # chaining is pure
+        rec = call.submit(jnp.float32(0)).record
+        assert rec.memory_gb == 0.25                    # override reached bill
+        rec2 = handle.submit(jnp.float32(0)).record
+        assert rec2.memory_gb == 0.5
+
+
+def test_options_rejects_unknown_fields():
+    with Session("inline") as sess:
+        f = sess.function(lambda x: x)
+        with pytest.raises(TypeError, match="vcpus"):
+            f.options(vcpus=4)
+
+
+def test_policy_options_do_not_redeploy():
+    """timeout/retries/hedging are client policy: overriding them must hit
+    the deploy cache; artifact/billing fields (memory) must not."""
+    with Session("inline") as sess:
+        f = sess.function(lambda x: x + 1)
+        f.submit(jnp.float32(0)).result()
+        assert sess.deployment.compile_count == 1
+        f.options(timeout_s=60, max_retries=9).submit(jnp.float32(0)).result()
+        assert sess.deployment.compile_count == 1       # cache hit
+        assert sess.deployment.cache_hits >= 1
+        f.options(memory_mb=2048).submit(jnp.float32(0)).result()
+        assert sess.deployment.compile_count == 2       # new entry point
+
+
+def test_options_serializer_changes_wire_format():
+    with Session("inline") as sess:
+        f = sess.function(lambda x: x + 1)
+        rec_b = f.options(serializer="binary").submit(jnp.float32(1)).record
+        rec_j = f.options(serializer="structured_json") \
+            .submit(jnp.float32(1)).record
+        assert rec_j.payload_bytes > rec_b.payload_bytes   # JSON tax
+
+
+# ------------------------------------------------ streaming fork-join ----
+
+def test_map_unordered_yields_in_completion_order():
+    with Session("threads", os_threads=4) as sess:
+        def task(s):
+            time.sleep(s)
+            return s
+
+        f = sess.function(task, jax_traceable=False)
+        seen = list(f.map_unordered([0.4, 0.01, 0.15]))
+        assert sorted(seen) == [0.01, 0.15, 0.4]
+        assert seen[0] == 0.01                  # fastest first, not submit order
+        assert seen != [0.4, 0.01, 0.15]
+
+
+def test_as_completed_streams_futures():
+    with Session("threads", os_threads=4) as sess:
+        def task(s):
+            time.sleep(s)
+            return s
+
+        f = sess.function(task, jax_traceable=False)
+        futs = [f.submit(s) for s in (0.3, 0.01)]
+        first = next(as_completed(futs))
+        assert first.result() == 0.01
+        gather(futs)
+
+
+def test_gather_raise_policy():
+    with Session("inline") as sess:
+        def picky(x):
+            if x == 2:
+                raise ValueError("bad input 2")
+            return x
+
+        f = sess.function(picky, jax_traceable=False)
+        futs = [f.submit(i) for i in range(4)]
+        with pytest.raises(ValueError, match="bad input 2"):
+            gather(futs)
+
+
+def test_gather_batch_timeout_raises_even_with_return_exceptions():
+    """An unfinished task is not a settled failure: the batch deadline
+    raises instead of planting TimeoutError in a result slot."""
+    with Session("threads", os_threads=2) as sess:
+        def slow(s):
+            time.sleep(s)
+            return s
+
+        f = sess.function(slow, jax_traceable=False)
+        futs = [f.submit(0.01), f.submit(2.0)]
+        with pytest.raises(TimeoutError):
+            gather(futs, return_exceptions=True, timeout=0.3)
+        gather(futs)                       # settle before session close
+
+
+def test_function_rejects_rebinding_kwargs_on_remote_function():
+    from repro.core import RemoteFunction
+    rf = RemoteFunction(lambda x: x)
+    with Session("inline") as sess:
+        with pytest.raises(TypeError, match="RemoteFunction"):
+            sess.function(rf, name="other")
+
+
+def test_gather_return_exceptions_policy():
+    with Session("inline") as sess:
+        def picky(x):
+            if x % 2:
+                raise ValueError(f"odd {x}")
+            return x
+
+        f = sess.function(picky, jax_traceable=False)
+        out = gather([f.submit(i) for i in range(4)], return_exceptions=True)
+        assert out[0] == 0 and out[2] == 2
+        assert isinstance(out[1], ValueError)
+        assert isinstance(out[3], ValueError)
+
+
+# ----------------------------------------- sim-aws: faults + hedging ----
+
+def test_sim_aws_retry_and_hedging_interplay():
+    """Crashes are retried and stragglers hedged on the same run; results
+    stay exact and every record carries a modeled client latency."""
+    with Session("sim-aws", os_threads=8,
+                 fault_plan=FaultPlan(failure_rate=0.15, straggler_rate=0.2,
+                                      straggler_sleep_s=0.3, seed=11)) as sess:
+        f = sess.function(lambda x: x * 2, memory_mb=512, max_retries=8)
+        out = f.map([(jnp.float32(i),) for i in range(12)],
+                    hedge_quantile=0.5)
+        assert [float(o) for o in out] == [2.0 * i for i in range(12)]
+        assert sum(r.attempts for r in sess.records) >= 12
+        assert all(r.modeled_latency_ms > 0 for r in sess.records)
+        # cold starts show up as a modeled penalty, not just a flag
+        cold = [r for r in sess.records if r.cold_start]
+        warm = [r for r in sess.records if not r.cold_start]
+        if cold and warm:
+            assert (min(c.modeled_latency_ms for c in cold)
+                    > min(w.modeled_latency_ms for w in warm))
+
+
+def test_sim_aws_inflight_counter_survives_hedging():
+    with Session("sim-aws", os_threads=4,
+                 fault_plan=FaultPlan(straggler_rate=0.3,
+                                      straggler_sleep_s=0.2, seed=3)) as sess:
+        f = sess.function(lambda x: x + 1)
+        f.map([(jnp.float32(i),) for i in range(8)], hedge_quantile=0.5)
+        f.map([(jnp.float32(i),) for i in range(8)])
+        assert sess.backend._inflight == 0      # every submit was balanced
+
+
+# -------------------------------------------------- paper-style shim ----
+
+def test_paper_shim_accepts_session():
+    """cppless::dispatch/wait still work, with a Session as the namespace."""
+    with Session("threads", os_threads=4) as sess:
+        cfg = FunctionConfig(memory_mb=512)
+        futs = [dispatch(sess, lambda x: x * 3, jnp.float32(i), config=cfg)
+                for i in range(6)]
+        wait(sess)
+        assert sorted(float(f.result()) for f in futs) == \
+            [3.0 * i for i in range(6)]
+        assert sess.cost.invocations == 6
+
+
+def test_shim_and_session_flows_are_equivalent():
+    def flow_shim():
+        d = Dispatcher(os_threads=2)
+        try:
+            inst = d.create_instance()
+            futs = [dispatch(inst, lambda x: x + 10, jnp.float32(i))
+                    for i in range(5)]
+            wait(inst)
+            return [float(f.result()) for f in futs]
+        finally:
+            d.shutdown()
+
+    def flow_session():
+        with Session("threads", os_threads=2) as sess:
+            f = sess.function(lambda x: x + 10)
+            return [float(r) for r in f.map([(jnp.float32(i),)
+                                             for i in range(5)])]
+
+    assert flow_shim() == flow_session() == [10.0 + i for i in range(5)]
+
+
+def test_session_wraps_caller_owned_dispatcher():
+    d = Dispatcher(os_threads=2)
+    try:
+        with Session.from_dispatcher(d) as sess:
+            f = sess.function(lambda x: x + 1)
+            assert float(f.submit(jnp.float32(1)).result()) == 2.0
+        # exiting the session must NOT shut down the caller's dispatcher
+        inst = d.create_instance()
+        assert float(inst.dispatch(lambda x: x, jnp.float32(5))
+                     .result(timeout=30)) == 5.0
+    finally:
+        d.shutdown()
+
+
+def test_cloud_namespace_exports():
+    for name in ("Session", "BoundFunction", "gather", "as_completed",
+                 "register_backend", "resolve_backend", "available_backends"):
+        assert hasattr(cloud, name)
