@@ -1,12 +1,18 @@
 """Quickstart — the paper's PI example (Fig 6) on the session API.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [backend ...]
 
 One source, many targets: the same functions run locally, on real threads,
-or synchronously inline — only the ``cloud.Session(backend)`` line changes.
-A jax-traceable task is deployed as a serverless function (AOT-compiled
+synchronously inline, in real worker *processes*, or behind an HTTP worker
+— only the ``cloud.Session(backend)`` line (here: argv) changes.  A
+jax-traceable task is deployed as a serverless function (AOT-compiled
 entry point, content-addressed name, binary payloads), fanned out fork-join
-style, and billed in GB-seconds.
+style, and billed in GB-seconds.  On the out-of-process backends
+(``processes``/``http``) the payload genuinely crosses a process/socket
+boundary: workers rebuild the entry points from the manifest (script-
+defined functions therefore import what they use inside the body), cold
+starts are real AOT compiles, and ``http`` records carry *measured*
+client-observed latency.
 """
 import sys
 
@@ -24,6 +30,8 @@ def run(backend: str) -> None:
         print(f"pi ≈ {pi:.5f}")
 
         # ---- low-level: define and bind your own serverless function
+        # (body-local import: script functions must be self-contained to
+        #  run in fresh worker processes — see runtime/worker_host.py)
         @sess.remote(memory_mb=512, serializer="binary")
         def square_sum(n):
             import jax.numpy as jnp
@@ -56,7 +64,7 @@ def run(backend: str) -> None:
 
 def main():
     # identical application code on every backend — the single-source claim
-    for backend in ("threads", "inline"):
+    for backend in (sys.argv[1:] or ("threads", "inline")):
         run(backend)
 
 

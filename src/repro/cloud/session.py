@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from typing import Any, Callable, Iterable, Iterator, Sequence
 
 from ..core.config import FunctionConfig
@@ -41,6 +42,11 @@ from ..dispatch.latency_model import DEFAULT_LATENCY, LatencyModel
 from ..dispatch.workers import FaultPlan
 
 _CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(FunctionConfig))
+
+
+class Saturated(RuntimeError):
+    """Admission control: the session is at ``max_concurrency`` and was
+    asked to shed (``Session(..., shed=True)``) rather than queue."""
 
 
 def _override(cfg: FunctionConfig, overrides: dict) -> FunctionConfig:
@@ -141,7 +147,11 @@ class Session:
                  max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None,
                  manifest_path: str | None = None,
+                 shed: bool = False,
                  dispatcher: Dispatcher | None = None):
+        self._shed = shed
+        self._admission_lock = threading.Lock()
+        self._admitted = 0            # shed-mode reservations not yet resolved
         if dispatcher is not None:
             self._dispatcher = dispatcher
             self._owns_dispatcher = False
@@ -199,7 +209,16 @@ class Session:
         if self._closed:
             raise RuntimeError("session is closed; submissions would never "
                                "complete on a shut-down backend")
-        return self._inst.dispatch(fn, *args, config=config, **kwargs)
+        reserved = self._reserve(1)
+        try:
+            fut = self._inst.dispatch(fn, *args, config=config, **kwargs)
+        except BaseException:
+            if reserved:
+                self._release(1)
+            raise
+        if reserved:
+            fut.add_done_callback(lambda _f: self._release(1))
+        return fut
 
     def map(self, fn, arglists: Sequence[tuple],
             config: FunctionConfig | None = None,
@@ -207,11 +226,55 @@ class Session:
         if self._closed:
             raise RuntimeError("session is closed; submissions would never "
                                "complete on a shut-down backend")
-        return self._inst.map(fn, arglists, config=config,
-                              hedge_quantile=hedge_quantile)
+        reserved = self._reserve(len(arglists))
+        try:
+            futs, cfg = self._inst.map_futures(
+                fn, arglists, config=config, hedge_quantile=hedge_quantile)
+        except BaseException:
+            if reserved:
+                self._release(len(arglists))
+            raise
+        if reserved:
+            # each slot frees when ITS task resolves — a failed sibling must
+            # not release slots for tasks still in flight
+            for f in futs:
+                f.add_done_callback(lambda _f: self._release(1))
+        return [f.result(timeout=cfg.timeout_s) for f in futs]
 
     def wait(self, n: int | None = None, timeout: float = 300.0) -> None:
         self._inst.wait(n, timeout=timeout)
+
+    # --------------------------------------------------- admission control
+    @property
+    def inflight(self) -> int:
+        """Invocations submitted through this session and not yet resolved."""
+        return self._inst.inflight
+
+    @property
+    def queue_depth(self) -> int:
+        """Invocations the backend has accepted but not yet started."""
+        return getattr(self.backend, "queue_depth", 0)
+
+    def _reserve(self, n: int) -> bool:
+        """Shed-mode gate: atomically reserve ``n`` admission slots or raise
+        :class:`Saturated` (ROADMAP: admission control).  A reservation
+        counter — not a read of ``inflight`` — so concurrent submitters
+        cannot race past ``max_concurrency`` between check and dispatch."""
+        if not self._shed:
+            return False
+        limit = self._dispatcher.max_concurrency
+        with self._admission_lock:
+            if self._admitted + n > limit:
+                raise Saturated(
+                    f"session at max_concurrency={limit} "
+                    f"({self._admitted} admitted, +{n} requested); "
+                    f"shed=True rejects instead of queueing")
+            self._admitted += n
+        return True
+
+    def _release(self, n: int) -> None:
+        with self._admission_lock:
+            self._admitted -= n
 
     # ------------------------------------------------------------ plumbing
     @property

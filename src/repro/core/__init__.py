@@ -1,3 +1,4 @@
+from .codeship import CodeShipError, freeze_function, thaw_function
 from .config import DEFAULT_CONFIG, FunctionConfig
 from .function import (RemoteFunction, data_captures, rebind,
                        reflect_captures, remote)
@@ -10,4 +11,5 @@ __all__ = [
     "FunctionConfig", "DEFAULT_CONFIG", "RemoteFunction", "remote",
     "reflect_captures", "rebind", "data_captures", "stable_name", "mangle",
     "Bridge", "Deployment", "DeployedFunction", "Manifest", "ManifestEntry",
+    "CodeShipError", "freeze_function", "thaw_function",
 ]

@@ -1,0 +1,140 @@
+"""Code shipping — make deployed functions reconstructable in a fresh process.
+
+Cppless deploys a *separately compiled* entry-point binary; the worker never
+sees the client's address space (paper §3.3).  The Python analogue: a
+deployed function must be rebuildable from the **manifest alone**, in a
+process that shares nothing with the client but the installed package tree.
+``freeze_function`` captures a JSON-able description of a callable;
+``thaw_function`` rebuilds it on the worker side.
+
+Two shipping modes, mirroring how Cppless links entry points:
+
+* ``ref``  — the function is importable (module-level def in an importable
+             module): ship only ``module:qualname``; the worker imports it.
+             This is the "static dependency linked into the binary" case.
+* ``code`` — closures / lambdas / ``__main__`` functions: ship the marshalled
+             code object plus the *structure* of its closure.  Callable and
+             module captures are frozen recursively (they are part of the
+             artifact); data captures are left as payload slots — their
+             values arrive per-invocation in the serialized payload and are
+             spliced in by ``rebind`` (capture reflection, ``function.py``).
+
+``marshal`` ties artifacts to one interpreter version — exactly the
+contract of a container image built alongside the client, and the reason
+the manifest is versioned.
+"""
+from __future__ import annotations
+
+import base64
+import builtins
+import importlib
+import marshal
+import types
+from typing import Any, Callable
+
+from ..serialization import deserialize, serialize
+
+
+class CodeShipError(RuntimeError):
+    """A function cannot be frozen/thawed for out-of-process execution."""
+
+
+def _importable(fn: Callable) -> bool:
+    mod = getattr(fn, "__module__", None)
+    qual = getattr(fn, "__qualname__", "")
+    if not mod or mod == "__main__" or "<" in qual:
+        return False
+    try:
+        obj = importlib.import_module(mod)
+        for part in qual.split("."):
+            obj = getattr(obj, part)
+        return obj is fn
+    except Exception:
+        return False
+
+
+def freeze_function(fn: Callable) -> dict[str, Any]:
+    """A JSON-able artifact from which ``thaw_function`` rebuilds ``fn``."""
+    if _importable(fn):
+        return {"kind": "ref", "module": fn.__module__,
+                "qualname": fn.__qualname__}
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        raise CodeShipError(f"cannot freeze non-python callable {fn!r}")
+    freevars: dict[str, Any] = {}
+    cells = fn.__closure__ or ()
+    for name, cell in zip(code.co_freevars, cells):
+        try:
+            v = cell.cell_contents
+        except ValueError:          # empty cell (self-reference): payload slot
+            freevars[name] = None
+            continue
+        if isinstance(v, types.ModuleType):
+            freevars[name] = {"kind": "module", "module": v.__name__}
+        elif callable(v):
+            freevars[name] = freeze_function(v)
+        else:
+            freevars[name] = None   # data capture: value travels in payloads
+    if fn.__defaults__:
+        try:
+            # the payload serializer, not marshal: default values may be
+            # jax/numpy arrays, and silently dropping them would make a
+            # default-relying call succeed in-process but fail on a worker
+            defaults = base64.b64encode(
+                serialize(list(fn.__defaults__))).decode()
+        except Exception as e:
+            raise CodeShipError(
+                f"default argument values of {fn.__name__!r} are not "
+                f"wire-serializable ({e}); the function cannot ship to "
+                f"out-of-process workers") from None
+    else:
+        defaults = None
+    return {"kind": "code",
+            "module": getattr(fn, "__module__", None),
+            "name": fn.__name__,
+            "code": base64.b64encode(marshal.dumps(code)).decode(),
+            "defaults": defaults,
+            "freevars": freevars}
+
+
+def _thaw_globals(module: str | None) -> dict:
+    """Globals for a shipped code object.
+
+    The defining module is imported when possible (its module-level names —
+    helper functions, imported libraries — are the code's static deps).
+    ``__main__`` code gets fresh globals: such functions must import what
+    they use inside their own body, the documented contract for script-
+    defined serverless functions.
+    """
+    if module and module != "__main__":
+        try:
+            return vars(importlib.import_module(module))
+        except Exception:
+            pass
+    return {"__builtins__": builtins}
+
+
+def thaw_function(frozen: dict[str, Any] | None) -> Callable:
+    """Rebuild a callable from a ``freeze_function`` artifact."""
+    if not frozen:
+        raise CodeShipError("manifest entry carries no code artifact "
+                            "(deployed by an older client?)")
+    kind = frozen.get("kind")
+    if kind == "ref":
+        obj: Any = importlib.import_module(frozen["module"])
+        for part in frozen["qualname"].split("."):
+            obj = getattr(obj, part)
+        return obj
+    if kind == "module":
+        return importlib.import_module(frozen["module"])  # type: ignore
+    if kind != "code":
+        raise CodeShipError(f"unknown code artifact kind {kind!r}")
+    code = marshal.loads(base64.b64decode(frozen["code"]))
+    defaults = tuple(deserialize(base64.b64decode(frozen["defaults"]))) \
+        if frozen.get("defaults") else None
+    cells = tuple(
+        types.CellType() if sub is None else types.CellType(thaw_function(sub))
+        for sub in (frozen["freevars"].get(n) for n in code.co_freevars))
+    return types.FunctionType(code, _thaw_globals(frozen.get("module")),
+                              frozen.get("name", code.co_name),
+                              defaults, cells or None)

@@ -17,6 +17,7 @@ from typing import Any, Callable
 import jax
 
 from .bridge import Bridge, make_executor_aot, make_executor_generic
+from .codeship import freeze_function
 from .config import DEFAULT_CONFIG, FunctionConfig
 from .function import RemoteFunction, data_captures
 from .manifest import Manifest, ManifestEntry
@@ -87,9 +88,13 @@ class Deployment:
         self._functions[name] = deployed
 
         in_avals, out_avals = self._aval_strings(rf, payload, kind, executor)
+        try:
+            code = freeze_function(rf.fn)
+        except Exception:
+            code = None        # local-only function: in-process backends fine
         self.manifest.add(ManifestEntry(
             name=name, human_name=rf.human_name, kind=kind, config=cfg,
-            in_avals=in_avals, out_avals=out_avals, artifact=name))
+            in_avals=in_avals, out_avals=out_avals, artifact=name, code=code))
         return deployed
 
     def get(self, name: str) -> DeployedFunction:

@@ -10,6 +10,7 @@ consulted by ``Deployment.deploy`` for change detection.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -29,6 +30,10 @@ class ManifestEntry:
     out_avals: list[str] = field(default_factory=list)
     created_at: float = 0.0
     artifact: str | None = None  # artifact-store key
+    # code-shipping artifact (core.codeship.freeze_function): lets a fresh
+    # worker process rebuild the bridge from the manifest alone — the
+    # separately-deployed entry point of the `processes`/`http` transports.
+    code: dict | None = None
 
     def to_json(self) -> dict[str, Any]:
         d = dict(self.__dict__)
@@ -39,7 +44,8 @@ class ManifestEntry:
     def from_json(cls, d: dict) -> "ManifestEntry":
         d = dict(d)
         d["config"] = FunctionConfig.from_json(d["config"])
-        return cls(**d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 class Manifest:

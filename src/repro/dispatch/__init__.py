@@ -5,6 +5,7 @@ from .dispatcher import Dispatcher, DispatcherInstance, dispatch, wait
 from .futures import (Invocation, InvocationFuture, InvocationRecord,
                       as_completed, gather)
 from .latency_model import DEFAULT_LATENCY, LatencyModel
+from .transports import HttpBackend, ProcessesBackend
 from .workers import (BackendCapabilities, FaultPlan, WorkerCrash,
                       WorkerPool)
 
@@ -14,6 +15,7 @@ __all__ = [
     "DEFAULT_LATENCY", "WorkerPool", "WorkerCrash", "FaultPlan",
     "PRICE_PER_GB_S", "PRICE_PER_REQUEST",
     "Backend", "BackendCapabilities", "ThreadsBackend", "InlineBackend",
-    "SimAWSBackend", "register_backend", "resolve_backend",
+    "SimAWSBackend", "ProcessesBackend", "HttpBackend",
+    "register_backend", "resolve_backend",
     "available_backends", "as_completed", "gather",
 ]

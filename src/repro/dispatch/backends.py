@@ -9,17 +9,23 @@ select one without importing it.
 
 Built-in backends:
 
-* ``"threads"``  — today's elastic ``WorkerPool`` (real OS threads, warm
-                   sandbox reuse, fault injection).
-* ``"inline"``   — synchronous, zero-thread execution on the caller's
-                   thread; deterministic, ideal for tests and debugging.
-* ``"sim-aws"``  — threads plus the calibrated ``LatencyModel`` composed in:
-                   every record gets a modeled client-observed latency
-                   (cold start + RTT + congestion), so cloud-shaped numbers
-                   come out of ordinary runs.
+* ``"threads"``   — today's elastic ``WorkerPool`` (real OS threads, warm
+                    sandbox reuse, fault injection).
+* ``"inline"``    — synchronous, zero-thread execution on the caller's
+                    thread; deterministic, ideal for tests and debugging.
+* ``"sim-aws"``   — threads plus the calibrated ``LatencyModel`` composed in:
+                    every record gets a modeled client-observed latency
+                    (cold start + RTT + congestion), so cloud-shaped numbers
+                    come out of ordinary runs.
+* ``"processes"`` — real multiprocessing workers behind the wire protocol:
+                    GIL-free execution, bridges rebuilt from the manifest on
+                    first use, warm reuse across invocations.
+* ``"http"``      — the paper's actual client model: payloads POSTed to a
+                    separately-spawned ``http.server`` worker over pooled
+                    keep-alive connections; records carry *measured*
+                    client-observed latency (``latency_measured=True``).
 
-Third-party backends register with ``register_backend("name")`` — the
-ROADMAP directions (process-pool, remote-HTTP) drop in here.
+Third-party backends register with ``register_backend("name")``.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ from typing import Any, Callable, Protocol, runtime_checkable
 
 from .futures import Invocation
 from .latency_model import DEFAULT_LATENCY, LatencyModel
+from .transports import HttpBackend, ProcessesBackend
 from .workers import BackendCapabilities, FaultPlan, WorkerPool
 
 
@@ -59,8 +66,8 @@ def register_backend(name: str, factory: Callable[..., Backend] | None = None):
     """Register a backend factory under ``name`` (usable as a decorator).
 
     Factories are called with the dispatcher's standard keyword set
-    (``max_concurrency, os_threads, fault_plan, latency, client``) and must
-    tolerate extras (accept ``**_``).
+    (``max_concurrency, os_threads, fault_plan, latency, client,
+    deployment``) and must tolerate extras (accept ``**_``).
     """
     def _register(f):
         _REGISTRY[name] = f
@@ -183,6 +190,8 @@ def _threads_backend(*, max_concurrency: int = 1000, os_threads: int = 16,
 
 register_backend("inline", InlineBackend)
 register_backend("sim-aws", SimAWSBackend)
+register_backend("processes", ProcessesBackend)
+register_backend("http", HttpBackend)
 
 # the "threads" backend IS the worker pool — exported under both names
 ThreadsBackend = WorkerPool

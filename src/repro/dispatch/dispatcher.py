@@ -58,9 +58,12 @@ class Dispatcher:
         self.client = client
         self.latency = latency
         self.max_concurrency = max_concurrency
+        # the deployment rides along so out-of-process backends can hand
+        # workers the manifest to rebuild bridges from
         self.backend = resolve_backend(
             backend, max_concurrency=max_concurrency, os_threads=os_threads,
-            fault_plan=fault_plan, latency=latency, client=client)
+            fault_plan=fault_plan, latency=latency, client=client,
+            deployment=self.deployment)
         self._instances: list[DispatcherInstance] = []
 
     @property
@@ -111,6 +114,22 @@ class DispatcherInstance:
         self.d.backend.submit(inv)
         return fut
 
+    def map_futures(self, fn: Callable | RemoteFunction,
+                    arglists: Sequence[tuple],
+                    config: FunctionConfig | None = None,
+                    hedge_quantile: float | None = None
+                    ) -> tuple[list[InvocationFuture], FunctionConfig]:
+        """The fork half of ``map``: dispatch all tasks (with hedging armed)
+        and hand back the futures — callers that track per-invocation state
+        (e.g. shed-mode admission slots) attach to these before joining."""
+        futs = [self.dispatch(fn, *a, config=config) for a in arglists]
+        cfg = self._resolve_config(fn, config)
+        hq = (hedge_quantile if hedge_quantile is not None
+              else cfg.hedge_after_quantile)
+        if hq is not None and len(futs) > 1:
+            self._hedge(fn, arglists, futs, cfg, hq)
+        return futs, cfg
+
     def map(self, fn: Callable | RemoteFunction, arglists: Sequence[tuple],
             config: FunctionConfig | None = None,
             hedge_quantile: float | None = None) -> list[Any]:
@@ -120,13 +139,16 @@ class DispatcherInstance:
         unfinished tasks get a backup invocation; first result wins.  Safe
         because tasks are stateless and idempotent — the serverless contract.
         """
-        futs = [self.dispatch(fn, *a, config=config) for a in arglists]
-        cfg = self._resolve_config(fn, config)
-        hq = (hedge_quantile if hedge_quantile is not None
-              else cfg.hedge_after_quantile)
-        if hq is not None and len(futs) > 1:
-            self._hedge(fn, arglists, futs, cfg, hq)
+        futs, cfg = self.map_futures(fn, arglists, config=config,
+                                     hedge_quantile=hedge_quantile)
         return [f.result(timeout=cfg.timeout_s) for f in futs]
+
+    @property
+    def inflight(self) -> int:
+        """Invocations dispatched through this namespace and not yet
+        resolved (admission control reads this)."""
+        with self._cv:
+            return len(self._pending)
 
     def wait(self, n: int | None = None, timeout: float = 300.0) -> None:
         """Block until all (or the next ``n``) pending invocations resolve."""

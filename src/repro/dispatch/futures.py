@@ -27,8 +27,12 @@ class InvocationRecord:
     compute_s: float = 0.0
     serialize_s: float = 0.0
     server_s: float = 0.0             # billable duration
-    # modeled client-observed latency (ms), from the latency model
+    # client-observed latency (ms): filled by the sim-aws latency *model*,
+    # or — on the http transport — by a real wall-clock *measurement*
+    # (latency_measured=True distinguishes the two; same field so sim and
+    # real numbers are directly comparable)
     modeled_latency_ms: float = 0.0
+    latency_measured: bool = False
     payload_bytes: int = 0
     result_bytes: int = 0
     memory_gb: float = 1.0

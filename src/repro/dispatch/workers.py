@@ -1,24 +1,26 @@
-"""Elastic worker pool — the execution backend standing in for the FaaS fleet.
+"""Elastic worker pool — the in-process execution backend for the FaaS fleet.
 
 Real execution, simulated fleet: invocations run on a bounded set of OS
-threads, while *worker instances* (= Lambda sandboxes) are bookkeeping objects
-that model cold starts, warm reuse, elastic scale-out/in, and failures.  The
-serverless execution contract is enforced: a task sees only its payload bytes
-(``Bridge.entry``), is stateless, and may be killed and retried at any time.
+threads, while sandbox lifecycle (cold/warm accounting, fault injection,
+billing stats) lives in the reusable :class:`repro.runtime.sandbox.SandboxHost`
+— the same host the out-of-process transports (``processes``/``http``) and
+the worker-side :class:`~repro.runtime.worker_host.WorkerHost` use.  The
+serverless execution contract is enforced: a task sees only its payload
+bytes (``Bridge.entry``), is stateless, and may be killed and retried at
+any time.
 """
 from __future__ import annotations
 
 import queue
-import random
 import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
+from ..runtime.sandbox import (FaultPlan, SandboxHost, WorkerCrash,
+                               WorkerInstance)
 from .futures import Invocation, InvocationRecord
 
-
-class WorkerCrash(RuntimeError):
-    """Injected sandbox failure (node loss) — retried by the dispatcher."""
+__all__ = ["BackendCapabilities", "FaultPlan", "WorkerCrash",
+           "WorkerInstance", "WorkerPool", "fill_record"]
 
 
 @dataclass(frozen=True)
@@ -29,34 +31,26 @@ class BackendCapabilities:
     warm_reuse: bool = True        # sandbox cold/warm bookkeeping
     fault_injection: bool = False  # honors a FaultPlan
     models_latency: bool = False   # fills InvocationRecord.modeled_latency_ms
+    measures_latency: bool = False # modeled_latency_ms is a *measurement*
+    cross_process: bool = False    # payloads cross a process/socket boundary
 
 
-@dataclass
-class WorkerInstance:
-    worker_id: int
-    function_name: str
-    invocations: int = 0
-    created_at: float = field(default_factory=time.time)
-
-    @property
-    def is_cold(self) -> bool:
-        return self.invocations == 0
-
-
-@dataclass
-class FaultPlan:
-    """Deterministic fault/straggler injection for tests and benchmarks."""
-    failure_rate: float = 0.0          # P(sandbox crash) per invocation
-    straggler_rate: float = 0.0        # P(task straggles)
-    straggler_factor: float = 8.0      # straggler duration multiplier
-    straggler_sleep_s: float = 0.0     # real extra sleep for stragglers
-    seed: int = 0
-
-    def roll(self, task_id: int, attempt: int) -> tuple[bool, bool]:
-        rng = random.Random(self.seed * 1_000_003 + task_id * 1009 + attempt)
-        fail = rng.random() < self.failure_rate
-        straggle = rng.random() < self.straggler_rate
-        return fail, straggle
+def fill_record(rec: InvocationRecord, *, stats, server_s: float,
+                worker_id: int, cold_start: bool, result_bytes: int) -> None:
+    """Copy one completed entry's accounting into an invocation record —
+    shared by every transport so records look identical across backends."""
+    rec.worker_id = worker_id
+    rec.cold_start = cold_start
+    rec.server_s = server_s
+    rec.result_bytes = result_bytes
+    if isinstance(stats, dict):
+        rec.deserialize_s = stats.get("deserialize_s", 0.0)
+        rec.compute_s = stats.get("compute_s", 0.0)
+        rec.serialize_s = stats.get("serialize_s", 0.0)
+    else:
+        rec.deserialize_s = stats.deserialize_s
+        rec.compute_s = stats.compute_s
+        rec.serialize_s = stats.serialize_s
 
 
 class WorkerPool:
@@ -64,8 +58,8 @@ class WorkerPool:
 
     ``max_concurrency`` models the account's function-concurrency limit
     (paper: 1000); ``os_threads`` bounds real parallelism in this container.
-    Instances scale out on demand (cold start) and are reused warm, per
-    function name — matching FaaS semantics.
+    Sandboxes scale out on demand (cold start) and are reused warm, per
+    function name — matching FaaS semantics — via the ``SandboxHost``.
 
     ``WorkerPool`` is the ``"threads"`` backend of the registry in
     ``dispatch.backends``; subclasses there reuse its sandbox model with
@@ -78,15 +72,16 @@ class WorkerPool:
     def __init__(self, max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None):
         self.max_concurrency = max_concurrency
-        self.fault_plan = fault_plan or FaultPlan()
+        self.sandboxes = SandboxHost(fault_plan)
         self._queue: "queue.Queue[Invocation | None]" = queue.Queue()
-        self._warm: dict[str, list[WorkerInstance]] = {}
-        self._next_worker_id = 0
-        self._live_instances = 0
         self._lock = threading.Lock()
         self._threads: list[threading.Thread] = []
         self._stop = False
         self._resize(os_threads)
+
+    @property
+    def fault_plan(self) -> FaultPlan:
+        return self.sandboxes.fault_plan
 
     # ------------------------------------------------------------- elastic
     def _resize(self, n: int) -> None:
@@ -101,18 +96,16 @@ class WorkerPool:
 
     def drain_warm(self, function_name: str | None = None) -> int:
         """Scale-in: drop warm sandboxes (next invocations pay cold starts)."""
-        with self._lock:
-            if function_name is None:
-                n = sum(len(v) for v in self._warm.values())
-                self._warm.clear()
-            else:
-                n = len(self._warm.pop(function_name, []))
-            self._live_instances -= n
-            return n
+        return self.sandboxes.drain(function_name)
 
     # ------------------------------------------------------------ dispatch
     def submit(self, inv: Invocation) -> None:
         self._queue.put(inv)
+
+    @property
+    def queue_depth(self) -> int:
+        """Invocations accepted but not yet started (admission control)."""
+        return self._queue.qsize()
 
     def shutdown(self) -> None:
         self._stop = True
@@ -120,20 +113,6 @@ class WorkerPool:
             self._queue.put(None)
 
     # ------------------------------------------------------------- worker
-    def _acquire_instance(self, fname: str) -> tuple[WorkerInstance, bool]:
-        with self._lock:
-            warm = self._warm.setdefault(fname, [])
-            if warm:
-                inst = warm.pop()
-                return inst, False
-            self._next_worker_id += 1
-            self._live_instances += 1
-            return WorkerInstance(self._next_worker_id, fname), True
-
-    def _release_instance(self, inst: WorkerInstance) -> None:
-        with self._lock:
-            self._warm.setdefault(inst.function_name, []).append(inst)
-
     def _run(self) -> None:
         while not self._stop:
             inv = self._queue.get()
@@ -158,13 +137,12 @@ class WorkerPool:
 
     def _execute(self, inv: Invocation) -> None:
         bridge = inv.deployed.bridge
-        fail, straggle = self.fault_plan.roll(inv.task_id, inv.attempt)
-        inst, cold = self._acquire_instance(bridge.name)
         rec = InvocationRecord(
             task_id=inv.task_id, function_name=bridge.name,
-            worker_id=inst.worker_id, cold_start=cold, attempts=inv.attempt,
-            hedged=inv.is_hedge, payload_bytes=len(inv.payload),
+            attempts=inv.attempt, hedged=inv.is_hedge,
+            payload_bytes=len(inv.payload),
             memory_gb=bridge.config.memory_gb)
+
         def finish(ok: bool, value, record: InvocationRecord) -> None:
             self._post_execute(inv, record, ok)
             if inv.on_complete is not None:
@@ -175,31 +153,24 @@ class WorkerPool:
                 inv.future.set_error(value, record)
 
         try:
-            if fail:
-                with self._lock:       # crashed sandbox is never reused
-                    self._live_instances -= 1
-                raise WorkerCrash(
-                    f"sandbox {inst.worker_id} lost (task {inv.task_id} "
-                    f"attempt {inv.attempt})")
-            t0 = time.perf_counter()
-            # stats come back with the blob: concurrent entries of the same
-            # bridge must not read each other's accounting (shared-attr race)
-            blob, stats = bridge.entry(inv.payload)
-            server_s = time.perf_counter() - t0
-            if straggle:
-                if self.fault_plan.straggler_sleep_s:
-                    time.sleep(self.fault_plan.straggler_sleep_s)
-                server_s *= self.fault_plan.straggler_factor
-            rec.deserialize_s = stats.deserialize_s
-            rec.compute_s = stats.compute_s
-            rec.serialize_s = stats.serialize_s
-            rec.server_s = server_s
-            rec.result_bytes = len(blob)
-            inst.invocations += 1
-            self._release_instance(inst)
-            finish(True, bridge.unpack_result(blob), rec)
+            done = self.sandboxes.invoke(
+                bridge.entry, bridge.name, inv.payload,
+                task_id=inv.task_id, attempt=inv.attempt)
+            fill_record(rec, stats=done.stats, server_s=done.server_s,
+                        worker_id=done.worker_id, cold_start=done.cold_start,
+                        result_bytes=len(done.blob))
+            finish(True, bridge.unpack_result(done.blob), rec)
         except WorkerCrash as e:
+            self._stamp_failure(rec, e)
             finish(False, e, rec)          # dispatcher decides on retry
         except BaseException as e:         # user-code error: no retry
+            self._stamp_failure(rec, e)
             rec.server_s = 0.0
             finish(False, e, rec)
+
+    @staticmethod
+    def _stamp_failure(rec: InvocationRecord, e: BaseException) -> None:
+        # the sandbox host rode its accounting on the exception: crash and
+        # error records still identify the (cold?) sandbox that burned
+        rec.worker_id = getattr(e, "sandbox_worker_id", rec.worker_id)
+        rec.cold_start = getattr(e, "sandbox_cold_start", rec.cold_start)

@@ -1,10 +1,14 @@
 """Serving launcher: batched requests through a serverless cloud session.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-      --requests 16 --max-new 8 [--backend threads|inline|sim-aws]
+      --requests 16 --max-new 8 \
+      [--backend threads|inline|sim-aws|processes|http]
 
 ``--backend`` switches the execution backend without touching any serving
-code — the single-source property the session API guarantees.
+code — the single-source property the session API guarantees.  The
+``processes``/``http`` backends run generation in real worker processes
+behind the wire protocol (model params ship with each payload; see
+API.md's backend-selection notes for when that trade-off pays off).
 """
 from __future__ import annotations
 

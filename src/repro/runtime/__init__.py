@@ -1,2 +1,31 @@
-from .server import Completion, LMServer, Request, make_generate_fn
-from .trainer import SimulatedPreemption, TrainReport, train
+"""repro.runtime — execution hosts (training, serving, worker sandboxes).
+
+Exports are lazy: ``runtime.sandbox`` / ``runtime.worker_host`` sit *below*
+the dispatch layer (the worker side of every transport), while ``server``
+and ``trainer`` sit above it (they drive a ``cloud.Session``).  Importing
+the package must therefore not pull the high-level modules, or
+``dispatch → runtime.sandbox`` would cycle back through ``cloud``.
+"""
+from typing import Any
+
+_EXPORTS = {
+    "Completion": ".server", "LMServer": ".server", "Request": ".server",
+    "make_generate_fn": ".server",
+    "SimulatedPreemption": ".trainer", "TrainReport": ".trainer",
+    "train": ".trainer",
+    "SandboxHost": ".sandbox", "WorkerInstance": ".sandbox",
+    "FaultPlan": ".sandbox", "WorkerCrash": ".sandbox",
+    "WorkerHost": ".worker_host", "serve_http": ".worker_host",
+    "stdio_main": ".worker_host",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    from importlib import import_module
+    return getattr(import_module(module, __package__), name)

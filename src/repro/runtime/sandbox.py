@@ -1,0 +1,176 @@
+"""Sandbox lifecycle — the transport-agnostic half of every worker runtime.
+
+A FaaS *sandbox* is an execution slot with state the platform (not the
+task) manages: it is provisioned cold, reused warm per function, billed per
+invocation, and may be lost at any time.  This module owns exactly that
+bookkeeping — cold/warm accounting, elastic drain, deterministic fault
+injection — around an opaque entry callable
+``entry(payload: bytes) -> (bytes, stats)``.
+
+It deliberately knows nothing about *where* the entry runs: the in-process
+backends hand it ``Bridge.entry`` directly, the ``processes``/``http``
+transports hand it a proxy that ships the payload across a pipe or socket,
+and the worker-side :class:`~repro.runtime.worker_host.WorkerHost` uses the
+same host to account for the sandboxes living inside one worker process.
+That single seam is what makes backends swappable above it
+(``dispatch.backends``) and transports swappable below it.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Tuple
+
+
+class WorkerCrash(RuntimeError):
+    """Sandbox failure (node loss / worker death) — retried by the dispatcher."""
+
+
+@dataclass
+class WorkerInstance:
+    worker_id: int
+    function_name: str
+    invocations: int = 0
+    created_at: float = field(default_factory=time.time)
+
+    @property
+    def is_cold(self) -> bool:
+        return self.invocations == 0
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic fault/straggler injection for tests and benchmarks."""
+    failure_rate: float = 0.0          # P(sandbox crash) per invocation
+    straggler_rate: float = 0.0        # P(task straggles)
+    straggler_factor: float = 8.0      # straggler duration multiplier
+    straggler_sleep_s: float = 0.0     # real extra sleep for stragglers
+    seed: int = 0
+
+    def roll(self, task_id: int, attempt: int) -> tuple[bool, bool]:
+        rng = random.Random(self.seed * 1_000_003 + task_id * 1009 + attempt)
+        fail = rng.random() < self.failure_rate
+        straggle = rng.random() < self.straggler_rate
+        return fail, straggle
+
+
+@dataclass
+class SandboxInvocation:
+    """What one trip through a sandbox produced (feeds InvocationRecord)."""
+    blob: bytes
+    stats: Any                         # EntryStats-shaped (attribute access)
+    worker_id: int
+    cold_start: bool
+    server_s: float
+
+
+class SandboxHost:
+    """Cold/warm sandbox pool + fault injection around entry callables.
+
+    Thread-safe; one host stands in for one fleet (client side) or for the
+    sandboxes inside one worker process (worker side).  ``worker_id_base``
+    keeps ids globally unique when several processes each run a host.
+    """
+
+    def __init__(self, fault_plan: FaultPlan | None = None, *,
+                 worker_id_base: int = 0):
+        self.fault_plan = fault_plan or FaultPlan()
+        self._warm: dict[str, list[WorkerInstance]] = {}
+        self._next_worker_id = worker_id_base
+        self._live_instances = 0
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------- lifecycle
+    def acquire(self, function_name: str) -> Tuple[WorkerInstance, bool]:
+        """A sandbox for one invocation: warm if available, else cold."""
+        with self._lock:
+            warm = self._warm.setdefault(function_name, [])
+            if warm:
+                return warm.pop(), False
+            self._next_worker_id += 1
+            self._live_instances += 1
+            return WorkerInstance(self._next_worker_id, function_name), True
+
+    def release(self, inst: WorkerInstance) -> None:
+        with self._lock:
+            self._warm.setdefault(inst.function_name, []).append(inst)
+
+    def discard(self, inst: WorkerInstance) -> None:
+        """A crashed sandbox is never reused."""
+        with self._lock:
+            self._live_instances -= 1
+
+    def drain(self, function_name: str | None = None) -> int:
+        """Scale-in: drop warm sandboxes (next invocations pay cold starts)."""
+        with self._lock:
+            if function_name is None:
+                n = sum(len(v) for v in self._warm.values())
+                self._warm.clear()
+            else:
+                n = len(self._warm.pop(function_name, []))
+            self._live_instances -= n
+            return n
+
+    @property
+    def live_instances(self) -> int:
+        with self._lock:
+            return self._live_instances
+
+    def warm_count(self, function_name: str | None = None) -> int:
+        with self._lock:
+            if function_name is None:
+                return sum(len(v) for v in self._warm.values())
+            return len(self._warm.get(function_name, []))
+
+    # ------------------------------------------------------------- invoke
+    def invoke(self, entry: Callable[[bytes], tuple], function_name: str,
+               payload: bytes, *, task_id: int = 0,
+               attempt: int = 1) -> SandboxInvocation:
+        """One billed trip through a sandbox.
+
+        Rolls the fault plan (an injected failure raises
+        :class:`WorkerCrash` and burns the sandbox), times the entry call as
+        the billable server duration, applies straggler inflation, and
+        returns blob + stats + sandbox metadata.  User-code exceptions
+        propagate unchanged — error policy belongs to the caller.
+        """
+        fail, straggle = self.fault_plan.roll(task_id, attempt)
+        inst, cold = self.acquire(function_name)
+        if fail:
+            self.discard(inst)
+            crash = WorkerCrash(
+                f"sandbox {inst.worker_id} lost (task {task_id} "
+                f"attempt {attempt})")
+            self._stamp(crash, inst, cold)
+            raise crash
+        try:
+            t0 = time.perf_counter()
+            # stats come back with the blob: concurrent entries of the same
+            # bridge must not read each other's accounting (shared-attr race)
+            blob, stats = entry(payload)
+            server_s = time.perf_counter() - t0
+        except BaseException as e:
+            self.discard(inst)       # errored sandbox is not re-warmed
+            self._stamp(e, inst, cold)
+            raise
+        if straggle:
+            if self.fault_plan.straggler_sleep_s:
+                time.sleep(self.fault_plan.straggler_sleep_s)
+            server_s *= self.fault_plan.straggler_factor
+        inst.invocations += 1
+        self.release(inst)
+        return SandboxInvocation(blob=blob, stats=stats,
+                                 worker_id=inst.worker_id, cold_start=cold,
+                                 server_s=server_s)
+
+    @staticmethod
+    def _stamp(err: BaseException, inst: WorkerInstance, cold: bool) -> None:
+        """Failure records must still say which sandbox burned: ride the
+        accounting on the exception (some exception types reject attrs)."""
+        try:
+            err.sandbox_worker_id = inst.worker_id     # type: ignore[attr-defined]
+            err.sandbox_cold_start = cold              # type: ignore[attr-defined]
+        except Exception:
+            pass

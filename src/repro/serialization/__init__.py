@@ -2,9 +2,11 @@ from .archive import (FORMATS, decode_binary, decode_binary_json,
                       decode_structured_json, deserialize, encode_binary,
                       encode_binary_json, encode_structured_json, serialize)
 from .pytree import flatten, register_custom, unflatten
+from . import wire
 
 __all__ = [
     "FORMATS", "serialize", "deserialize", "encode_binary", "decode_binary",
     "encode_binary_json", "decode_binary_json", "encode_structured_json",
     "decode_structured_json", "flatten", "unflatten", "register_custom",
+    "wire",
 ]

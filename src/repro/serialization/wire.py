@@ -1,0 +1,185 @@
+"""Versioned wire protocol shared by every worker transport.
+
+The paper's client ships a serialized payload over HTTP to a separately-
+deployed entry point and reads back a serialized result (§4–§5).  This
+module is that wire: one framed envelope format used identically by the
+``processes`` transport (over a pipe) and the ``http`` transport (as POST
+bodies), so transports differ only in how bytes move, never in what they
+mean.
+
+Frame layout::
+
+    magic  b"RWIR" | version u16 | kind u8 | header_len u32
+    header: JSON (utf-8) — routing + accounting metadata
+    body:   raw bytes    — the function payload / result blob, untouched
+
+Kinds:
+
+* ``INVOKE``  — header {function, task_id, attempt}; body = payload blob.
+* ``RESULT``  — header {stats{deserialize_s,compute_s,serialize_s},
+                server_s, cold_start, worker_id}; body = result blob.
+* ``ERROR``   — header {etype, message, traceback, retryable}; empty body.
+                ``retryable=True`` marks infrastructure loss (the sandbox
+                died) — the dispatcher's retry policy treats it as a
+                ``WorkerCrash``; ``False`` marks a user-code error, which
+                is surfaced (with the original remote traceback text)
+                and never retried.
+* ``CONTROL`` — header {op, ...}; worker-management verbs (ping, drain).
+
+Malformed frames raise :class:`WireProtocolError` — a transport must turn
+undecodable bytes into a visible invocation error, never a hung future.
+"""
+from __future__ import annotations
+
+import builtins
+import json
+import struct
+from dataclasses import dataclass, field
+from typing import Any
+
+MAGIC = b"RWIR"
+WIRE_VERSION = 1
+
+INVOKE, RESULT, ERROR, CONTROL = 1, 2, 3, 4
+_HEADER = struct.Struct("<4sHBI")          # magic, version, kind, header_len
+
+
+class WireProtocolError(RuntimeError):
+    """The bytes on the wire are not a valid protocol frame."""
+
+
+class RemoteTaskError(RuntimeError):
+    """A user-code exception whose type could not be reconstructed locally.
+
+    Carries ``remote_traceback`` — the original traceback text from the
+    worker process.
+    """
+
+
+@dataclass
+class InvokeRequest:
+    function: str                  # mangled stable name (manifest key)
+    payload: bytes
+    task_id: int = 0
+    attempt: int = 1
+
+
+@dataclass
+class ResultReply:
+    blob: bytes
+    stats: dict[str, float] = field(default_factory=dict)
+    server_s: float = 0.0
+    cold_start: bool = False
+    worker_id: int = -1
+
+
+@dataclass
+class ErrorReply:
+    etype: str
+    message: str
+    traceback: str = ""
+    retryable: bool = False
+
+
+@dataclass
+class ControlRequest:
+    op: str                        # "ping" | "drain" | "shutdown"
+    data: dict[str, Any] = field(default_factory=dict)
+
+
+def _frame(kind: int, header: dict, body: bytes = b"") -> bytes:
+    h = json.dumps(header, separators=(",", ":")).encode()
+    return _HEADER.pack(MAGIC, WIRE_VERSION, kind, len(h)) + h + body
+
+
+def encode_invoke(function: str, payload: bytes, *, task_id: int = 0,
+                  attempt: int = 1) -> bytes:
+    return _frame(INVOKE, {"function": function, "task_id": task_id,
+                           "attempt": attempt}, payload)
+
+
+def encode_result(blob: bytes, *, stats: dict[str, float] | None = None,
+                  server_s: float = 0.0, cold_start: bool = False,
+                  worker_id: int = -1) -> bytes:
+    return _frame(RESULT, {"stats": stats or {}, "server_s": server_s,
+                           "cold_start": cold_start,
+                           "worker_id": worker_id}, blob)
+
+
+def encode_error(err: BaseException | None = None, *, etype: str | None = None,
+                 message: str | None = None, traceback_text: str = "",
+                 retryable: bool = False) -> bytes:
+    if err is not None:
+        etype = etype or type(err).__name__
+        message = message if message is not None else str(err)
+    return _frame(ERROR, {"etype": etype or "RuntimeError",
+                          "message": message or "",
+                          "traceback": traceback_text,
+                          "retryable": retryable})
+
+
+def encode_control(op: str, **data: Any) -> bytes:
+    return _frame(CONTROL, {"op": op, "data": data})
+
+
+def decode(data: bytes) -> InvokeRequest | ResultReply | ErrorReply | ControlRequest:
+    """Parse one frame; raises :class:`WireProtocolError` on malformed input."""
+    if len(data) < _HEADER.size:
+        raise WireProtocolError(f"truncated frame ({len(data)} bytes)")
+    magic, version, kind, hlen = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise WireProtocolError(f"bad magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise WireProtocolError(f"wire version {version} unsupported "
+                                f"(speaking {WIRE_VERSION})")
+    off = _HEADER.size
+    if len(data) < off + hlen:
+        raise WireProtocolError("truncated header")
+    try:
+        header = json.loads(data[off:off + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireProtocolError(f"undecodable header: {e}") from None
+    body = bytes(data[off + hlen:])
+    try:
+        if kind == INVOKE:
+            return InvokeRequest(function=header["function"], payload=body,
+                                 task_id=header.get("task_id", 0),
+                                 attempt=header.get("attempt", 1))
+        if kind == RESULT:
+            return ResultReply(blob=body, stats=header.get("stats", {}),
+                               server_s=header.get("server_s", 0.0),
+                               cold_start=header.get("cold_start", False),
+                               worker_id=header.get("worker_id", -1))
+        if kind == ERROR:
+            return ErrorReply(etype=header.get("etype", "RuntimeError"),
+                              message=header.get("message", ""),
+                              traceback=header.get("traceback", ""),
+                              retryable=header.get("retryable", False))
+        if kind == CONTROL:
+            return ControlRequest(op=header["op"],
+                                  data=header.get("data", {}))
+    except KeyError as e:
+        raise WireProtocolError(f"frame kind {kind} missing field {e}") from None
+    raise WireProtocolError(f"unknown frame kind {kind}")
+
+
+def to_exception(err: ErrorReply) -> BaseException:
+    """Rebuild a local exception from an error envelope.
+
+    Builtin exception types are reconstructed (so ``ValueError`` raised in a
+    worker is still caught as ``ValueError`` by the client — backend choice
+    must not change error-handling code); anything else becomes a
+    :class:`RemoteTaskError`.  The original worker traceback text rides
+    along as ``remote_traceback``.
+    """
+    cls = getattr(builtins, err.etype, None)
+    if not (isinstance(cls, type) and issubclass(cls, BaseException)):
+        cls = RemoteTaskError
+        exc: BaseException = cls(f"{err.etype}: {err.message}")
+    else:
+        try:
+            exc = cls(err.message)
+        except Exception:
+            exc = RemoteTaskError(f"{err.etype}: {err.message}")
+    exc.remote_traceback = err.traceback       # type: ignore[attr-defined]
+    return exc

@@ -1,5 +1,6 @@
-"""Session API tests (ISSUE 1): backend registry, bound-function handles,
-streaming fork-join, partial-failure policies, and the paper-style shim."""
+"""Session API tests (ISSUE 1/2): backend registry, bound-function handles,
+streaming fork-join, partial-failure policies, the paper-style shim, the
+cross-backend contract matrix, and admission control."""
 import time
 
 import jax.numpy as jnp
@@ -7,11 +8,13 @@ import numpy as np
 import pytest
 
 from repro import cloud
-from repro.cloud import (Session, as_completed, available_backends, gather,
-                         register_backend, resolve_backend)
+from repro.cloud import (Saturated, Session, as_completed,
+                         available_backends, gather, register_backend,
+                         resolve_backend)
 from repro.core import FunctionConfig
-from repro.dispatch import (Dispatcher, FaultPlan, InlineBackend,
-                            SimAWSBackend, WorkerPool, dispatch, wait)
+from repro.dispatch import (Dispatcher, FaultPlan, HttpBackend,
+                            InlineBackend, ProcessesBackend, SimAWSBackend,
+                            WorkerPool, dispatch, wait)
 
 
 # ------------------------------------------------------------- registry ----
@@ -22,7 +25,8 @@ def test_registry_resolution():
         b = resolve_backend(name, os_threads=2)
         assert isinstance(b, cls)
         b.shutdown()
-    assert {"threads", "inline", "sim-aws"} <= set(available_backends())
+    assert {"threads", "inline", "sim-aws",
+            "processes", "http"} <= set(available_backends())
 
 
 def test_registry_unknown_name_lists_available():
@@ -54,6 +58,10 @@ def test_capability_flags():
     assert not InlineBackend.capabilities.concurrent
     assert SimAWSBackend.capabilities.models_latency
     assert not WorkerPool.capabilities.models_latency
+    assert ProcessesBackend.capabilities.cross_process
+    assert HttpBackend.capabilities.measures_latency
+    assert not WorkerPool.capabilities.cross_process
+    assert not SimAWSBackend.capabilities.measures_latency
 
 
 # ------------------------------------------------------ session basics ----
@@ -324,5 +332,152 @@ def test_session_wraps_caller_owned_dispatcher():
 
 def test_cloud_namespace_exports():
     for name in ("Session", "BoundFunction", "gather", "as_completed",
-                 "register_backend", "resolve_backend", "available_backends"):
+                 "register_backend", "resolve_backend", "available_backends",
+                 "Saturated"):
         assert hasattr(cloud, name)
+
+
+# ------------------------------------------------ backend contract matrix ---
+# One suite, every registered backend (ISSUE 2 satellite): the Backend
+# contract is enforced by a single matrix instead of per-backend tests.
+# `processes` and `http` run the same tasks in real worker processes, so
+# the task functions live at module level (shippable by reference).
+
+MATRIX_BACKENDS = ("inline", "threads", "sim-aws", "processes", "http")
+
+
+def matrix_square_sum(x):
+    import jax.numpy as jnp
+    return jnp.sum(x * x)
+
+
+def matrix_picky(x):
+    if x == 2:
+        raise ValueError("bad input 2")
+    return x
+
+
+@pytest.fixture(scope="module", params=MATRIX_BACKENDS)
+def any_backend(request):
+    with Session(request.param, os_threads=2) as sess:
+        yield sess
+
+
+def test_matrix_submit_resolves_with_billing(any_backend):
+    f = any_backend.function(matrix_square_sum, name="mat_ssq",
+                             memory_mb=512)
+    before = any_backend.cost.invocations
+    fut = f.submit(jnp.ones(4))
+    assert float(fut.result(timeout=300)) == 4.0
+    rec = fut.record
+    assert rec is not None and rec.memory_gb == 0.5
+    assert rec.worker_id > 0
+    assert any_backend.cost.invocations == before + 1
+
+
+def test_matrix_map_is_ordered(any_backend):
+    f = any_backend.function(matrix_square_sum, name="mat_ssq")
+    out = [float(r) for r in f.map([(jnp.ones(4) * i,) for i in range(4)])]
+    assert out == [0.0, 4.0, 16.0, 36.0]
+
+
+def test_matrix_map_unordered_yields_all(any_backend):
+    f = any_backend.function(matrix_square_sum, name="mat_ssq")
+    seen = sorted(float(r) for r in
+                  f.map_unordered([(jnp.ones(4) * i,) for i in range(4)]))
+    assert seen == [0.0, 4.0, 16.0, 36.0]
+
+
+def test_matrix_gather_policies(any_backend):
+    f = any_backend.function(matrix_picky, jax_traceable=False)
+    futs = [f.submit(i) for i in range(4)]
+    out = gather(futs, return_exceptions=True, timeout=300)
+    assert out[0] == 0 and out[1] == 1 and out[3] == 3
+    assert isinstance(out[2], ValueError)         # type survives the wire
+    futs2 = [f.submit(i) for i in range(4)]
+    with pytest.raises(ValueError, match="bad input 2"):
+        gather(futs2, timeout=300)
+
+
+def test_matrix_options_override_reaches_bill(any_backend):
+    f = any_backend.function(matrix_square_sum, name="mat_ssq")
+    fut = f.options(memory_mb=2048).submit(jnp.ones(2))
+    fut.result(timeout=300)
+    assert fut.record.memory_gb == 2.0            # redeploy honored remotely
+    fut2 = f.submit(jnp.ones(2))
+    fut2.result(timeout=300)
+    assert fut2.record.memory_gb == 1.0
+
+
+def test_matrix_warm_reuse_accounting(any_backend):
+    f = any_backend.function(matrix_square_sum, name="mat_warm")
+    before = len(any_backend.records)
+    f.map([(jnp.ones(2),)] * 6)
+    recs = any_backend.records[before:before + 6]
+    assert sum(1 for r in recs if r.cold_start) < 6   # warm reuse happened
+
+
+# ------------------------------------------------------ admission control ---
+
+def test_session_exposes_inflight_and_queue_depth():
+    with Session("threads", os_threads=1) as sess:
+        assert sess.inflight == 0 and sess.queue_depth == 0
+
+        def slow(s):
+            time.sleep(s)
+            return s
+
+        f = sess.function(slow, jax_traceable=False)
+        futs = [f.submit(0.3) for _ in range(3)]
+        assert sess.inflight == 3         # one running + queued behind it
+        gather(futs)
+        assert sess.inflight == 0
+
+
+def test_shed_raises_saturated_instead_of_queueing():
+    with Session("threads", os_threads=1, max_concurrency=2,
+                 shed=True) as sess:
+        def slow(s):
+            time.sleep(s)
+            return s
+
+        f = sess.function(slow, jax_traceable=False)
+        futs = [f.submit(0.5), f.submit(0.5)]
+        with pytest.raises(Saturated, match="max_concurrency=2"):
+            f.submit(0.5)
+        # map-sized admission is checked up front, before any dispatch
+        with pytest.raises(Saturated):
+            f.map([(0.1,)] * 3)
+        gather(futs)
+        assert float(f.submit(0.01).result(timeout=30)) == 0.01  # recovered
+
+
+def test_shed_map_failure_keeps_sibling_reservations():
+    """A failed task must free only ITS admission slot — siblings still in
+    flight keep theirs, so a follow-up burst is correctly shed."""
+    with Session("threads", os_threads=2, max_concurrency=2,
+                 shed=True) as sess:
+        def task(s):
+            if s < 0:
+                raise ValueError("boom")
+            time.sleep(s)
+            return s
+
+        f = sess.function(task, jax_traceable=False)
+        with pytest.raises(ValueError, match="boom"):
+            f.map([(-1,), (0.6,)])
+        with pytest.raises(Saturated):     # the sibling still holds a slot
+            f.map([(0.01,), (0.01,)])
+        sess.wait()                        # sibling resolves → slots free
+        assert f.map([(0.01,), (0.01,)]) == [0.01, 0.01]
+
+
+def test_shed_off_keeps_queueing_semantics():
+    with Session("threads", os_threads=1, max_concurrency=1) as sess:
+        def slow(s):
+            time.sleep(s)
+            return s
+
+        f = sess.function(slow, jax_traceable=False)
+        futs = [f.submit(0.05) for _ in range(3)]   # over the limit: queued
+        assert [r for r in gather(futs)] == [0.05] * 3
