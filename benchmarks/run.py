@@ -25,11 +25,17 @@ def main():
     os.makedirs(RESULTS, exist_ok=True)
 
     from . import (dispatch_bench, nqueens_bench, raytracer_bench,
-                   roofline_table, serialization_bench)
+                   roofline_table, serialization_bench, serve_bench)
 
     benches = {
         "serialization (paper Tables 9/10)": serialization_bench.run,
         "dispatch_latency (paper Fig 11)": dispatch_bench.run,
+        "serving (waves vs continuous, ISSUE 3)":
+            (lambda: serve_bench.run("threads", requests=16, concurrency=8,
+                                     prompt_len=8, max_new=8, wave=4,
+                                     slots=2, os_threads=4)) if args.quick
+            else (lambda: serve_bench.run("http", requests=64,
+                                          concurrency=32, max_new=32)),
         "nqueens (paper Figs 12/13)":
             (lambda: nqueens_bench.run(n=9, plist=(1, 2))) if args.quick
             else (lambda: nqueens_bench.run(n=12, plist=(1, 2))),

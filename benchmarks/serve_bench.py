@@ -1,0 +1,280 @@
+"""Serving load generator: sync-waves vs async-continuous, side by side.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench \
+      [--backend threads|processes|http|...] [--requests 48] \
+      [--concurrency 32] [--open-rate 0] [--json BENCH_serving.json]
+
+Closed loop (default): ``--concurrency`` clients each keep one request
+outstanding until ``--requests`` total have completed — the paper's
+fork-join client turned into sustained traffic.  Open loop
+(``--open-rate`` req/s): Poisson arrivals, latency includes queueing the
+way a real client sees it.
+
+Two schedulers over the *same* pack/dispatch/unpack core:
+
+* ``waves``      — ``LMServer.serve``: fixed fork-join partition into
+                   ``--wave``-sized batches, ``--slots`` in flight (the
+                   sync client: blocking threads).
+* ``continuous`` — ``repro.serving.ContinuousBatcher`` on an event loop:
+                   arriving requests admitted into decode slots as they
+                   free, bucketed by decode length.  On the ``http``
+                   backend the client side is the multiplexed
+                   ``http-aio`` asyncio client (paper-style
+                   conns × streams, no thread per request).
+
+Request lengths are *long-tail mixed* (~3/4 short at ``max_new/8``, ~1/4
+long at ``--max-new``) — the workload where fixed waves pay the
+long-neighbour tax and continuous batching shows up in throughput.
+
+``--json`` writes the machine-readable ``repro.serve_bench/v1`` schema
+(see ``make_result``); CI's serving smoke step runs a tiny instance on
+every push.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import numpy as np
+
+
+# ------------------------------------------------------------- workload ----
+
+def make_requests(cfg, n: int, prompt_len: int, max_new: int, seed: int = 0):
+    """Long-tail request mix: ~3/4 short (max_new/8), ~1/4 long.
+
+    The production-shaped workload: most completions are short, a tail is
+    long.  Arrival-order waves almost always contain one long request, so
+    every member decodes the full tail; length-bucketed continuous batches
+    mostly decode short — that delta is the throughput story.
+    """
+    from repro.runtime.server import Request
+    rng = np.random.default_rng(seed)
+    short = max(1, max_new // 8)
+    return [Request(prompt=list(rng.integers(1, cfg.vocab_size, prompt_len)),
+                    max_new=(short if rng.random() < 0.75 else max_new))
+            for _ in range(n)]
+
+
+def make_server(backend: str, arch: str, max_new: int, os_threads: int):
+    import jax
+    from repro.cloud import Session
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.runtime.server import LMServer
+
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    session = Session(backend, os_threads=os_threads)
+    server = LMServer(cfg, params, session=session, max_new=max_new)
+    return cfg, session, server
+
+
+def warmup(server, cfg, max_new: int, prompt_len: int, batch: int) -> None:
+    """Pay every decode bucket's AOT compile at the *real* packed shape
+    (batch/prompt shape buckets) before timing anything."""
+    from repro.runtime.server import Request, decode_bucket
+    prompt = list(range(1, prompt_len + 1))
+    for b in sorted({decode_bucket(max(1, max_new // 8)),
+                     decode_bucket(max_new)}):
+        server.serve_wave([Request(prompt=prompt, max_new=b)] * batch)
+
+
+def percentiles(lats_ms: list[float]) -> dict:
+    a = np.asarray(lats_ms, dtype=np.float64)
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p95_ms": float(np.percentile(a, 95)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean())}
+
+
+def summarize(lats_ms: list[float], wall_s: float, n_requests: int,
+              tokens: int) -> dict:
+    out = {"requests": n_requests, "wall_s": round(wall_s, 3),
+           "throughput_rps": round(n_requests / wall_s, 3),
+           "tokens_per_s": round(tokens / wall_s, 3)}
+    out.update({k: round(v, 2) for k, v in percentiles(lats_ms).items()})
+    return out
+
+
+# ----------------------------------------------------------- sync waves ----
+
+def bench_waves(server, requests, *, wave_size: int, slots: int) -> dict:
+    """Fixed fork-join: all requests present at t0, ``wave_size`` batches,
+    ``slots`` waves in flight; a request's client-observed latency is its
+    wave's completion time (the whole wave joins before anyone unpacks)."""
+    waves = [requests[i:i + wave_size]
+             for i in range(0, len(requests), wave_size)]
+    t0 = time.perf_counter()
+    futs, done_at = [], [0.0] * len(waves)
+
+    def settle(i):
+        futs[i].result()
+        done_at[i] = time.perf_counter() - t0
+
+    for i, w in enumerate(waves):
+        if i >= slots:
+            settle(i - slots)              # free the oldest payload
+        futs.append(server.submit_wave(w, min_rows=wave_size))
+    for i in range(max(0, len(waves) - slots), len(waves)):
+        settle(i)
+    comps = []
+    for w, f in zip(waves, futs):
+        comps.extend(server.unpack_wave(w, f))
+    wall = time.perf_counter() - t0
+    lats = [done_at[i // wave_size] * 1000.0 for i in range(len(requests))]
+    tokens = sum(len(c.tokens) for c in comps)
+    return summarize(lats, wall, len(requests), tokens)
+
+
+# ----------------------------------------------------- async continuous ----
+
+def bench_continuous(server, requests, *, concurrency: int, max_batch: int,
+                     slots: int, max_wait_ms: float,
+                     open_rate: float = 0.0, seed: int = 0) -> dict:
+    """Closed loop (``open_rate==0``): ``concurrency`` clients back to
+    back.  Open loop: Poisson arrivals at ``open_rate`` req/s, latency
+    measured from *arrival* (queueing included)."""
+    from repro.serving import ContinuousBatcher
+
+    lats_ms: list[float] = []
+    tokens = 0
+
+    async def go():
+        nonlocal tokens
+        loop = asyncio.get_running_loop()
+        sem = asyncio.Semaphore(max(1, concurrency))
+        rng = np.random.default_rng(seed)
+        arrivals = None
+        if open_rate > 0:
+            gaps = rng.exponential(1.0 / open_rate, size=len(requests))
+            arrivals = np.cumsum(gaps)
+
+        async with ContinuousBatcher(server, max_batch=max_batch,
+                                     slots=slots,
+                                     max_wait_ms=max_wait_ms) as batcher:
+            t0 = loop.time()
+
+            async def one(i, r):
+                nonlocal tokens
+                t_issue = None
+                if arrivals is not None:
+                    await asyncio.sleep(max(0.0, arrivals[i]
+                                            - (loop.time() - t0)))
+                    t_issue = loop.time()   # open loop: latency from ARRIVAL
+                async with sem:
+                    if t_issue is None:     # closed loop: from the client's turn
+                        t_issue = loop.time()
+                    comp = await batcher.submit(r)
+                    lats_ms.append((loop.time() - t_issue) * 1000.0)
+                    tokens += len(comp.tokens)
+
+            await asyncio.gather(*[one(i, r) for i, r in enumerate(requests)])
+            wall = loop.time() - t0
+            return wall, batcher.stats.summary()
+
+    wall, sched = asyncio.run(go())
+    out = summarize(lats_ms, wall, len(requests), tokens)
+    out["scheduler"] = sched
+    return out
+
+
+# ------------------------------------------------------------------ run ----
+
+def make_result(config: dict, results: dict) -> dict:
+    """The ``--json`` document — stable schema for CI and plots."""
+    doc = {"schema": "repro.serve_bench/v1", "config": config,
+           "results": results}
+    w, c = results.get("waves"), results.get("continuous")
+    if w and c:
+        doc["speedup_continuous_vs_waves"] = round(
+            c["throughput_rps"] / max(w["throughput_rps"], 1e-9), 3)
+    return doc
+
+
+def run(backend: str = "threads", arch: str = "smollm-360m", *,
+        requests: int = 64, concurrency: int = 32, prompt_len: int = 16,
+        max_new: int = 32, wave: int = 8, slots: int = 4,
+        max_wait_ms: float = 10.0, open_rate: float = 0.0,
+        os_threads: int = 8, modes=("waves", "continuous"),
+        seed: int = 0) -> dict:
+    results: dict = {}
+    config = {"backend": backend, "arch": arch, "requests": requests,
+              "concurrency": concurrency, "prompt_len": prompt_len,
+              "max_new": max_new, "wave_size": wave, "slots": slots,
+              "max_wait_ms": max_wait_ms, "open_rate": open_rate}
+
+    if "waves" in modes:
+        cfg, session, server = make_server(backend, arch, max_new, os_threads)
+        try:
+            reqs = make_requests(cfg, requests, prompt_len, max_new, seed)
+            warmup(server, cfg, max_new, prompt_len, wave)
+            results["waves"] = bench_waves(server, reqs, wave_size=wave,
+                                           slots=slots)
+            results["waves"]["cost"] = session.cost.summary()
+        finally:
+            session.close()
+
+    if "continuous" in modes:
+        # the async stack's client half: on the plain http backend swap in
+        # the multiplexed asyncio client (same worker model, no thread per
+        # in-flight request) — that pairing IS the async-serving story
+        cont_backend = "http-aio" if backend == "http" else backend
+        cfg, session, server = make_server(cont_backend, arch, max_new,
+                                           os_threads)
+        try:
+            reqs = make_requests(cfg, requests, prompt_len, max_new, seed)
+            warmup(server, cfg, max_new, prompt_len, wave)
+            results["continuous"] = bench_continuous(
+                server, reqs, concurrency=concurrency, max_batch=wave,
+                slots=slots, max_wait_ms=max_wait_ms, open_rate=open_rate,
+                seed=seed)
+            results["continuous"]["backend"] = cont_backend
+            results["continuous"]["cost"] = session.cost.summary()
+        finally:
+            session.close()
+
+    return make_result(config, results)
+
+
+def main(argv=None):
+    from repro.cloud import available_backends
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="threads",
+                    choices=available_backends())
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--concurrency", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--wave", type=int, default=8,
+                    help="wave size / continuous max_batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="in-flight batches, both modes")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0)
+    ap.add_argument("--open-rate", type=float, default=0.0,
+                    help="req/s Poisson arrivals (0 = closed loop)")
+    ap.add_argument("--os-threads", type=int, default=8)
+    ap.add_argument("--modes", default="waves,continuous")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write the repro.serve_bench/v1 document here")
+    args = ap.parse_args(argv)
+
+    doc = run(args.backend, args.arch, requests=args.requests,
+              concurrency=args.concurrency, prompt_len=args.prompt_len,
+              max_new=args.max_new, wave=args.wave, slots=args.slots,
+              max_wait_ms=args.max_wait_ms, open_rate=args.open_rate,
+              os_threads=args.os_threads,
+              modes=tuple(args.modes.split(",")))
+    text = json.dumps(doc, indent=1)
+    print(text)
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

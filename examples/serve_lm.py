@@ -1,10 +1,15 @@
 """Serverless LM serving — batched generation requests as offloaded tasks.
 
-    PYTHONPATH=src python examples/serve_lm.py [--requests 12 --max-new 8]
+    PYTHONPATH=src python examples/serve_lm.py \
+        [--requests 12 --max-new 8] [--backend processes|http|...] \
+        [--mode waves|continuous]
 
-Every wave of requests becomes one stateless serverless invocation
-(prefill + greedy decode loop, AOT-compiled entry point); the dispatcher
-provides retry/hedging and the GB-seconds bill per request.
+Every decode batch is one stateless serverless invocation (prefill +
+greedy decode loop, AOT-compiled entry point); the dispatcher provides
+retry/hedging and the GB-seconds bill per request.  ``--mode continuous``
+runs the same requests through the asyncio continuous batcher (arriving
+requests admitted into free decode slots, grouped by decode length)
+instead of fixed waves — same results, serving-shaped scheduling.
 """
 import argparse
 import sys
@@ -30,6 +35,8 @@ def main():
     ap.add_argument("--wave", type=int, default=4)
     ap.add_argument("--backend", default="threads",
                     choices=available_backends())
+    ap.add_argument("--mode", default="waves",
+                    choices=("waves", "continuous"))
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
@@ -43,12 +50,17 @@ def main():
                                              args.prompt_len)),
                     max_new=args.max_new) for _ in range(args.requests)]
     t0 = time.perf_counter()
-    comps = server.serve(reqs, wave_size=args.wave)
+    if args.mode == "continuous":
+        from repro.serving import run_continuous
+        comps = run_continuous(server, reqs, concurrency=args.requests,
+                               max_batch=args.wave, slots=2)
+    else:
+        comps = server.serve(reqs, wave_size=args.wave)
     wall = time.perf_counter() - t0
     for i, c in enumerate(comps[:4]):
         print(f"req {i}: {c.tokens}  ({c.cost_gb_s:.4f} GB-s)")
-    print(f"{len(comps)} requests in {wall:.2f}s; bill:",
-          server.cost_report.summary())
+    print(f"{len(comps)} requests in {wall:.2f}s ({args.mode} on "
+          f"{args.backend}); bill:", server.cost_report.summary())
     session.close()
 
 

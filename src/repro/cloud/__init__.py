@@ -13,13 +13,14 @@
 from ..dispatch.backends import (Backend, BackendCapabilities,
                                  available_backends, register_backend,
                                  resolve_backend)
-from ..dispatch.futures import InvocationFuture, as_completed, gather
+from ..dispatch.futures import (InvocationCancelled, InvocationFuture,
+                                as_completed, gather)
 from .session import (BoundFunction, Saturated, Session, session_for,
                       session_scope)
 
 __all__ = [
     "Session", "BoundFunction", "session_for", "session_scope",
-    "as_completed", "gather", "InvocationFuture", "Saturated",
-    "Backend", "BackendCapabilities", "register_backend",
+    "as_completed", "gather", "InvocationFuture", "InvocationCancelled",
+    "Saturated", "Backend", "BackendCapabilities", "register_backend",
     "resolve_backend", "available_backends",
 ]

@@ -153,3 +153,15 @@ SHAPES: dict[str, ShapeConfig] = {
     "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
     "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
 }
+
+
+# ---------------------------------------------------------------- wire ----
+# Model configs ride in serve-task payloads (the generate closure's data
+# capture, ISSUE 3): register them with the pytree reflection layer so the
+# wire format can carry them — the cereal-style "user adds serialization
+# for custom types" hook (paper §3.3).  Registration happens at import
+# time on both sides (client deploy and worker thaw import this module).
+from ..serialization.pytree import register_custom as _register_custom  # noqa: E402
+
+for _cls in (MoEConfig, SSMConfig, ModelConfig, ShapeConfig):
+    _register_custom(_cls)

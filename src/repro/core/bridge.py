@@ -75,6 +75,28 @@ class Bridge:
 _STATIC_TYPES = (bool, int, float, str, bytes)
 
 
+def _is_static_capture(v: Any) -> bool:
+    """Compile-time constant vs. dynamic payload input.
+
+    Python scalars and any *hashable* structured value (frozen dataclasses
+    like ``ModelConfig``, tuples of scalars) are template-parameter-like:
+    their values determine shapes/control flow, so they bake into the
+    traced jaxpr.  Arrays (jax/numpy, including numpy scalars) stay
+    dynamic — they are the data the payload exists to carry.
+    """
+    if isinstance(v, _STATIC_TYPES):
+        return True
+    import numpy as np
+    if isinstance(v, (np.ndarray, np.generic)) or \
+            type(v).__module__.startswith("jax"):
+        return False
+    try:
+        hash(v)
+    except TypeError:
+        return False
+    return True
+
+
 def make_executor_aot(rf: RemoteFunction, args: tuple, kwargs: dict,
                       captures: dict) -> Callable:
     """AOT path: lower+compile once against abstract payloads.
@@ -83,18 +105,25 @@ def make_executor_aot(rf: RemoteFunction, args: tuple, kwargs: dict,
     defining property of Cppless's alternative entry points vs. runtime
     code shipping (Lithops).
 
-    Python-scalar captures are **compile-time constants** (the analogue of
+    Python-scalar and hashable structured captures (frozen dataclasses
+    like ``ModelConfig``) are **compile-time constants** (the analogue of
     Cppless's template parameters): they are rebound into the closure
-    BEFORE tracing, so `range(n)`/`arange(tile)`-style uses stay static.
-    Leaving them as traced inputs would raise on any shape-determining use
-    and silently demote the function to the eager generic worker —
-    measured ~250x slower on the raytracer tiles.  Array captures remain
-    dynamic payload inputs.  Changed scalar values change the traced
-    jaxpr, hence the stable name, hence deploy a new entry point — the
-    correct Cppless semantics.
+    BEFORE tracing, so `range(n)`/`arange(tile)`/`build_model(cfg)`-style
+    uses stay static.  Leaving them as traced inputs would raise on any
+    shape-determining use and silently demote the function to the eager
+    generic worker — measured ~250x slower on the raytracer tiles, ~60x
+    on the LM serve task.  Array captures remain dynamic payload inputs.
+    Changed static values change the traced jaxpr, hence the stable name,
+    hence deploy a new entry point — the correct Cppless semantics.
     """
-    static = {k: v for k, v in captures.items()
-              if isinstance(v, _STATIC_TYPES)}
+    # example payloads may carry ArtifactRefs in place of large constants;
+    # specialization needs the real arrays (shapes drive the lowering)
+    from ..serialization import resolve_artifacts
+    args = resolve_artifacts(args)
+    kwargs = resolve_artifacts(kwargs)
+    captures = resolve_artifacts(captures)
+
+    static = {k: v for k, v in captures.items() if _is_static_capture(v)}
     dynamic = {k: v for k, v in captures.items() if k not in static}
     base_fn = rebind(rf.fn, static) if static else rf.fn
 

@@ -104,6 +104,12 @@ class RemoteFunction:
         """Content identity. Jaxpr-based when traceable, bytecode otherwise."""
         if self.jax_traceable:
             try:
+                # artifact references stand in for large constants in
+                # payloads; identity must come from the *values* (their
+                # shapes shape the jaxpr), so resolve before tracing
+                from ..serialization import resolve_artifacts
+                abstract_args = resolve_artifacts(abstract_args)
+                abstract_kwargs = resolve_artifacts(abstract_kwargs)
                 return naming.jaxpr_fingerprint(
                     self.fn, *abstract_args, **abstract_kwargs
                 )

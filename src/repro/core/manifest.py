@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -73,7 +74,10 @@ class Manifest:
     def save(self, path: str) -> None:
         doc = {"version": 1,
                "functions": {n: e.to_json() for n, e in self.entries.items()}}
-        tmp = path + ".tmp"
+        # tmp name is unique per writer: concurrent saves (async serving
+        # submits deploy from executor threads) must not race on one tmp
+        # file — last replace wins, every replace finds its source
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
         os.replace(tmp, path)  # atomic: a crash never corrupts the manifest

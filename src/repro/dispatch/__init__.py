@@ -2,8 +2,8 @@ from .backends import (Backend, InlineBackend, SimAWSBackend, ThreadsBackend,
                        available_backends, register_backend, resolve_backend)
 from .cost import PRICE_PER_GB_S, PRICE_PER_REQUEST, CostReport
 from .dispatcher import Dispatcher, DispatcherInstance, dispatch, wait
-from .futures import (Invocation, InvocationFuture, InvocationRecord,
-                      as_completed, gather)
+from .futures import (Invocation, InvocationCancelled, InvocationFuture,
+                      InvocationRecord, as_completed, gather)
 from .latency_model import DEFAULT_LATENCY, LatencyModel
 from .transports import HttpBackend, ProcessesBackend
 from .workers import (BackendCapabilities, FaultPlan, WorkerCrash,
@@ -11,7 +11,8 @@ from .workers import (BackendCapabilities, FaultPlan, WorkerCrash,
 
 __all__ = [
     "Dispatcher", "DispatcherInstance", "dispatch", "wait", "CostReport",
-    "InvocationFuture", "InvocationRecord", "Invocation", "LatencyModel",
+    "InvocationFuture", "InvocationRecord", "Invocation",
+    "InvocationCancelled", "LatencyModel",
     "DEFAULT_LATENCY", "WorkerPool", "WorkerCrash", "FaultPlan",
     "PRICE_PER_GB_S", "PRICE_PER_REQUEST",
     "Backend", "BackendCapabilities", "ThreadsBackend", "InlineBackend",

@@ -24,6 +24,10 @@ Built-in backends:
                     separately-spawned ``http.server`` worker over pooled
                     keep-alive connections; records carry *measured*
                     client-observed latency (``latency_measured=True``).
+* ``"http-aio"``  — the same worker model driven by one event loop and a
+                    multiplexed asyncio client (conns × streams budget,
+                    ISSUE 3): in-flight requests cost socket reads, not
+                    blocked threads.  See ``repro.serving``.
 
 Third-party backends register with ``register_backend("name")``.
 """
@@ -192,6 +196,15 @@ register_backend("inline", InlineBackend)
 register_backend("sim-aws", SimAWSBackend)
 register_backend("processes", ProcessesBackend)
 register_backend("http", HttpBackend)
+
+
+@register_backend("http-aio")
+def _http_aio_backend(**opts: Any) -> Backend:
+    """The ``http`` worker model driven by one event loop — N in-flight
+    requests cost N socket reads, not N blocked threads (ISSUE 3).  Lazy
+    import: ``repro.serving`` sits above the dispatch layer."""
+    from ..serving.http_client import AioHttpBackend
+    return AioHttpBackend(**opts)
 
 # the "threads" backend IS the worker pool — exported under both names
 ThreadsBackend = WorkerPool

@@ -108,6 +108,12 @@ class DispatcherInstance:
             self._next_task += 1
             self._pending.add(task_id)
         fut = InvocationFuture(task_id)
+        # pending-set cleanup rides the future, not the backend completion
+        # path: a future cancelled client-side (never executed — backends
+        # skip done futures) must still leave ``inflight`` and ``wait()``
+        # consistent.  Registered before submit so a synchronous backend
+        # (inline) discards through the same path.
+        fut.add_done_callback(self._discard_pending)
         inv = Invocation(task_id=task_id, deployed=deployed, payload=payload,
                          future=fut, config=self._resolve_config(fn, config),
                          on_complete=self._on_complete)
@@ -192,11 +198,12 @@ class DispatcherInstance:
                                config=inv.config, on_complete=self._on_complete)
             self.d.backend.submit(retry)
             return
-        # claim → record → resolve → unblock wait(): exactly one of a hedge
-        # pair wins the claim, and accounting lands BEFORE result() waiters
-        # wake — callers joining via map()/gather() must see complete
-        # cost/records, not only wait()-joiners (who synchronize on
-        # _pending, discarded last so wait() implies resolved futures).
+        # claim → record → resolve: exactly one of a hedge pair wins the
+        # claim, and accounting lands BEFORE result() waiters wake —
+        # callers joining via map()/gather() must see complete
+        # cost/records.  Resolving the future runs its done callbacks,
+        # including ``_discard_pending`` (registered first, at dispatch),
+        # so wait()-joiners also observe records before waking.
         if not inv.future.claim():
             return                       # hedged sibling already completed
         self._record(rec)
@@ -204,8 +211,10 @@ class DispatcherInstance:
             inv.future.set_result(value, rec)
         else:
             inv.future.set_error(value, rec)
+
+    def _discard_pending(self, fut: InvocationFuture) -> None:
         with self._cv:
-            self._pending.discard(inv.task_id)
+            self._pending.discard(fut.task_id)
             self._cv.notify_all()
 
     def _record(self, rec: InvocationRecord | None) -> None:

@@ -9,6 +9,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from asyncio import CancelledError
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Iterator, Sequence
 
@@ -45,8 +46,26 @@ class InvocationRecord:
         return billed_ms / 1000.0 * self.memory_gb
 
 
+class InvocationCancelled(CancelledError):
+    """The client abandoned this invocation before it completed.
+
+    A serverless task cannot be un-invoked once a worker picks it up, but a
+    *queued* invocation whose future is cancelled is skipped by every
+    backend (they check ``future.done()`` before executing).  Subclasses
+    ``CancelledError`` so async callers see standard cancellation
+    semantics; sync callers get it raised from ``result()``.
+    """
+
+
 class InvocationFuture:
-    """Minimal future with completion callbacks (used for hedging races)."""
+    """Minimal future with completion callbacks (used for hedging races).
+
+    ``add_done_callback`` is the async bridge contract (ISSUE 3): it is
+    thread-safe, each registered callback fires *exactly once* — from the
+    completing thread, or immediately from the registering thread when the
+    future is already done — and the registry is dropped after completion
+    so callbacks never pin payload-sized closures.
+    """
 
     def __init__(self, task_id: int):
         self.task_id = task_id
@@ -84,7 +103,7 @@ class InvocationFuture:
             self._result = value
             self.record = record
             self._event.set()
-            callbacks = list(self._callbacks)
+            callbacks, self._callbacks = self._callbacks, []
         self._run_callbacks(callbacks)
         return True
 
@@ -96,9 +115,25 @@ class InvocationFuture:
             self._error = err
             self.record = record
             self._event.set()
-            callbacks = list(self._callbacks)
+            callbacks, self._callbacks = self._callbacks, []
         self._run_callbacks(callbacks)
         return True
+
+    def cancel(self, reason: str | None = None) -> bool:
+        """Abandon the invocation: complete the future with
+        :class:`InvocationCancelled`.  Returns ``True`` iff this call won —
+        a completion already claimed (a worker is delivering its result
+        right now) or already done cannot be cancelled.  Backends skip
+        queued invocations whose future is done, so cancelling before a
+        worker picks the task up really does shed the work."""
+        if not self.claim():
+            return False
+        return self.set_error(InvocationCancelled(
+            reason or f"invocation {self.task_id} cancelled"))
+
+    def cancelled(self) -> bool:
+        return self._event.is_set() and \
+            isinstance(self._error, InvocationCancelled)
 
     def _run_callbacks(self, callbacks) -> None:
         for cb in callbacks:
@@ -110,6 +145,9 @@ class InvocationFuture:
                 pass
 
     def add_done_callback(self, cb: Callable[["InvocationFuture"], None]) -> None:
+        """Thread-safe; ``cb(self)`` fires exactly once — immediately (on
+        the calling thread) if the future is already done, else on the
+        thread that completes it."""
         run_now = False
         with self._lock:
             if self._event.is_set():
@@ -125,6 +163,13 @@ class InvocationFuture:
         if self._error is not None:
             raise self._error
         return self._result
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        """The settled error (or ``None`` on success) without raising it —
+        the non-throwing peek completion callbacks use."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"invocation {self.task_id} timed out")
+        return self._error
 
 
 def as_completed(futs: Iterable[InvocationFuture],
@@ -174,7 +219,10 @@ def gather(futs: Sequence[InvocationFuture], *,
             remaining = max(0.0, deadline - time.monotonic())
         try:
             out.append(f.result(timeout=remaining))
-        except Exception as e:      # KeyboardInterrupt etc. must propagate
+        except (Exception, CancelledError) as e:
+            # KeyboardInterrupt etc. must propagate; InvocationCancelled
+            # (a CancelledError) is a *settled* per-task outcome and takes
+            # part in the partial-failure policy like any task error
             if isinstance(e, TimeoutError) and not f.done():
                 raise               # batch deadline hit: task still in flight
             if return_exceptions:

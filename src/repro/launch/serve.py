@@ -2,13 +2,18 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --requests 16 --max-new 8 \
-      [--backend threads|inline|sim-aws|processes|http]
+      [--backend threads|inline|sim-aws|processes|http|http-aio] \
+      [--mode waves|continuous]
 
-``--backend`` switches the execution backend without touching any serving
-code — the single-source property the session API guarantees.  The
-``processes``/``http`` backends run generation in real worker processes
-behind the wire protocol (model params ship with each payload; see
-API.md's backend-selection notes for when that trade-off pays off).
+``--backend`` switches the execution backend and ``--mode`` the scheduler
+without touching any serving code — the single-source property the
+session API guarantees.  ``waves`` is the fixed fork-join client
+(``LMServer.serve``); ``continuous`` drives the same pack/unpack core
+through the asyncio :class:`~repro.serving.batcher.ContinuousBatcher`
+(slot-based admission, decode-length bucketing).  The
+``processes``/``http``/``http-aio`` backends run generation in real worker
+processes behind the wire protocol; params deploy once to the
+content-addressed artifact store and payloads carry the reference.
 """
 from __future__ import annotations
 
@@ -32,9 +37,16 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--wave", type=int, default=8)
+    ap.add_argument("--wave", type=int, default=8,
+                    help="wave size (waves) / max batch (continuous)")
     ap.add_argument("--backend", default="threads",
                     choices=available_backends())
+    ap.add_argument("--mode", default="waves",
+                    choices=("waves", "continuous"))
+    ap.add_argument("--slots", type=int, default=2,
+                    help="continuous mode: in-flight decode batches")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="continuous mode: batch-fill wait")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -49,10 +61,17 @@ def main():
                     max_new=args.max_new)
             for _ in range(args.requests)]
     t0 = time.perf_counter()
-    comps = server.serve(reqs, wave_size=args.wave)
+    if args.mode == "continuous":
+        from ..serving import run_continuous
+        comps = run_continuous(server, reqs, concurrency=args.requests,
+                               max_batch=args.wave, slots=args.slots,
+                               max_wait_ms=args.max_wait_ms)
+    else:
+        comps = server.serve(reqs, wave_size=args.wave)
     wall = time.perf_counter() - t0
     print(json.dumps({
-        "arch": cfg.name, "backend": args.backend, "requests": len(comps),
+        "arch": cfg.name, "backend": args.backend, "mode": args.mode,
+        "requests": len(comps),
         "wall_s": round(wall, 3),
         "tokens_generated": sum(len(c.tokens) for c in comps),
         "cost": server.cost_report.summary(),

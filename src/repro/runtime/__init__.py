@@ -10,7 +10,8 @@ from typing import Any
 
 _EXPORTS = {
     "Completion": ".server", "LMServer": ".server", "Request": ".server",
-    "make_generate_fn": ".server",
+    "make_generate_fn": ".server", "decode_bucket": ".server",
+    "shape_bucket": ".server", "pack_prompts": ".server",
     "SimulatedPreemption": ".trainer", "TrainReport": ".trainer",
     "train": ".trainer",
     "SandboxHost": ".sandbox", "WorkerInstance": ".sandbox",

@@ -7,12 +7,23 @@ decode), content-addressed names in the manifest, binary payloads, and the
 pooled dispatcher with retry/hedging — so LM serving inherits the fault-
 tolerance and cost accounting (GB-seconds per request) of the framework.
 
-Batched mode packs concurrent requests into one decode batch (continuous-
-batching-lite: a fresh batch per wave) and dispatches the *wave* as a task.
+Two scheduling modes share one pack/dispatch/unpack core
+(``submit_wave`` / ``unpack_wave``):
+
+* **waves** — :meth:`LMServer.serve`: fixed fork-join, requests
+  pre-partitioned into ``wave_size`` batches, each wave one task;
+* **continuous** — :class:`repro.serving.batcher.ContinuousBatcher`:
+  arriving requests are admitted into decode batches as slots free up,
+  grouped by decode-length bucket so a short request never pays for a
+  long neighbour's tail.
+
+Decode length is *bucketed* (next power of two ≥ the batch's largest
+``max_new``): one deployed entry point per bucket, cached, so a batch only
+decodes as far as its own requests need instead of always paying the
+server-wide maximum.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -23,6 +34,8 @@ import numpy as np
 from ..cloud import Session, gather, session_for
 from ..dispatch import Dispatcher
 from ..models import build_model
+from ..models.api import grow_cache
+from ..serialization import put_artifact
 from ..configs.base import ModelConfig
 
 
@@ -39,37 +52,81 @@ class Completion:
     cost_gb_s: float = 0.0
 
 
-def _pad_prompts(prompts: Sequence[Sequence[int]], pad: int = 0):
-    b = len(prompts)
-    s = max(len(p) for p in prompts)
+def shape_bucket(n: int) -> int:
+    """Next power of two ≥ ``n`` — the shape-stability quantum."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def decode_bucket(max_new: int) -> int:
+    """Decode-length bucket: next power of two ≥ ``max_new``.
+
+    One deployed generate function per bucket bounds the number of AOT
+    compilations at log2(longest generation) while letting short batches
+    skip a long server-wide decode tail — the compute the continuous
+    batcher saves by grouping like-length requests.
+    """
+    return shape_bucket(max_new)
+
+
+def pack_prompts(prompts: Sequence[Sequence[int]], pad: int = 0,
+                 min_rows: int = 1):
+    """Pack prompts into a shape-*bucketed* token batch.
+
+    Entry-point identity is shape-dependent (the AOT stable name
+    fingerprints abstract payloads), so a serving scheduler that emitted
+    whatever (batch, seqlen) arrived would recompile on nearly every
+    batch — multi-second stalls in the serve path.  Both dims therefore
+    round up to powers of two: at most log2 variants per decode bucket
+    ever compile, at worst 2× padding compute — the standard
+    shape-bucketing trade every XLA serving system makes.
+
+    Rows are left-padded (last real token aligned); filler rows replicate
+    row 0 and are sliced off at unpack.  ``min_rows`` pins the row bucket
+    from below: a scheduler that always passes its full batch size gets
+    exactly ONE compiled shape per decode bucket — partial tail batches
+    pad instead of compiling a fresh entry point mid-serve.
+
+    Caveat (pre-existing model behavior, not introduced by bucketing): the
+    model families have no prefill attention mask, so left-pad tokens are
+    *attended* — a request's logits can shift with the batch's padded
+    length.  Results are exactly reproducible for like-length prompts
+    (every test/bench workload here); ragged prompt sets get
+    batch-composition-dependent perturbations under ANY batched packing,
+    wave or continuous.  The real fix is a prefill mask (ROADMAP).
+    """
+    b = shape_bucket(max(len(prompts), min_rows))
+    s = shape_bucket(max(len(p) for p in prompts))
     out = np.full((b, s), pad, np.int32)
     for i, p in enumerate(prompts):
         out[i, s - len(p):] = p          # left-pad so last token aligns
+    for i in range(len(prompts), b):
+        out[i] = out[0]                  # filler rides along, never unpacked
     return out
 
 
 def make_generate_fn(cfg: ModelConfig, max_new: int):
     """Build the stateless serve task: (params, tokens) -> generated ids.
 
-    Capture discipline (the Cppless contract): the closure's *data*
-    captures (`max_new`) ship in the payload; everything model-shaped is
-    captured as *callables*, which travel with the deployed artifact like
-    statically-linked deps, not over the wire.
+    Capture discipline (the Cppless contract): the closure captures only
+    *data* (``cfg``, ``max_new``) — both ship in the payload (``ModelConfig``
+    is a registered wire type), so the frozen closure rebuilds in any
+    worker process that has the package tree.  The model's entry points
+    are deliberately NOT captured as callables: they are closures carrying
+    their own data captures, which cannot cross the wire — instead the
+    task body rebuilds them from ``cfg`` (cheap: ``build_model`` only
+    defines functions; the real cost is the AOT compile the worker pays
+    once per cold start anyway).
     """
-    from ..models.api import grow_cache
-    model = build_model(cfg)
-    prefill, decode = model.prefill, model.decode
-    grow = functools.partial(grow_cache, cfg)
-
     def generate(params, tokens):
+        model = build_model(cfg)
         b, s = tokens.shape
-        logits, cache = prefill(params, {"tokens": tokens})
-        cache = grow(cache, s + max_new)
+        logits, cache = model.prefill(params, {"tokens": tokens})
+        cache = grow_cache(cfg, cache, s + max_new)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
 
         def step(carry, _):
             cache, tok = carry
-            logits, cache = decode(params, cache, tok)
+            logits, cache = model.decode(params, cache, tok)
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
             return (cache, nxt), tok[:, 0]
 
@@ -83,9 +140,12 @@ def make_generate_fn(cfg: ModelConfig, max_new: int):
 class LMServer:
     """Serverless serving facade over a ``cloud.Session``.
 
-    The generate task is *bound* once (``session.function``); waves are
-    submitted concurrently and gathered in order — per-wave accounting
-    stays correct because entry-point stats travel with each result.
+    Generate tasks are *bound* once per decode-length bucket
+    (``session.function``); waves are submitted concurrently and gathered
+    in order — per-wave accounting stays correct because entry-point stats
+    travel with each result.  ``submit_wave`` / ``unpack_wave`` are the
+    shared pack/dispatch/unpack core both the wave scheduler (here) and
+    the continuous batcher (``repro.serving.batcher``) drive.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -95,16 +155,44 @@ class LMServer:
         self.cfg = cfg
         self.params = params
         self.max_new = max_new
+        self._memory_mb = memory_mb
         self.session = session_for(session, dispatcher)
-        self.generate = self.session.function(
-            make_generate_fn(cfg, max_new), name=f"serve_{cfg.name}",
-            memory_mb=memory_mb, serializer="binary")
+        self._gen_fns: dict[int, object] = {}
+        # params are deployed ONCE to the content-addressed artifact store;
+        # every batch payload carries the (path, sha) pointer instead of
+        # re-shipping the model — measured ~98% of serve-payload bytes
+        self._params_ref = put_artifact(params)
+        # the default-bucket handle, kept under the historical name
+        self.generate = self._generate_for(max_new)
 
-    def _submit_wave(self, requests: Sequence[Request]):
-        tokens = _pad_prompts([r.prompt for r in requests])
-        return self.generate.submit(self.params, jnp.asarray(tokens))
+    def _generate_for(self, max_new: int):
+        """The bound generate function for ``max_new``'s decode bucket
+        (deployed on first use, cached after)."""
+        bucket = decode_bucket(max_new)
+        fn = self._gen_fns.get(bucket)
+        if fn is None:
+            fn = self.session.function(
+                make_generate_fn(self.cfg, bucket),
+                name=f"serve_{self.cfg.name}_d{bucket}",
+                memory_mb=self._memory_mb, serializer="binary")
+            self._gen_fns[bucket] = fn
+        return fn
 
-    def _unpack_wave(self, requests: Sequence[Request], fut) -> list[Completion]:
+    # ----------------------------------------------- pack/dispatch/unpack
+    def submit_wave(self, requests: Sequence[Request], *, min_rows: int = 1):
+        """Pack ``requests`` into one shape-bucketed decode batch and
+        dispatch it as a single serverless task; returns the invocation
+        future.  Schedulers pass their nominal batch size as ``min_rows``
+        so tail batches pad to the warmed shape instead of compiling a
+        fresh one."""
+        tokens = pack_prompts([r.prompt for r in requests],
+                              min_rows=min_rows)
+        gen = self._generate_for(max(r.max_new for r in requests))
+        return gen.submit(self._params_ref, jnp.asarray(tokens))
+
+    def unpack_wave(self, requests: Sequence[Request], fut) -> list[Completion]:
+        """Join one dispatched batch: per-request token trim + pro-rata
+        billing from the wave's invocation record."""
         out = np.asarray(fut.result())
         rec = fut.record
         return [Completion(
@@ -114,9 +202,13 @@ class LMServer:
             / max(1, len(requests)))
             for i, r in enumerate(requests)]
 
+    # legacy private names (pre-ISSUE-3 callers)
+    _submit_wave = submit_wave
+    _unpack_wave = unpack_wave
+
     def serve_wave(self, requests: Sequence[Request]) -> list[Completion]:
         """One batched wave: pack requests, dispatch, unpack."""
-        return self._unpack_wave(requests, self._submit_wave(requests))
+        return self.unpack_wave(requests, self.submit_wave(requests))
 
     def serve(self, requests: Sequence[Request], wave_size: int = 8,
               max_inflight: int = 4) -> list[Completion]:
@@ -134,11 +226,11 @@ class LMServer:
         for i, w in enumerate(waves):
             if i >= max_inflight:
                 futs[i - max_inflight].result()   # free the oldest payload
-            futs.append(self._submit_wave(w))
+            futs.append(self.submit_wave(w, min_rows=wave_size))
         gather(futs)                      # settle, surface first failure
         out: list[Completion] = []
         for w, f in zip(waves, futs):
-            out.extend(self._unpack_wave(w, f))
+            out.extend(self.unpack_wave(w, f))
         return out
 
     @property

@@ -1,6 +1,8 @@
 from .archive import (FORMATS, decode_binary, decode_binary_json,
                       decode_structured_json, deserialize, encode_binary,
                       encode_binary_json, encode_structured_json, serialize)
+from .artifacts import (ArtifactRef, load_artifact, put_artifact,
+                        resolve_artifacts)
 from .pytree import flatten, register_custom, unflatten
 from . import wire
 
@@ -8,5 +10,6 @@ __all__ = [
     "FORMATS", "serialize", "deserialize", "encode_binary", "decode_binary",
     "encode_binary_json", "decode_binary_json", "encode_structured_json",
     "decode_structured_json", "flatten", "unflatten", "register_custom",
-    "wire",
+    "wire", "ArtifactRef", "put_artifact", "load_artifact",
+    "resolve_artifacts",
 ]

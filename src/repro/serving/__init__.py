@@ -1,0 +1,27 @@
+"""repro.serving — the asyncio-native serving stack (ISSUE 3).
+
+Layered on the PR 2 runtime: :class:`AsyncSession` turns any registered
+backend's session surface async (``await f.submit``, ``async for`` over
+``map_unordered``, cancellation, awaitable admission gate);
+:class:`AioHttpClient`/:class:`AioHttpBackend` (registered as
+``"http-aio"``) drive the ``http`` worker model from one event loop with a
+paper-style conns × streams budget; :class:`ContinuousBatcher` admits
+arriving LM requests into in-flight decode capacity instead of fixed
+waves.
+
+    from repro.serving import AsyncSession, ContinuousBatcher
+
+    async with AsyncSession("http-aio", max_inflight=64) as asess:
+        f = asess.function(handler)
+        out = await f.submit(x)
+"""
+from .aio import (AsyncBoundFunction, AsyncInvocation, AsyncSession,
+                  await_invocation)
+from .batcher import BatcherStats, ContinuousBatcher, run_continuous
+from .http_client import AioHttpBackend, AioHttpClient
+
+__all__ = [
+    "AsyncSession", "AsyncBoundFunction", "AsyncInvocation",
+    "await_invocation", "ContinuousBatcher", "BatcherStats",
+    "run_continuous", "AioHttpClient", "AioHttpBackend",
+]

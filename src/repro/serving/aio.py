@@ -1,0 +1,390 @@
+"""``AsyncSession`` — the asyncio-native serving facade (ISSUE 3).
+
+The sync :class:`~repro.cloud.session.Session` is a fork-join client: one
+blocking thread per ``result()`` waiter caps concurrency at the thread
+budget.  The serving path wants the paper's client shape instead — hundreds
+of invocations in flight from *one* event loop.  ``AsyncSession`` wraps any
+registered backend and turns the session surface async::
+
+    async with AsyncSession("http", max_inflight=64) as asess:
+        f = asess.function(handler, memory_mb=512)
+        out = await f.submit(x)                 # one invocation, awaited
+        async for r in f.map_unordered(items):  # streaming fork-join
+            ...
+        inv = f.submit(x); inv.cancel()         # queued work really sheds
+
+Three contracts make this work without polling:
+
+* completions wake the loop through the thread-safe
+  :meth:`~repro.dispatch.futures.InvocationFuture.add_done_callback`
+  (fires exactly once, immediately if already done);
+* the admission gate is *awaitable*: where the sync session raises
+  :class:`~repro.cloud.session.Saturated` in shed mode, ``await
+  asess.admit()`` parks the caller until inflight drains — backpressure
+  without rejection and without a blocked thread;
+* cancellation flows down: cancelling an :class:`AsyncInvocation` cancels
+  the backend-level future, so still-queued work is skipped by every
+  backend (they check ``future.done()`` before executing).
+
+An ``AsyncSession`` binds to the first event loop that uses it; create one
+per ``asyncio.run`` (wrapping a shared sync ``Session`` is cheap).
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from collections import deque
+from typing import Any, AsyncIterator, Callable, Iterable
+
+from ..cloud.session import BoundFunction, Session, _as_args
+from ..dispatch.futures import InvocationFuture, InvocationRecord
+
+
+async def await_invocation(fut: InvocationFuture) -> Any:
+    """Await a backend-level :class:`InvocationFuture` from a coroutine.
+
+    The bridge primitive the whole subsystem stands on: the future's done
+    callback (thread-safe, exactly-once) hands completion to the event loop
+    via ``call_soon_threadsafe`` — no polling thread, no busy wait.
+    """
+    loop = asyncio.get_running_loop()
+    afut: asyncio.Future = loop.create_future()
+
+    def on_done(f: InvocationFuture) -> None:
+        def resolve() -> None:
+            if afut.cancelled():
+                return
+            err = f.exception(timeout=0)
+            if err is not None:
+                afut.set_exception(err)
+            else:
+                afut.set_result(f.result(timeout=0))
+        try:
+            loop.call_soon_threadsafe(resolve)
+        except RuntimeError:
+            pass                    # loop already closed: session tear-down
+
+    fut.add_done_callback(on_done)
+    return await afut
+
+
+class _AdmissionGate:
+    """Awaitable admission slots with thread-safe release.
+
+    ``acquire`` runs on the loop; ``release_threadsafe`` may be called from
+    any backend thread (it trampolines onto the loop).  FIFO hand-off: a
+    freed slot goes to the oldest live waiter, so a stream of short tasks
+    cannot starve an early big one.
+    """
+
+    def __init__(self, limit: int, loop: asyncio.AbstractEventLoop):
+        self._limit = limit
+        self._loop = loop
+        self._admitted = 0
+        self._waiters: deque[asyncio.Future] = deque()
+
+    @property
+    def admitted(self) -> int:
+        return self._admitted
+
+    @property
+    def waiting(self) -> int:
+        return sum(1 for w in self._waiters if not w.done())
+
+    async def acquire(self) -> None:
+        if self._admitted < self._limit and not self.waiting:
+            self._admitted += 1
+            return
+        w = self._loop.create_future()
+        self._waiters.append(w)
+        try:
+            await w
+        except asyncio.CancelledError:
+            if w.done() and not w.cancelled():
+                self.release()      # granted but abandoned: pass the slot on
+            raise
+
+    def release(self) -> None:
+        """Loop-side release: hand the slot to the next live waiter."""
+        while self._waiters:
+            w = self._waiters.popleft()
+            if not w.done():
+                w.set_result(None)  # slot changes hands; _admitted unchanged
+                return
+        self._admitted -= 1
+
+    def release_threadsafe(self) -> None:
+        try:
+            self._loop.call_soon_threadsafe(self.release)
+        except RuntimeError:
+            pass                    # loop closed mid-completion
+
+
+class AsyncInvocation:
+    """Handle for one in-flight async invocation — awaitable + cancellable.
+
+    ``await inv`` yields the result (or raises).  ``inv.cancel()``
+    cancels the driving task *and* the backend-level future, so queued
+    work is shed; a task already executing runs to completion but its
+    result is dropped.  ``inv.record`` exposes the invocation record once
+    resolved (cancelled invocations have none).
+    """
+
+    def __init__(self) -> None:
+        self._task: asyncio.Task | None = None   # set by AsyncSession._submit
+        self._fut: InvocationFuture | None = None
+        self._abandoned = False
+
+    def __await__(self):
+        return self._task.__await__()
+
+    def cancel(self) -> bool:
+        self._abandoned = True
+        if self._fut is not None:
+            self._fut.cancel()
+        return self._task.cancel()
+
+    def done(self) -> bool:
+        return self._task.done()
+
+    def result(self) -> Any:
+        return self._task.result()
+
+    @property
+    def future(self) -> InvocationFuture | None:
+        """The backend-level future, once dispatched."""
+        return self._fut
+
+    @property
+    def record(self) -> InvocationRecord | None:
+        return self._fut.record if self._fut is not None else None
+
+
+class AsyncBoundFunction:
+    """Async twin of :class:`~repro.cloud.session.BoundFunction`.
+
+    Same single-source property: ``f(x)`` is a plain local call; ``submit``
+    returns an awaitable :class:`AsyncInvocation`; ``map_unordered`` is an
+    async generator yielding results in completion order.
+    """
+
+    def __init__(self, asession: "AsyncSession", bound: BoundFunction):
+        self._asession = asession
+        self._bound = bound
+
+    @property
+    def name(self) -> str:
+        return self._bound.name
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self._bound(*args, **kwargs)        # local call, untouched
+
+    def options(self, **overrides: Any) -> "AsyncBoundFunction":
+        return AsyncBoundFunction(self._asession,
+                                  self._bound.options(**overrides))
+
+    def submit(self, *args: Any, **kwargs: Any) -> AsyncInvocation:
+        """Fire one invocation (admission-gated); must run inside the
+        session's event loop."""
+        return self._asession._submit(self._bound, args, kwargs)
+
+    async def map_unordered(self, items: Iterable[Any], *,
+                            timeout: float | None = None
+                            ) -> AsyncIterator[Any]:
+        """Streaming fork-join: ``async for r in f.map_unordered(items)``.
+
+        All items are submitted eagerly (each one admission-gated); results
+        stream back in completion order.  Closing the generator early (or
+        a timeout) cancels the still-unfinished siblings.
+        """
+        invs = [self.submit(*_as_args(i)) for i in items]
+        pending = {inv._task for inv in invs}
+        deadline = None if timeout is None else \
+            asyncio.get_running_loop().time() + timeout
+        try:
+            while pending:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - asyncio.get_running_loop().time()
+                    if remaining <= 0:
+                        raise TimeoutError("map_unordered() timed out")
+                done, pending = await asyncio.wait(
+                    pending, timeout=remaining,
+                    return_when=asyncio.FIRST_COMPLETED)
+                if not done:
+                    raise TimeoutError("map_unordered() timed out")
+                for t in done:
+                    yield t.result()
+        finally:
+            for t in pending:
+                t.cancel()
+
+    def __repr__(self) -> str:
+        return f"Async{self._bound!r}"
+
+
+class AsyncSession:
+    """Asyncio facade over a :class:`~repro.cloud.session.Session`.
+
+    ``AsyncSession("http", os_threads=8)`` owns a fresh sync session (and
+    closes it on ``aclose``/``__aexit__``); ``AsyncSession(existing_session)``
+    wraps a caller-owned one.  ``max_inflight`` arms the awaitable
+    admission gate: at most that many invocations in flight, further
+    ``submit``/``admit`` callers park until completions free slots.
+    """
+
+    def __init__(self, backend: str | Session = "threads", *,
+                 max_inflight: int | None = None, **session_kwargs: Any):
+        if isinstance(backend, Session):
+            if session_kwargs:
+                raise TypeError("session kwargs only apply when AsyncSession "
+                                "creates the session itself")
+            self._session = backend
+            self._owns = False
+        else:
+            self._session = Session(backend, **session_kwargs)
+            self._owns = True
+        self._max_inflight = max_inflight
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._gate: _AdmissionGate | None = None
+
+    # ------------------------------------------------------------- binding
+    def function(self, fn: Callable, **kwargs: Any) -> AsyncBoundFunction:
+        """Bind ``fn`` into this async session (same kwargs as
+        ``Session.function``)."""
+        return AsyncBoundFunction(self, self._session.function(fn, **kwargs))
+
+    def remote(self, fn: Callable | None = None, **kwargs: Any):
+        """Decorator form: ``@asess.remote`` / ``@asess.remote(memory_mb=...)``."""
+        def wrap(f):
+            return self.function(f, **kwargs)
+        return wrap(fn) if fn is not None else wrap
+
+    # ----------------------------------------------------- admission gate
+    def _bind_loop(self) -> asyncio.AbstractEventLoop:
+        loop = asyncio.get_running_loop()
+        if self._loop is None:
+            self._loop = loop
+            if self._max_inflight is not None:
+                self._gate = _AdmissionGate(self._max_inflight, loop)
+        elif self._loop is not loop:
+            raise RuntimeError(
+                "AsyncSession is bound to a different event loop; create "
+                "one AsyncSession per loop (wrapping a shared Session is "
+                "cheap)")
+        return loop
+
+    async def admit(self, n: int = 1) -> None:
+        """Park until ``n`` admission slots are free, then hold them.
+
+        The awaitable counterpart of shed-mode: where ``Session(shed=True)``
+        raises :class:`Saturated`, this waits for inflight to drain.  Slots
+        acquired here must be paired with :meth:`release` (``submit`` does
+        its own pairing internally).  No-op when ``max_inflight`` is unset.
+        """
+        self._bind_loop()
+        if self._gate is None:
+            return
+        for _ in range(n):
+            await self._gate.acquire()
+
+    def release(self, n: int = 1) -> None:
+        """Return ``n`` slots taken via :meth:`admit`."""
+        if self._gate is not None:
+            for _ in range(n):
+                self._gate.release()
+
+    @property
+    def admitted(self) -> int:
+        """Slots currently held (0 when the gate is unarmed)."""
+        return self._gate.admitted if self._gate is not None else 0
+
+    @property
+    def waiting(self) -> int:
+        """Callers parked in :meth:`admit` right now."""
+        return self._gate.waiting if self._gate is not None else 0
+
+    # ------------------------------------------------------------ dispatch
+    def _submit(self, bound: BoundFunction, args: tuple,
+                kwargs: dict) -> AsyncInvocation:
+        loop = self._bind_loop()
+        ainv = AsyncInvocation()
+        ainv._task = loop.create_task(self._run(bound, args, kwargs, ainv))
+        return ainv
+
+    async def _run(self, bound: BoundFunction, args: tuple, kwargs: dict,
+                   ainv: AsyncInvocation) -> Any:
+        loop = self._loop
+        gate = self._gate
+        if gate is not None:
+            await gate.acquire()
+        started = threading.Event()
+
+        def do_submit() -> InvocationFuture:
+            # runs on an executor thread: payload packing (params-sized for
+            # LM serving) must not stall the event loop.
+            started.set()
+            f = bound.submit(*args, **kwargs)
+            if gate is not None:
+                # the slot frees when the INVOCATION resolves, not when the
+                # awaiting task is torn down — exactly once either way
+                f.add_done_callback(lambda _f: gate.release_threadsafe())
+            ainv._fut = f
+            if ainv._abandoned:     # cancelled while packing: shed if queued
+                f.cancel()
+            return f
+
+        try:
+            inv_fut = await loop.run_in_executor(None, do_submit)
+        except asyncio.CancelledError:
+            ainv._abandoned = True
+            f = ainv._fut
+            if f is not None:
+                f.cancel()          # release rides f's done callback
+            elif not started.is_set():
+                # executor never ran do_submit: the slot is still ours
+                if gate is not None:
+                    gate.release()
+            # else: do_submit is mid-flight; it observes _abandoned and the
+            # release callback it attaches fires when the future settles
+            raise
+        except BaseException:
+            if gate is not None:
+                gate.release()      # submit failed: nothing owns the slot
+            raise
+        try:
+            return await await_invocation(inv_fut)
+        except asyncio.CancelledError:
+            inv_fut.cancel()        # queued work sheds; running work is dropped
+            raise
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def session(self) -> Session:
+        return self._session
+
+    @property
+    def inflight(self) -> int:
+        return self._session.inflight
+
+    def close(self) -> None:
+        if self._owns:
+            self._session.close()
+
+    async def aclose(self) -> None:
+        """Close the owned sync session without blocking the loop (backend
+        shutdown joins worker processes/threads)."""
+        if self._owns:
+            await asyncio.get_running_loop().run_in_executor(
+                None, self._session.close)
+
+    async def __aenter__(self) -> "AsyncSession":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    def __repr__(self) -> str:
+        gate = (f"max_inflight={self._max_inflight}"
+                if self._max_inflight is not None else "ungated")
+        return f"AsyncSession({self._session!r}, {gate})"

@@ -1,0 +1,293 @@
+"""Continuous batching for :class:`~repro.runtime.server.LMServer` (ISSUE 3).
+
+Wave mode pre-partitions requests into fixed batches and fork-joins them —
+fine for offline bulk, wrong for traffic: a request arriving just after a
+wave sealed waits a full wave, and every member of a wave decodes as far
+as its longest neighbour.  The :class:`ContinuousBatcher` replaces the
+fixed partition with *slot-based admission*:
+
+* up to ``slots`` decode batches are in flight at once; the moment one
+  completes, its slot is refilled from whatever has arrived since;
+* a forming batch seals when it reaches ``max_batch`` requests or has
+  waited ``max_wait_ms`` since its head request arrived — the classic
+  throughput/latency knob pair;
+* queued requests are grouped by decode-length bucket
+  (:func:`~repro.runtime.server.decode_bucket`), so short generations are
+  not packed behind long ones and only decode as far as they need.
+
+Batches dispatch through the same ``submit_wave`` / ``unpack_wave`` core
+as wave mode — same wire payloads, same per-request pro-rata billing —
+so the two schedulers differ *only* in admission policy (like-length
+prompt sets decode to identical tokens either way; ragged sets inherit
+the maskless-left-pad caveat documented on ``pack_prompts``).
+
+Granularity note: each batch is one stateless serverless task, so
+admission happens between batches (a request cannot join a decode loop
+already running on a worker).  That is the serverless analogue of
+iteration-level continuous batching: the admission quantum is one task,
+not one decode step.
+"""
+from __future__ import annotations
+
+import asyncio
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from ..runtime.server import Completion, LMServer, Request, decode_bucket
+from .aio import await_invocation
+
+
+@dataclass
+class BatcherStats:
+    """Scheduler-side accounting (client latency is measured by callers)."""
+    requests: int = 0
+    batches: int = 0
+    occupancy_sum: int = 0           # sum of batch sizes
+    decode_steps: int = 0            # sum of per-batch decode bucket lengths
+    sealed_full: int = 0             # batches sealed by max_batch
+    sealed_wait: int = 0             # batches sealed by max_wait
+    bucket_histogram: dict = field(default_factory=dict)
+
+    @property
+    def mean_batch(self) -> float:
+        return self.occupancy_sum / self.batches if self.batches else 0.0
+
+    def summary(self) -> dict:
+        return {"requests": self.requests, "batches": self.batches,
+                "mean_batch": round(self.mean_batch, 2),
+                "decode_steps": self.decode_steps,
+                "sealed_full": self.sealed_full,
+                "sealed_wait": self.sealed_wait,
+                "buckets": dict(sorted(self.bucket_histogram.items()))}
+
+
+class ContinuousBatcher:
+    """Admit arriving requests into in-flight decode capacity.
+
+    ::
+
+        async with ContinuousBatcher(server, max_batch=8, slots=4,
+                                     max_wait_ms=10) as batcher:
+            completion = await batcher.submit(Request(prompt, max_new=16))
+
+    ``submit`` may be called from any number of concurrent tasks; each
+    returns when *its* request's batch completes.  Cancelling the awaiting
+    task removes a still-queued request from the scheduler (a request
+    already packed into a dispatched batch runs to completion and is
+    dropped at unpack).
+    """
+
+    def __init__(self, server: LMServer, *, max_batch: int = 8,
+                 slots: int = 2, max_wait_ms: float = 10.0):
+        self._server = server
+        self._max_batch = max(1, max_batch)
+        self._n_slots = max(1, slots)
+        self._max_wait_s = max(0.0, max_wait_ms) / 1000.0
+        self._queue: deque[tuple[Request, asyncio.Future]] = deque()
+        self._slots: asyncio.Semaphore | None = None
+        self._arrived: asyncio.Event | None = None
+        self._scheduler: asyncio.Task | None = None
+        self._batch_tasks: set[asyncio.Task] = set()
+        self._closed = False
+        # ONE pack/unpack thread, deliberately: payload serialization is
+        # GIL-bound python — fanning it across executor threads only adds
+        # contention that stretches every in-flight roundtrip.  Transport
+        # IO still overlaps across all slots.
+        self._cpu = ThreadPoolExecutor(max_workers=1,
+                                       thread_name_prefix="repro-batcher")
+        self.stats = BatcherStats()
+
+    # ------------------------------------------------------------ lifecycle
+    def _ensure_running(self) -> None:
+        if self._scheduler is None or self._scheduler.done():
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._slots = self._slots or asyncio.Semaphore(self._n_slots)
+            self._arrived = self._arrived or asyncio.Event()
+            self._scheduler = asyncio.get_running_loop().create_task(
+                self._schedule())
+
+    async def __aenter__(self) -> "ContinuousBatcher":
+        self._ensure_running()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    async def aclose(self) -> None:
+        """Stop admitting, let in-flight batches finish, fail queued
+        requests that never made it into a batch."""
+        self._closed = True
+        if self._arrived is not None:
+            self._arrived.set()
+        if self._scheduler is not None:
+            await self._scheduler
+        if self._batch_tasks:
+            await asyncio.gather(*self._batch_tasks, return_exceptions=True)
+        while self._queue:
+            _, fut = self._queue.popleft()
+            if not fut.done():
+                fut.set_exception(RuntimeError("batcher closed before the "
+                                               "request was scheduled"))
+        self._cpu.shutdown(wait=False)
+
+    # ------------------------------------------------------------- clients
+    async def submit(self, request: Request) -> Completion:
+        """Queue one request; resolves when its decode batch completes."""
+        if self._closed:
+            raise RuntimeError("batcher is closed")
+        self._ensure_running()
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.append((request, fut))
+        self._arrived.set()
+        return await fut
+
+    @property
+    def queued(self) -> int:
+        return sum(1 for _, f in self._queue if not f.done())
+
+    # ----------------------------------------------------------- scheduler
+    def _prune(self) -> None:
+        while self._queue and self._queue[0][1].done():
+            self._queue.popleft()            # cancelled while queued
+
+    def _batch_ready(self) -> bool:
+        """A batch can seal without waiting: the head's bucket alone fills
+        it, or the whole queue does (top-up keeps the slot busy)."""
+        self._prune()
+        if not self._queue:
+            return False
+        b = decode_bucket(self._queue[0][0].max_new)
+        live = head = 0
+        for r, f in self._queue:
+            if f.done():
+                continue
+            live += 1
+            head += decode_bucket(r.max_new) == b
+        return head >= self._max_batch or live >= self._max_batch
+
+    def _take_batch(self) -> list[tuple[Request, asyncio.Future]]:
+        """Seal a batch: FIFO head defines the preferred decode bucket;
+        take up to ``max_batch`` live requests from that bucket first, then
+        top up with the oldest other-bucket requests.  Bucketing is a
+        *preference*, not a constraint: a pure batch decodes short, a
+        topped-up batch decodes at its longest member (what a fixed wave
+        would have done anyway) — so grouping can only save compute, never
+        idle a free slot behind it.
+        """
+        self._prune()
+        if not self._queue:
+            return []
+        bucket = decode_bucket(self._queue[0][0].max_new)
+        batch: list[tuple[Request, asyncio.Future]] = []
+        keep: deque = deque()
+        while self._queue:                   # pass 1: the head's bucket
+            r, f = self._queue.popleft()
+            if f.done():
+                continue
+            if len(batch) < self._max_batch and \
+                    decode_bucket(r.max_new) == bucket:
+                batch.append((r, f))
+            else:
+                keep.append((r, f))
+        while keep and len(batch) < self._max_batch:   # pass 2: top up
+            batch.append(keep.popleft())
+        self._queue.extend(keep)             # leftovers keep arrival order
+        return batch
+
+    async def _schedule(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            self._prune()
+            if not self._queue:
+                if self._closed:
+                    return
+                self._arrived.clear()
+                if self._queue:              # raced an append
+                    continue
+                await self._arrived.wait()
+                continue
+            await self._slots.acquire()
+            # a slot is ours: give the forming batch up to max_wait to fill
+            sealed_by = "full"
+            if not self._batch_ready() and self._max_wait_s > 0 \
+                    and not self._closed:
+                deadline = loop.time() + self._max_wait_s
+                while not self._batch_ready() and not self._closed:
+                    remaining = deadline - loop.time()
+                    if remaining <= 0:
+                        sealed_by = "wait"
+                        break
+                    self._arrived.clear()
+                    try:
+                        await asyncio.wait_for(self._arrived.wait(), remaining)
+                    except asyncio.TimeoutError:
+                        sealed_by = "wait"
+                        break
+            batch = self._take_batch()
+            if not batch:
+                self._slots.release()
+                continue
+            if sealed_by == "full":
+                self.stats.sealed_full += 1
+            else:
+                self.stats.sealed_wait += 1
+            task = loop.create_task(self._run_batch(batch))
+            self._batch_tasks.add(task)
+            task.add_done_callback(self._batch_tasks.discard)
+
+    async def _run_batch(self,
+                         batch: list[tuple[Request, asyncio.Future]]) -> None:
+        loop = asyncio.get_running_loop()
+        requests = [r for r, _ in batch]
+        bucket = decode_bucket(max(r.max_new for r in requests))
+        try:
+            # payload packing ships params: keep it off the loop.  min_rows
+            # pins the batch-shape bucket so partial batches never compile
+            # a fresh entry point mid-serve.
+            inv_fut = await loop.run_in_executor(
+                self._cpu, lambda: self._server.submit_wave(
+                    requests, min_rows=self._max_batch))
+            await await_invocation(inv_fut)
+            comps = await loop.run_in_executor(
+                self._cpu, self._server.unpack_wave, requests, inv_fut)
+        except BaseException as e:
+            for _, fut in batch:
+                if not fut.done():
+                    fut.set_exception(
+                        e if isinstance(e, Exception)
+                        else RuntimeError(f"batch failed: {e!r}"))
+        else:
+            for (_, fut), comp in zip(batch, comps):
+                if not fut.done():
+                    fut.set_result(comp)
+        finally:
+            self.stats.requests += len(batch)
+            self.stats.batches += 1
+            self.stats.occupancy_sum += len(batch)
+            self.stats.decode_steps += bucket
+            self.stats.bucket_histogram[bucket] = \
+                self.stats.bucket_histogram.get(bucket, 0) + 1
+            self._slots.release()
+
+
+def run_continuous(server: LMServer, requests: Sequence[Request], *,
+                   concurrency: int = 16, max_batch: int = 8, slots: int = 2,
+                   max_wait_ms: float = 10.0) -> list[Completion]:
+    """Closed-loop convenience driver: feed ``requests`` through a
+    :class:`ContinuousBatcher` with at most ``concurrency`` outstanding;
+    returns completions in request order.  This is what ``--mode
+    continuous`` in the serve launcher/example runs.
+    """
+    async def go() -> list[Completion]:
+        sem = asyncio.Semaphore(max(1, concurrency))
+        async with ContinuousBatcher(server, max_batch=max_batch,
+                                     slots=slots,
+                                     max_wait_ms=max_wait_ms) as batcher:
+            async def one(r: Request) -> Completion:
+                async with sem:
+                    return await batcher.submit(r)
+            return list(await asyncio.gather(*[one(r) for r in requests]))
+    return asyncio.run(go())

@@ -1,0 +1,314 @@
+"""Non-blocking multiplexed HTTP client + the ``"http-aio"`` backend.
+
+The PR 2 ``http`` backend is the paper's client *model* but not its client
+*shape*: a pool of blocking keep-alive connections, one OS thread parked
+per in-flight request — concurrency caps at the thread budget.  The paper
+drives hundreds of concurrent invocations from one client with a
+conns × streams budget (16 × 100).  This module is that client, asyncio-
+native:
+
+* :class:`AioHttpClient` — a hand-rolled HTTP/1.1 client on asyncio
+  streams.  ``n_connections`` persistent sockets are multiplexed from one
+  event loop; ``streams_per_connection`` scales the admission budget
+  (``conns × streams`` requests may be in flight/parked at once, the
+  paper's stream budget applied to an HTTP/1.1 pool — each socket carries
+  one request at a time, the budget bounds what may *wait* for one).
+* :class:`AioHttpBackend` — the same worker model as ``HttpBackend``
+  (spawned or ``url=``-external worker host, shared manifest, measured
+  client-observed latency) but every request is driven by the async client
+  on one background event loop: N invocations in flight cost N socket
+  reads, not N blocked threads.  Registered as ``"http-aio"`` — a drop-in
+  for sync ``Session`` *and* the natural floor under
+  :class:`~repro.serving.aio.AsyncSession`.
+
+Failure contract unchanged: connection loss or a dead worker surfaces as a
+retryable ``WorkerCrash`` (the dispatcher's retry policy resubmits), never
+a hung future.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from collections import deque
+from typing import Any
+
+from ..dispatch.futures import Invocation, InvocationRecord
+from ..dispatch.transports import HttpBackend, _deliver, _worker_crash
+from ..dispatch.workers import BackendCapabilities
+from ..serialization import wire
+
+
+class _Conn:
+    __slots__ = ("reader", "writer")
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter):
+        self.reader = reader
+        self.writer = writer
+
+    def close(self) -> None:
+        try:
+            self.writer.close()
+        except Exception:
+            pass
+
+
+class AioHttpClient:
+    """Minimal asyncio HTTP/1.1 client with a persistent connection pool.
+
+    ``await client.request(path, body)`` → response body bytes (raises
+    ``ConnectionError`` on transport loss or non-200).  Connections are
+    opened lazily up to ``n_connections``, reused keep-alive, and burned on
+    any protocol error (the next request dials a fresh one).
+    """
+
+    def __init__(self, host: str, port: int, *, n_connections: int = 16,
+                 streams_per_connection: int = 100,
+                 request_timeout_s: float = 600.0):
+        self.host = host
+        self.port = port
+        self.n_connections = max(1, n_connections)
+        self.budget = self.n_connections * max(1, streams_per_connection)
+        self._timeout = request_timeout_s
+        self._free: deque[_Conn] = deque()
+        self._n_open = 0
+        self._conn_slots = asyncio.Semaphore(self.n_connections)
+        self._budget_sem = asyncio.Semaphore(self.budget)
+        self.inflight = 0               # admitted into the budget
+
+    # ------------------------------------------------------------- wire
+    async def _checkout(self) -> _Conn:
+        while self._free:
+            conn = self._free.popleft()
+            if conn.writer.is_closing():
+                self._n_open -= 1
+                continue
+            return conn
+        reader, writer = await asyncio.open_connection(self.host, self.port)
+        self._n_open += 1
+        return _Conn(reader, writer)
+
+    def _checkin(self, conn: _Conn) -> None:
+        if conn.writer.is_closing():
+            self._n_open -= 1
+        else:
+            self._free.append(conn)
+
+    def _burn(self, conn: _Conn) -> None:
+        conn.close()
+        self._n_open -= 1
+
+    async def _roundtrip(self, conn: _Conn, path: str, body: bytes) -> bytes:
+        head = (f"POST {path} HTTP/1.1\r\n"
+                f"Host: {self.host}:{self.port}\r\n"
+                f"Content-Type: application/octet-stream\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: keep-alive\r\n\r\n").encode("ascii")
+        conn.writer.write(head + body)
+        await conn.writer.drain()
+        status_line = await conn.reader.readline()
+        if not status_line:
+            raise ConnectionError("worker closed the connection")
+        parts = status_line.split(None, 2)
+        if len(parts) < 2 or not parts[0].startswith(b"HTTP/"):
+            raise ConnectionError(f"malformed status line {status_line!r}")
+        status = int(parts[1])
+        headers: dict[str, str] = {}
+        while True:
+            line = await conn.reader.readline()
+            if line in (b"\r\n", b"\n"):
+                break
+            if not line:
+                raise ConnectionError("connection lost in response headers")
+            k, _, v = line.decode("latin1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        reply = await conn.reader.readexactly(
+            int(headers.get("content-length", 0)))
+        if status != 200:
+            raise ConnectionError(f"worker HTTP {status}")
+        if headers.get("connection", "").lower() == "close":
+            conn.writer.close()             # server refuses reuse
+        return reply
+
+    async def request(self, path: str, body: bytes) -> bytes:
+        """One POST round-trip through the pooled client."""
+        async with self._budget_sem:        # the conns × streams budget
+            self.inflight += 1
+            try:
+                async with self._conn_slots:
+                    conn = await self._checkout()
+                    try:
+                        reply = await asyncio.wait_for(
+                            self._roundtrip(conn, path, body), self._timeout)
+                    except BaseException:
+                        self._burn(conn)
+                        raise
+                    self._checkin(conn)
+                    return reply
+            finally:
+                self.inflight -= 1
+
+    async def aclose(self) -> None:
+        while self._free:
+            self._burn(self._free.popleft())
+
+
+# ----------------------------------------------------------------- backend
+
+class AioHttpBackend(HttpBackend):
+    """``"http-aio"``: the ``http`` worker model driven by one event loop.
+
+    Same worker host, same wire protocol, same measured latency — but
+    ``submit`` hands the invocation to a background event loop where the
+    multiplexed :class:`AioHttpClient` drives it.  In-flight capacity is
+    the client's conns × streams budget instead of a thread-pool size, so
+    a sync ``Session`` gets paper-scale concurrency for free and an
+    ``AsyncSession`` on top never blocks a thread at all.
+    """
+
+    capabilities = BackendCapabilities(concurrent=True, warm_reuse=True,
+                                       measures_latency=True,
+                                       cross_process=True)
+
+    def __init__(self, *, n_connections: int | None = None,
+                 streams_per_connection: int = 100, os_threads: int = 16,
+                 **kwargs: Any):
+        super().__init__(os_threads=os_threads, n_connections=n_connections,
+                         **kwargs)
+        self._streams = max(1, streams_per_connection)
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._loop_thread: threading.Thread | None = None
+        self._loop_lock = threading.Lock()
+        self._client: AioHttpClient | None = None
+        self._client_lock: asyncio.Lock | None = None
+        self._pending = 0
+        self._pending_lock = threading.Lock()
+
+    # ------------------------------------------------------------ the loop
+    def _ensure_loop(self) -> asyncio.AbstractEventLoop:
+        with self._loop_lock:
+            if self._loop is None:
+                if self._stop:
+                    raise RuntimeError("backend is shut down")
+                self._loop = asyncio.new_event_loop()
+                self._client_lock = asyncio.Lock()
+                self._loop_thread = threading.Thread(
+                    target=self._loop.run_forever,
+                    name="repro-http-aio", daemon=True)
+                self._loop_thread.start()
+            return self._loop
+
+    async def _ensure_client(self) -> AioHttpClient:
+        async with self._client_lock:
+            if self._client is None:
+                # worker spawn blocks (subprocess + READY scrape): executor
+                host, port = await asyncio.get_running_loop() \
+                    .run_in_executor(None, self._ensure_worker)
+                self._client = AioHttpClient(
+                    host, port, n_connections=self._n_workers,
+                    streams_per_connection=self._streams)
+            return self._client
+
+    # ------------------------------------------------------------- backend
+    def submit(self, inv: Invocation) -> None:
+        loop = self._ensure_loop()
+        with self._pending_lock:
+            self._pending += 1
+        asyncio.run_coroutine_threadsafe(self._invoke(inv), loop)
+
+    @property
+    def queue_depth(self) -> int:
+        return self._pending
+
+    def scale_to(self, os_threads: int) -> None:
+        if self._client is None:            # before first dial: grow the pool
+            with self._lock:
+                self._n_workers = max(self._n_workers, os_threads)
+
+    async def _invoke(self, inv: Invocation) -> None:
+        try:
+            if inv.future.done():           # hedged sibling / cancelled
+                return
+            bridge = inv.deployed.bridge
+            rec = InvocationRecord(
+                task_id=inv.task_id, function_name=bridge.name,
+                attempts=inv.attempt, hedged=inv.is_hedge,
+                payload_bytes=len(inv.payload),
+                memory_gb=bridge.config.memory_gb)
+            request = wire.encode_invoke(
+                bridge.name, inv.payload,
+                task_id=inv.task_id, attempt=inv.attempt)
+            try:
+                client = await self._ensure_client()
+                t0 = time.perf_counter()
+                reply = await client.request("/invoke", request)
+                rec.modeled_latency_ms = (time.perf_counter() - t0) * 1000.0
+                rec.latency_measured = True
+            except Exception as e:
+                detail = self._slot_epitaph(None) or \
+                    (str(e) or type(e).__name__)
+                _deliver(inv, False,
+                         _worker_crash(f"http-aio request failed "
+                                       f"(task {inv.task_id}): {detail}"),
+                         rec)
+                return
+            # reply decode + result deserialization are CPU-bound (payloads
+            # can be params-sized): keep them off the event loop
+            await asyncio.get_running_loop().run_in_executor(
+                None, self._complete, inv, reply, rec)
+        except BaseException as e:          # a backend bug must not hang futures
+            inv.future.set_error(e)
+        finally:
+            with self._pending_lock:
+                self._pending -= 1
+
+    # ------------------------------------------------------------- control
+    def drain_warm(self, function_name: str | None = None) -> int:
+        if self._loop is None or self._client is None:
+            return 0                        # nothing dialed, nothing warm
+        frame = wire.encode_control("drain", function=function_name)
+
+        async def go() -> bytes:
+            client = await self._ensure_client()
+            return await client.request("/invoke", frame)
+
+        try:
+            reply = asyncio.run_coroutine_threadsafe(
+                go(), self._loop).result(timeout=30)
+            msg = wire.decode(reply)
+            if isinstance(msg, wire.ControlRequest):
+                return int(msg.data.get("count", 0))
+        except Exception:
+            pass                            # a dead worker has nothing warm
+        return 0
+
+    def shutdown(self) -> None:
+        self._stop = True
+        with self._loop_lock:
+            loop, self._loop = self._loop, None
+            thread, self._loop_thread = self._loop_thread, None
+        if loop is not None:
+            client, self._client = self._client, None
+
+            async def drain() -> None:
+                # cancel in-flight invocations so their futures error out
+                # (never hang) before the loop dies
+                tasks = [t for t in asyncio.all_tasks()
+                         if t is not asyncio.current_task()]
+                for t in tasks:
+                    t.cancel()
+                await asyncio.gather(*tasks, return_exceptions=True)
+                if client is not None:
+                    await client.aclose()
+
+            try:
+                asyncio.run_coroutine_threadsafe(
+                    drain(), loop).result(timeout=10)
+            except Exception:
+                pass
+            loop.call_soon_threadsafe(loop.stop)
+            if thread is not None:
+                thread.join(timeout=5)
+            loop.close()
+        super().shutdown()                  # worker process + manifest file

@@ -1,0 +1,334 @@
+"""Async serving subsystem (ISSUE 3): AsyncSession across every registered
+backend (await submit / async-for map_unordered / cancellation / awaitable
+admission gate), the thread-safe future-callback contract underneath it,
+the continuous batcher, the artifact store, and the serve bench's schema.
+"""
+import asyncio
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cloud import Session
+from repro.dispatch.futures import (InvocationCancelled, InvocationFuture,
+                                    InvocationRecord)
+from repro.serving import AsyncSession, ContinuousBatcher, run_continuous
+
+# ----------------------------------------------------------- the matrix ----
+# The acceptance matrix: the async surface must behave identically on every
+# registered backend, including the real out-of-process transports.  Task
+# functions live at module level so `processes`/`http` can ship them by
+# reference.
+
+MATRIX_BACKENDS = ("inline", "threads", "sim-aws", "processes", "http",
+                   "http-aio")
+
+
+def aio_square_sum(x):
+    import jax.numpy as jnp
+    return jnp.sum(x * x)
+
+
+def aio_sleepy(s):
+    import time
+    time.sleep(s)
+    return s
+
+
+@pytest.fixture(scope="module", params=MATRIX_BACKENDS)
+def sync_session(request):
+    with Session(request.param, os_threads=2) as sess:
+        yield sess
+
+
+def test_matrix_await_submit(sync_session):
+    async def go():
+        asess = AsyncSession(sync_session)
+        f = asess.function(aio_square_sum, name="aio_ssq", memory_mb=512)
+        inv = f.submit(jnp.ones(4))
+        out = await inv
+        assert float(out) == 4.0
+        assert inv.record is not None and inv.record.memory_gb == 0.5
+    asyncio.run(go())
+
+
+def test_matrix_async_for_map_unordered(sync_session):
+    async def go():
+        asess = AsyncSession(sync_session)
+        f = asess.function(aio_square_sum, name="aio_ssq")
+        seen = []
+        async for r in f.map_unordered([(jnp.ones(4) * i,)
+                                        for i in range(4)]):
+            seen.append(float(r))
+        assert sorted(seen) == [0.0, 4.0, 16.0, 36.0]
+    asyncio.run(go())
+
+
+def test_matrix_cancellation(sync_session):
+    """Cancelling an AsyncInvocation cancels the backend future: queued
+    work sheds, siblings are untouched, the gate fully drains."""
+    async def go():
+        asess = AsyncSession(sync_session, max_inflight=2)
+        f = asess.function(aio_sleepy, jax_traceable=False)
+        siblings = [f.submit(0.2) for _ in range(2)]
+        victim = f.submit(0.2)         # parked at the admission gate
+        await asyncio.sleep(0)
+        if victim.cancel():
+            with pytest.raises(asyncio.CancelledError):
+                await victim
+        assert [await s for s in siblings] == [0.2, 0.2]
+        # the gate must be fully released afterwards
+        assert float(await f.submit(0.01)) == 0.01
+        assert asess.admitted == 0
+    asyncio.run(go())
+
+
+def test_matrix_admission_gate_parks_then_releases(sync_session):
+    """The awaitable gate: the N+1th submit waits for a completion instead
+    of raising Saturated — and proceeds once inflight drains."""
+    async def go():
+        asess = AsyncSession(sync_session, max_inflight=2)
+        f = asess.function(aio_sleepy, jax_traceable=False)
+        t0 = time.perf_counter()
+        invs = [f.submit(0.3) for _ in range(2)]
+        third = f.submit(0.05)
+        await asyncio.sleep(0.1)
+        assert asess.admitted == 2     # gate holds exactly the limit
+        assert asess.waiting >= 1      # the third is parked, not rejected
+        assert float(await third) == 0.05
+        # it could only run after a slot freed → a 0.3 s sleep finished
+        assert time.perf_counter() - t0 >= 0.25
+        await asyncio.gather(*invs)
+        assert asess.admitted == 0
+    asyncio.run(go())
+
+
+def test_matrix_admit_release_are_manual_too(sync_session):
+    async def go():
+        asess = AsyncSession(sync_session, max_inflight=1)
+        await asess.admit()
+        assert asess.admitted == 1
+        waiter = asyncio.get_running_loop().create_task(asess.admit())
+        await asyncio.sleep(0.05)
+        assert not waiter.done()       # parked behind the held slot
+        asess.release()
+        await waiter
+        assert asess.admitted == 1     # the slot changed hands
+        asess.release()
+        assert asess.admitted == 0
+    asyncio.run(go())
+
+
+# --------------------------------------------- future callback contract ----
+
+def test_add_done_callback_fires_exactly_once_across_threads():
+    fut = InvocationFuture(0)
+    fired: list[int] = []
+    barrier = threading.Barrier(9)
+
+    def register(i):
+        barrier.wait()
+        fut.add_done_callback(lambda _f, i=i: fired.append(i))
+
+    def complete():
+        barrier.wait()
+        fut.set_result(42, InvocationRecord(0, "f"))
+
+    threads = [threading.Thread(target=register, args=(i,)) for i in range(8)]
+    threads.append(threading.Thread(target=complete))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(fired) == list(range(8))     # all fired, exactly once
+    fut.add_done_callback(lambda _f: fired.append(99))
+    assert fired[-1] == 99                     # already-done → immediate
+
+
+def test_future_cancel_contract():
+    fut = InvocationFuture(1)
+    assert fut.cancel()
+    assert fut.done() and fut.cancelled()
+    with pytest.raises(InvocationCancelled):
+        fut.result(timeout=0)
+    assert fut.exception(timeout=0).__class__ is InvocationCancelled
+    # completion after cancel loses the race
+    assert not fut.set_result(1, InvocationRecord(1, "f"))
+    # cancel after completion loses too
+    fut2 = InvocationFuture(2)
+    fut2.set_result(1, InvocationRecord(2, "f"))
+    assert not fut2.cancel()
+
+
+def test_gather_treats_cancellation_as_settled_failure():
+    """InvocationCancelled is a CancelledError (BaseException) but it is a
+    *settled* per-task outcome: gather's partial-failure policy must slot
+    it under return_exceptions instead of letting it escape."""
+    from repro.cloud import gather
+    with Session("threads", os_threads=1) as sess:
+        f = sess.function(aio_sleepy, jax_traceable=False)
+        ok = f.submit(0.1)
+        victim = f.submit(0.1)         # queued behind the single thread
+        assert victim.cancel()
+        out = gather([ok, victim], return_exceptions=True, timeout=30)
+        assert out[0] == 0.1
+        assert isinstance(out[1], InvocationCancelled)
+        with pytest.raises(InvocationCancelled):
+            gather([f.submit(0.01), victim], timeout=30)
+
+
+def test_cancelled_future_does_not_leak_session_inflight():
+    """Backends skip a done future; the dispatcher's pending set must still
+    shrink — wait() returns and inflight drops to zero."""
+    with Session("threads", os_threads=1) as sess:
+        f = sess.function(aio_sleepy, jax_traceable=False)
+        blocker = f.submit(0.3)
+        queued = f.submit(0.3)         # behind the single thread
+        assert queued.cancel()
+        sess.wait(timeout=30)
+        assert sess.inflight == 0
+        assert blocker.result(timeout=30) == 0.3
+        with pytest.raises(InvocationCancelled):
+            queued.result(timeout=0)
+
+
+# ------------------------------------------------------------- batching ----
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    import jax
+    from repro.configs import get_smoke
+    from repro.models import build_model
+
+    cfg = get_smoke("smollm-360m")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mixed_requests(cfg, n=6, prompt_len=8):
+    from repro.runtime.server import Request
+    rng = np.random.default_rng(0)
+    return [Request(prompt=list(rng.integers(1, cfg.vocab_size, prompt_len)),
+                    max_new=(4 if i % 2 else 8)) for i in range(n)]
+
+
+def test_continuous_batching_matches_waves(lm_setup):
+    """Same pack/unpack core ⇒ identical greedy tokens, wave or continuous,
+    with mixed decode lengths (bucketing trims, never truncates).  Prompts
+    share one length so packing is batch-composition-independent — ragged
+    prompts inherit the maskless-left-pad caveat (see pack_prompts)."""
+    from repro.runtime.server import LMServer
+
+    cfg, params = lm_setup
+    with Session("threads", os_threads=2) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = _mixed_requests(cfg)
+        wave = server.serve(reqs, wave_size=3)
+        cont = run_continuous(server, reqs, concurrency=6, max_batch=3,
+                              slots=2, max_wait_ms=5)
+        assert [c.tokens for c in wave] == [c.tokens for c in cont]
+        assert [len(c.tokens) for c in cont] == [8, 4, 8, 4, 8, 4]
+
+
+def test_batcher_stats_and_bucketing(lm_setup):
+    from repro.runtime.server import LMServer
+
+    cfg, params = lm_setup
+    with Session("threads", os_threads=2) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = _mixed_requests(cfg, n=8)
+
+        async def go():
+            async with ContinuousBatcher(server, max_batch=4, slots=2,
+                                         max_wait_ms=5) as b:
+                comps = await asyncio.gather(*[b.submit(r) for r in reqs])
+                return comps, b.stats
+        comps, stats = asyncio.run(go())
+        assert len(comps) == 8
+        assert stats.requests == 8
+        assert stats.batches >= 2
+        # like-length grouping happened: both decode buckets appear
+        assert set(stats.bucket_histogram) == {4, 8}
+
+
+def test_batcher_cancelled_request_is_skipped(lm_setup):
+    from repro.runtime.server import LMServer
+
+    cfg, params = lm_setup
+    with Session("threads", os_threads=2) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        reqs = _mixed_requests(cfg, n=3)
+
+        async def go():
+            async with ContinuousBatcher(server, max_batch=4, slots=1,
+                                         max_wait_ms=50) as b:
+                t1 = asyncio.ensure_future(b.submit(reqs[0]))
+                t2 = asyncio.ensure_future(b.submit(reqs[1]))
+                await asyncio.sleep(0)
+                t2.cancel()                  # cancelled while queued
+                out = await t1
+                with pytest.raises(asyncio.CancelledError):
+                    await t2
+                return out, b.stats
+        out, stats = asyncio.run(go())
+        assert len(out.tokens) == reqs[0].max_new
+        assert stats.requests < 3            # the cancelled one never packed
+
+
+# ------------------------------------------------------- artifact store ----
+
+def test_artifact_refs_resolve_across_processes(lm_setup):
+    """Params deploy once (content-addressed); payloads carry the pointer
+    and real worker processes resolve + cache it — tokens identical to the
+    in-process run, payloads orders of magnitude smaller."""
+    from repro.runtime.server import LMServer
+
+    cfg, params = lm_setup
+    reqs = _mixed_requests(cfg, n=4)
+    with Session("threads", os_threads=2) as s1:
+        ref = LMServer(cfg, params, session=s1, max_new=4).serve(
+            reqs, wave_size=2)
+        assert all(r.payload_bytes < 64_000 for r in s1.records)
+    with Session("processes", os_threads=2) as s2:
+        out = LMServer(cfg, params, session=s2, max_new=4).serve(
+            reqs, wave_size=2)
+    assert [c.tokens for c in ref] == [c.tokens for c in out]
+
+
+def test_artifact_roundtrip_and_integrity(tmp_path):
+    from repro.serialization import (ArtifactRef, load_artifact,
+                                     put_artifact, serialize)
+    value = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    ref = put_artifact(value, directory=str(tmp_path))
+    ref2 = put_artifact(value, directory=str(tmp_path))
+    assert ref == ref2                           # content-addressed
+    np.testing.assert_array_equal(load_artifact(ref)["w"], value["w"])
+    # corrupt store file + cold cache → loud failure
+    with open(ref.path, "wb") as f:
+        f.write(serialize({"w": np.zeros((2, 3), np.float32)}))
+    stale = ArtifactRef(path=ref.path, sha="0" * 64)
+    with pytest.raises(ValueError, match="hash"):
+        load_artifact(stale)
+
+
+# ------------------------------------------------------------ the bench ----
+
+def test_serve_bench_schema_smoke():
+    """The CI-facing contract: serve_bench runs end to end on the threads
+    backend and emits the repro.serve_bench/v1 document."""
+    import benchmarks.serve_bench as sb
+
+    doc = sb.run("threads", requests=8, concurrency=8, prompt_len=8,
+                 max_new=4, wave=4, slots=2, os_threads=2)
+    assert doc["schema"] == "repro.serve_bench/v1"
+    for mode in ("waves", "continuous"):
+        r = doc["results"][mode]
+        assert r["requests"] == 8
+        for k in ("throughput_rps", "tokens_per_s", "p50_ms", "p95_ms",
+                  "p99_ms", "wall_s"):
+            assert k in r, (mode, k)
+    assert "speedup_continuous_vs_waves" in doc
+    assert doc["results"]["continuous"]["scheduler"]["requests"] == 8

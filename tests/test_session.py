@@ -343,7 +343,8 @@ def test_cloud_namespace_exports():
 # `processes` and `http` run the same tasks in real worker processes, so
 # the task functions live at module level (shippable by reference).
 
-MATRIX_BACKENDS = ("inline", "threads", "sim-aws", "processes", "http")
+MATRIX_BACKENDS = ("inline", "threads", "sim-aws", "processes", "http",
+                   "http-aio")
 
 
 def matrix_square_sum(x):
@@ -470,6 +471,28 @@ def test_shed_map_failure_keeps_sibling_reservations():
             f.map([(0.01,), (0.01,)])
         sess.wait()                        # sibling resolves → slots free
         assert f.map([(0.01,), (0.01,)]) == [0.01, 0.01]
+
+
+def matrix_sleepy(s):
+    import time
+    time.sleep(s)
+    return s
+
+
+@pytest.mark.parametrize("backend", ["processes", "http", "http-aio"])
+def test_shed_saturated_and_recovers_on_real_transports(backend):
+    """Backpressure under real transports (ISSUE 3 satellite): shed=True
+    raises Saturated at the limit, and admission slots release when the
+    remote invocations complete — the recovery half of the contract."""
+    with Session(backend, os_threads=2, max_concurrency=2,
+                 shed=True) as sess:
+        f = sess.function(matrix_sleepy, jax_traceable=False)
+        futs = [f.submit(0.5), f.submit(0.5)]
+        with pytest.raises(Saturated, match="max_concurrency=2"):
+            f.submit(0.5)
+        gather(futs, timeout=300)
+        # slots released by completion → the session admits again
+        assert f.submit(0.01).result(timeout=300) == 0.01
 
 
 def test_shed_off_keeps_queueing_semantics():
