@@ -22,9 +22,12 @@ Two schedulers over the *same* pack/dispatch/unpack core:
                    ``http-aio`` asyncio client (paper-style
                    conns × streams, no thread per request).
 
-Request lengths are *long-tail mixed* (~3/4 short at ``max_new/8``, ~1/4
-long at ``--max-new``) — the workload where fixed waves pay the
-long-neighbour tax and continuous batching shows up in throughput.
+Requests are *long-tail mixed* on both axes: decode lengths (~3/4 short
+at ``max_new/8``, ~1/4 long at ``--max-new``) and prompt lengths (~3/4 at
+``prompt_len/4``, ~1/4 at ``--prompt-len``) — the workload where fixed
+waves pay the long-neighbour tax and continuous batching shows up in
+throughput.  Ragged packing is exact: pad masks run prefill-to-decode, so
+the numbers are honest for mixed-length traffic.
 
 ``--json`` writes the machine-readable ``repro.serve_bench/v1`` schema
 (see ``make_result``); CI's serving smoke step runs a tiny instance on
@@ -43,19 +46,28 @@ import numpy as np
 # ------------------------------------------------------------- workload ----
 
 def make_requests(cfg, n: int, prompt_len: int, max_new: int, seed: int = 0):
-    """Long-tail request mix: ~3/4 short (max_new/8), ~1/4 long.
+    """Long-tail request mix on BOTH axes: ~3/4 short, ~1/4 long, for the
+    prompt length and (independently) the decode length.
 
-    The production-shaped workload: most completions are short, a tail is
-    long.  Arrival-order waves almost always contain one long request, so
-    every member decodes the full tail; length-bucketed continuous batches
-    mostly decode short — that delta is the throughput story.
+    The production-shaped workload: most prompts and completions are
+    short, a tail is long.  Ragged prompt lengths are honest now — packing
+    is pad-masked end to end (pack_prompts lengths → prefill/decode
+    masks), so a mixed batch returns the same tokens each request would
+    get alone.  Arrival-order waves almost always contain one long
+    request, so every member decodes the full tail; length-bucketed
+    continuous batches mostly decode short — that delta is the throughput
+    story.
     """
     from repro.runtime.server import Request
     rng = np.random.default_rng(seed)
-    short = max(1, max_new // 8)
-    return [Request(prompt=list(rng.integers(1, cfg.vocab_size, prompt_len)),
-                    max_new=(short if rng.random() < 0.75 else max_new))
-            for _ in range(n)]
+    short_new = max(1, max_new // 8)
+    short_prompt = max(1, prompt_len // 4)
+    return [Request(
+        prompt=list(rng.integers(1, cfg.vocab_size,
+                                 (short_prompt if rng.random() < 0.75
+                                  else prompt_len))),
+        max_new=(short_new if rng.random() < 0.75 else max_new))
+        for _ in range(n)]
 
 
 def make_server(backend: str, arch: str, max_new: int, os_threads: int):
@@ -74,13 +86,16 @@ def make_server(backend: str, arch: str, max_new: int, os_threads: int):
 
 
 def warmup(server, cfg, max_new: int, prompt_len: int, batch: int) -> None:
-    """Pay every decode bucket's AOT compile at the *real* packed shape
-    (batch/prompt shape buckets) before timing anything."""
-    from repro.runtime.server import Request, decode_bucket
-    prompt = list(range(1, prompt_len + 1))
-    for b in sorted({decode_bucket(max(1, max_new // 8)),
-                     decode_bucket(max_new)}):
-        server.serve_wave([Request(prompt=prompt, max_new=b)] * batch)
+    """Pay every decode bucket's AOT compile at the *real* packed shapes
+    (batch/prompt shape buckets, short AND long prompt buckets — the
+    long-tail mix produces both) before timing anything."""
+    from repro.runtime.server import Request, decode_bucket, shape_bucket
+    for plen in sorted({shape_bucket(max(1, prompt_len // 4)),
+                        shape_bucket(prompt_len)}):
+        prompt = list(range(1, plen + 1))
+        for b in sorted({decode_bucket(max(1, max_new // 8)),
+                         decode_bucket(max_new)}):
+            server.serve_wave([Request(prompt=prompt, max_new=b)] * batch)
 
 
 def percentiles(lats_ms: list[float]) -> dict:
@@ -216,6 +231,7 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
                                            slots=slots)
             results["waves"]["cost"] = session.cost.summary()
         finally:
+            server.close()
             session.close()
 
     if "continuous" in modes:
@@ -235,6 +251,7 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
             results["continuous"]["backend"] = cont_backend
             results["continuous"]["cost"] = session.cost.summary()
         finally:
+            server.close()
             session.close()
 
     return make_result(config, results)

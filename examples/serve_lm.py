@@ -61,6 +61,7 @@ def main():
         print(f"req {i}: {c.tokens}  ({c.cost_gb_s:.4f} GB-s)")
     print(f"{len(comps)} requests in {wall:.2f}s ({args.mode} on "
           f"{args.backend}); bill:", server.cost_report.summary())
+    server.close()
     session.close()
 
 

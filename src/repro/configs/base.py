@@ -48,6 +48,12 @@ class ModelConfig:
     mrope_sections: tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w) freq split
     rms_eps: float = 1e-6
     tie_embeddings: bool = False
+    # pad token id for batched serving (runtime/server.pack_prompts).  Any
+    # valid embedding index works — per-row lengths, not sentinel scanning,
+    # are the source of truth for what is padding, and pad slots are masked
+    # out of attention / recurrent state everywhere — but it must be a
+    # legal row of the embedding table (0 <= pad_id < vocab_size).
+    pad_id: int = 0
     moe: MoEConfig = MoEConfig()
     ssm: SSMConfig = SSMConfig()
     # hybrid (zamba2): one shared attention block applied every k SSM blocks

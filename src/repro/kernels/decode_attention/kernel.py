@@ -6,7 +6,9 @@ query heads of a kv group ride along — GQA turns the dot into a (G, bk)
 matmul, amortizing the K/V read across the group (the TPU adaptation of
 GPU flash-decode, where warps split the cache instead).
 
-Layout: q (B, Hkv, G, D); k, v (B, Hkv, Skv, D); kv_len (B, 1) int32 in SMEM.
+Layout: q (B, Hkv, G, D); k, v (B, Hkv, Skv, D); (kv_start, kv_len) as a
+(B, 2) int32 bounds plane in SMEM — start masks left-pad cache slots from
+ragged prefill, len bounds the live suffix.
 Grid (B, Hkv, Skv/bk) — kv dim minor-most/sequential; running softmax state
 in VMEM scratch.
 """
@@ -25,7 +27,8 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                 scale, window, block_k, kv_blocks):
     ik = pl.program_id(2)
-    kv_len = len_ref[0, 0]
+    kv_start = len_ref[0, 0]                 # first valid slot (left pad end)
+    kv_len = len_ref[0, 1]
 
     @pl.when(ik == 0)
     def _init():
@@ -35,6 +38,7 @@ def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     col0 = ik * block_k
     live = col0 < kv_len
+    live &= col0 + block_k > kv_start        # tile fully inside the left pad
     if window:
         live &= col0 + block_k > kv_len - window
 
@@ -46,7 +50,7 @@ def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G,bk)
         cols = col0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = cols < kv_len
+        mask = (cols < kv_len) & (cols >= kv_start)
         if window:
             mask &= cols >= kv_len - window
         s = jnp.where(mask, s, NEG_INF)
@@ -54,6 +58,10 @@ def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_prev, l_prev = m_ref[...], l_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[:, None])
+        # no valid col so far (m_new == NEG_INF, e.g. kv_start >= kv_len)
+        # must contribute 0, not exp(NEG_INF - NEG_INF) = 1 per col —
+        # keeps l at 0 so _fin zeroes the row, matching the ref path
+        p = jnp.where((m_new > 0.5 * NEG_INF)[:, None], p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
         m_ref[...] = m_new
@@ -71,14 +79,19 @@ def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 @functools.partial(
     jax.jit, static_argnames=("window", "scale", "block_k", "interpret"))
-def flash_decode_bhgd(q, k, v, kv_len, *, window=0, scale=None,
+def flash_decode_bhgd(q, k, v, kv_len, kv_start=None, *, window=0, scale=None,
                       block_k=256, interpret=False):
-    """q (B,Hkv,G,D); k,v (B,Hkv,Skv,D); kv_len (B,) -> (B,Hkv,G,D)."""
+    """q (B,Hkv,G,D); k,v (B,Hkv,Skv,D); kv_len/kv_start (B,) ->
+    (B,Hkv,G,D).  kv_start masks left-pad cache slots (None = 0)."""
     b, hkv, g, d = q.shape
     _, _, skv, _ = k.shape
     assert skv % block_k == 0
     scale = scale if scale is not None else d ** -0.5
     kv_blocks = skv // block_k
+    if kv_start is None:
+        kv_start = jnp.zeros((b,), jnp.int32)
+    bounds = jnp.stack([kv_start.astype(jnp.int32),
+                        kv_len.astype(jnp.int32)], axis=1)    # (B, 2) SMEM
 
     kernel = functools.partial(_dec_kernel, scale=scale, window=window,
                                block_k=block_k, kv_blocks=kv_blocks)
@@ -86,7 +99,7 @@ def flash_decode_bhgd(q, k, v, kv_len, *, window=0, scale=None,
         kernel,
         grid=(b, hkv, kv_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0),
+            pl.BlockSpec((1, 2), lambda b_, h, j: (b_, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
@@ -100,4 +113,4 @@ def flash_decode_bhgd(q, k, v, kv_len, *, window=0, scale=None,
             pltpu.VMEM((g,), jnp.float32),
         ],
         interpret=interpret,
-    )(kv_len.reshape(b, 1).astype(jnp.int32), q, k, v)
+    )(bounds, q, k, v)

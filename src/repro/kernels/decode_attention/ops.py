@@ -8,13 +8,17 @@ from .ref import decode_attention_ref
 
 
 def decode_attention(q, k, v, kv_len, *, window: int = 0,
-                     scale: float | None = None, impl: str = "ref",
-                     block_k: int = 256):
-    """q (B,Hq,D); k,v (B,Skv,Hkv,D); kv_len (B,) -> (B,Hq,D)."""
+                     scale: float | None = None, kv_start=None,
+                     impl: str = "ref", block_k: int = 256):
+    """q (B,Hq,D); k,v (B,Skv,Hkv,D); kv_len (B,) -> (B,Hq,D).
+
+    ``kv_start`` (B,) int32 masks cache slots below it — the left-pad
+    prefix a ragged prefill left in the cache (None = no padding).
+    """
     if impl in ("ref", "xla"):
         # the jnp decode path is already linear-memory (scores (B,Hq,Skv))
         return decode_attention_ref(q, k, v, kv_len, window=window,
-                                    scale=scale)
+                                    scale=scale, kv_start=kv_start)
     interpret = impl == "pallas_interpret"
     b, hq, d = q.shape
     _, skv, hkv, _ = k.shape
@@ -29,6 +33,6 @@ def decode_attention(q, k, v, kv_len, *, window: int = 0,
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
 
-    out = flash_decode_bhgd(qg, kt, vt, kv_len, window=window, scale=scale,
-                            block_k=bk, interpret=interpret)
+    out = flash_decode_bhgd(qg, kt, vt, kv_len, kv_start, window=window,
+                            scale=scale, block_k=bk, interpret=interpret)
     return out.reshape(b, hq, d)

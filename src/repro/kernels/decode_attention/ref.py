@@ -4,6 +4,8 @@ q (B, Hq, D) — one new token per sequence.
 k, v (B, Skv, Hkv, D) — the cache; entries at positions >= kv_len are junk.
 kv_len (B,) int32 — valid cache length per sequence (the new token's k/v must
 already be written at kv_len-1 by the caller).
+kv_start (B,) int32 — first valid cache position per sequence; entries below
+it are left-pad slots from a ragged prefill and are masked out.
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 
 def decode_attention_ref(q, k, v, kv_len, *, window: int = 0,
-                         scale: float | None = None):
+                         scale: float | None = None, kv_start=None):
     b, hq, d = q.shape
     _, skv, hkv, _ = k.shape
     g = hq // hkv
@@ -27,10 +29,14 @@ def decode_attention_ref(q, k, v, kv_len, *, window: int = 0,
 
     cols = jnp.arange(skv)[None, :]                      # (1,Skv)
     mask = cols < kv_len[:, None]
+    if kv_start is not None:                             # (B,) left-pad count
+        mask &= cols >= kv_start[:, None]
     if window:
         mask &= cols >= jnp.maximum(0, kv_len[:, None] - window)
     s = jnp.where(mask[:, None, :], s, NEG_INF)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # all-masked row -> 0 output (flash kernel l==0 convention), never NaN
+    p = p * jnp.any(mask, axis=-1, keepdims=True)[:, None, :]
     out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
     return out.astype(q.dtype)

@@ -23,11 +23,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-               scale, causal, window, q_offset, block_q, block_k, kv_blocks,
-               kv_valid):
+def _fa_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, scale, causal, window, q_offset, block_q, block_k,
+               kv_blocks, kv_valid):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
+    kv_start = start_ref[0, 0]              # left-pad count for this row
 
     @pl.when(ik == 0)
     def _init():
@@ -39,8 +40,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     row0 = iq * block_q + q_offset          # first absolute q position
     col0 = ik * block_k
 
-    # tile-level skip: causal upper triangle / sliding-window lower band
+    # tile-level skip: causal upper triangle / sliding-window lower band /
+    # left-pad prefix tiles
     live = col0 < kv_valid                  # beyond valid kv (padding) tile
+    live &= col0 + block_k > kv_start       # tile fully inside the left pad
     if causal:
         live &= col0 <= row0 + block_q - 1
     if window:
@@ -56,7 +59,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
         rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
         cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-        mask = cols < kv_valid
+        mask = (cols < kv_valid) & (cols >= kv_start)
         if causal:
             mask &= cols <= rows
         if window:
@@ -67,6 +70,10 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         l_prev = l_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[:, None])
+        # a q row with NO valid col so far (m_new == NEG_INF: a pad query
+        # sharing a live tile with real rows) must contribute 0, not
+        # exp(NEG_INF - NEG_INF) = 1 per col — keeps l at 0 so _fin zeroes it
+        p = jnp.where((m_new > 0.5 * NEG_INF)[:, None], p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
         m_ref[...] = m_new
@@ -85,12 +92,14 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "q_offset", "scale",
                               "block_q", "block_k", "interpret"))
-def flash_attention_bhsd(q, k, v, *, causal=True, window=0, q_offset=0,
-                         scale=None, block_q=128, block_k=128,
+def flash_attention_bhsd(q, k, v, kv_start=None, *, causal=True, window=0,
+                         q_offset=0, scale=None, block_q=128, block_k=128,
                          interpret=False):
     """q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D) — Skv/Sq already padded by ops.py.
 
     ``q_offset``: absolute position of q[0] on the kv timeline.
+    ``kv_start`` (B,) int32: per-row left-pad count — kv positions before it
+    are masked out (ragged-batch prefill).  None = no padding.
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
@@ -98,6 +107,8 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=0, q_offset=0,
     g = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     kv_blocks = skv // block_k
+    if kv_start is None:
+        kv_start = jnp.zeros((b,), jnp.int32)
 
     kernel = functools.partial(
         _fa_kernel, scale=scale, causal=causal, window=window,
@@ -108,6 +119,8 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=0, q_offset=0,
         kernel,
         grid=(b, hq, sq // block_q, kv_blocks),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, i, j: (b_, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
             pl.BlockSpec((1, 1, block_k, d),
                          lambda b_, h, i, j, g_=g: (b_, h // g_, j, 0)),
@@ -123,4 +136,4 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=0, q_offset=0,
             pltpu.VMEM((block_q,), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(kv_start.reshape(b, 1).astype(jnp.int32), q, k, v)

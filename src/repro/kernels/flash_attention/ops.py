@@ -25,9 +25,13 @@ def _pad_to(x, axis, mult):
 
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
               q_offset: int = 0, scale: float | None = None,
-              kv_len=None, impl: str = "ref",
+              kv_len=None, kv_start=None, impl: str = "ref",
               block_q: int = 128, block_k: int = 128):
     """q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D) -> (B,Sq,Hq,D).
+
+    ``kv_start`` (B,) int32: per-row left-pad count — kv positions < start
+    are masked out on every impl (ragged-batch prefill).  A fully masked
+    row (start == Skv) yields finite output, never NaN.
 
     impl: "ref" (jnp oracle) | "pallas" (TPU) | "pallas_interpret" (CPU
     execution of the kernel body, used by the allclose test sweeps).
@@ -35,10 +39,12 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
     if impl == "ref" or kv_len is not None:
         # variable kv_len masking is handled by the decode kernel / ref path
         return attention_ref(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, scale=scale, kv_len=kv_len)
+                             q_offset=q_offset, scale=scale, kv_len=kv_len,
+                             kv_start=kv_start)
     if impl == "xla":
         return attention_xla(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, scale=scale)
+                             q_offset=q_offset, scale=scale,
+                             kv_start=kv_start)
 
     interpret = impl == "pallas_interpret"
     b, sq, hq, d = q.shape
@@ -52,8 +58,8 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
     kt, _ = _pad_to(kt, 2, bk)
     vt, _ = _pad_to(vt, 2, bk)
 
-    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
-                               q_offset=q_offset, scale=scale,
+    out = flash_attention_bhsd(qt, kt, vt, kv_start, causal=causal,
+                               window=window, q_offset=q_offset, scale=scale,
                                block_q=bq, block_k=bk, interpret=interpret)
     out = out[:, :, :sq0]
     return jnp.swapaxes(out, 1, 2)

@@ -16,7 +16,7 @@ NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                   q_offset: int = 0, scale: float | None = None,
-                  kv_len=None):
+                  kv_len=None, kv_start=None):
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
     assert hq % hkv == 0
@@ -35,21 +35,28 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
         mask &= cols <= rows
     if window:
         mask &= cols > rows - window
-    if kv_len is not None:                              # (B,) valid cache len
-        mask = mask[None] & (cols[None] < kv_len[:, None, None])
+    if kv_len is not None or kv_start is not None:
+        mask = mask[None]                               # (B?,Sq,Skv)
+        if kv_len is not None:                          # (B,) valid cache len
+            mask = mask & (cols[None] < kv_len[:, None, None])
+        if kv_start is not None:                        # (B,) left-pad count
+            mask = mask & (cols[None] >= kv_start[:, None, None])
         mask = mask[:, None]                            # (B,1,Sq,Skv)
     else:
         mask = mask[None, None]
     s = jnp.where(mask, s, NEG_INF)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # fully-masked rows (e.g. pad queries whose whole causal range is pad)
+    # output 0, matching the flash kernel's l==0 convention — never NaN
+    p = p * jnp.any(mask, axis=-1, keepdims=True)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
     return out.astype(q.dtype)
 
 
 def attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
                   q_offset: int = 0, scale: float | None = None,
-                  block_q: int = 512):
+                  kv_start=None, block_q: int = 512):
     """Query-chunked attention in pure XLA — the production fallback path.
 
     Same math as the oracle, but scores are materialized one q-block at a
@@ -86,10 +93,15 @@ def attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
             mask &= cols <= rows
         if window:
             mask &= cols > rows - window
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = mask[None, None, None]                   # (1,1,1,bq,Skv)
+        if kv_start is not None:                        # (B,) left-pad count
+            mask = mask & (cols >= kv_start[:, None]
+                           )[:, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
         m = jnp.max(s, axis=-1, keepdims=True)
         p = jnp.exp(s - m)
         p = p / jnp.sum(p, axis=-1, keepdims=True)
+        p = p * jnp.any(mask, axis=-1, keepdims=True)   # all-masked row -> 0
         o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
         return None, o.astype(q.dtype)
 

@@ -77,6 +77,7 @@ def main():
         "cost": server.cost_report.summary(),
         "sample": comps[0].tokens,
     }, indent=1))
+    server.close()
     session.close()
 
 

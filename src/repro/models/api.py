@@ -6,6 +6,13 @@
   model.decode(params, cache, tok) -> (logits (B,V), cache')
   model.init_cache(batch, cap)     -> family-specific cache pytree
 
+Ragged batches: ``batch["lengths"]`` (B,) int32 marks how many REAL tokens
+each left-padded row holds (see ``runtime/server.pack_prompts``).  Every
+family masks pad slots out of attention / gates them out of recurrent
+state, and attention-family caches carry the per-row first valid slot as
+``cache["start"]`` so decode keeps masking them — greedy decode of a
+prompt is invariant to the batch it was packed into.
+
 ``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
 entry-point input — the shape-only payloads the dry-run lowers against
 (no allocation), mirroring how Cppless deploys against abstract payloads.
@@ -48,13 +55,13 @@ def build_model(cfg: ModelConfig) -> Model:
             return transformer.lm_forward(
                 p, cfg, tokens=batch.get("tokens"),
                 embeds=batch.get("embeds"), pos3d=batch.get("pos3d"),
-                attn_impl=impl)
+                attn_impl=impl, lengths=batch.get("lengths"))
 
         def prefill(p, batch):
             return transformer.lm_prefill(
                 p, cfg, tokens=batch.get("tokens"),
                 embeds=batch.get("embeds"), pos3d=batch.get("pos3d"),
-                attn_impl=impl)
+                attn_impl=impl, lengths=batch.get("lengths"))
 
         def decode(p, cache, tokens):
             return transformer.lm_decode(p, cfg, cache, tokens,
@@ -68,14 +75,16 @@ def build_model(cfg: ModelConfig) -> Model:
     if cfg.family == "hybrid":
         def forward(p, batch):
             return hybrid.hybrid_forward(p, cfg, batch["tokens"],
-                                         attn_impl=impl)
+                                         attn_impl=impl,
+                                         lengths=batch.get("lengths"))
 
         def prefill(p, batch):
+            lengths = batch.get("lengths")
             logits, caches = hybrid.hybrid_forward(
                 p, cfg, batch["tokens"], attn_impl=impl,
-                collect_cache=True, last_only=True)
+                collect_cache=True, last_only=True, lengths=lengths)
             msts, (ck, cv) = caches
-            s_len = batch["tokens"].shape[1]
+            b, s_len = batch["tokens"].shape
 
             def _flat(a):   # (G, k, ...) -> (L, ...)
                 return a.reshape(a.shape[0] * a.shape[1], *a.shape[2:])
@@ -86,6 +95,8 @@ def build_model(cfg: ModelConfig) -> Model:
                 "conv_C": _flat(msts["conv"][2]),
                 "ssd": _flat(msts["ssd"]), "k": ck, "v": cv,
                 "idx": jnp.int32(s_len),
+                "start": (jnp.zeros((b,), jnp.int32) if lengths is None
+                          else (s_len - lengths).astype(jnp.int32)),
             }
             return logits[:, -1], cache
 
@@ -100,11 +111,13 @@ def build_model(cfg: ModelConfig) -> Model:
 
     if cfg.family == "ssm":
         def forward(p, batch):
-            return rwkv_model.rwkv_forward(p, cfg, batch["tokens"])
+            return rwkv_model.rwkv_forward(p, cfg, batch["tokens"],
+                                           lengths=batch.get("lengths"))
 
         def prefill(p, batch):
             logits, cache = rwkv_model.rwkv_forward(
-                p, cfg, batch["tokens"], collect_cache=True, last_only=True)
+                p, cfg, batch["tokens"], collect_cache=True, last_only=True,
+                lengths=batch.get("lengths"))
             return logits[:, -1], cache
 
         def decode(p, cache, tokens):
@@ -154,15 +167,15 @@ def cache_specs(cfg: ModelConfig):
         if cfg.kv_quant == "int8":
             sc = ("layers", "act_batch", "act_kv_seq", "act_kv_heads")
             return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc,
-                    "idx": ()}
-        return {"k": kv, "v": kv, "idx": ()}
+                    "idx": (), "start": ("act_batch",)}
+        return {"k": kv, "v": kv, "idx": (), "start": ("act_batch",)}
     if cfg.family == "hybrid":
         gkv = ("group", "act_batch", "act_kv_seq", "act_kv_heads", None)
         return {"conv_x": ("layers", "act_batch", None, "act_inner"),
                 "conv_B": ("layers", "act_batch", None, None),
                 "conv_C": ("layers", "act_batch", None, None),
                 "ssd": ("layers", "act_batch", "act_inner", None, None),
-                "k": gkv, "v": gkv, "idx": ()}
+                "k": gkv, "v": gkv, "idx": (), "start": ("act_batch",)}
     if cfg.family == "ssm":
         return {"wkv": ("layers", "act_batch", "act_inner", None, None),
                 "shift_att": ("layers", "act_batch", "act_embed"),

@@ -66,8 +66,9 @@ def _project(p, x, positions, *, rope_theta, mrope_sections, pos3d):
 
 def attn_full(p, x, positions, *, causal=True, window=0, rope_theta=0.0,
               mrope_sections=(), pos3d=None, impl="ref", kv_x=None,
-              return_kv=False) -> Any:
-    """Training / prefill attention.  kv_x: cross-attention source."""
+              kv_start=None, return_kv=False) -> Any:
+    """Training / prefill attention.  kv_x: cross-attention source.
+    kv_start (B,): per-row left-pad count — pad keys are masked out."""
     if kv_x is None:
         q, k, v = _project(p, x, positions, rope_theta=rope_theta,
                            mrope_sections=mrope_sections, pos3d=pos3d)
@@ -78,7 +79,8 @@ def attn_full(p, x, positions, *, causal=True, window=0, rope_theta=0.0,
         if "bq" in p:
             q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
         causal = False
-    o = attention(q, k, v, causal=causal, window=window, impl=impl)
+    o = attention(q, k, v, causal=causal, window=window, impl=impl,
+                  kv_start=kv_start)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     out = shard(out, "act_batch", "act_seq", "act_embed")
     if return_kv:
@@ -100,14 +102,20 @@ def dequantize_kv(q, scale, dtype):
 
 def attn_decode(p, x, cache_k, cache_v, idx, *, window=0, rope_theta=0.0,
                 mrope_sections=(), pos3d=None, impl="ref",
-                update_cache=True, cache_ks=None, cache_vs=None):
+                update_cache=True, cache_ks=None, cache_vs=None,
+                kv_start=None):
     """One-token attention.  x (B,1,d); cache_k/v (B,Smax,Hkv,D); idx scalar
     position of the new token.  With int8-quantized caches, cache_ks/vs are
     the (B,Smax,Hkv) scale planes (updated and returned alongside).
+    kv_start (B,): per-row first valid cache slot — positions below it are
+    left-pad junk from a ragged prefill; it also offsets RoPE so the new
+    token's rotary position counts real tokens, not buffer slots.
     Returns (out, cache_k, cache_v[, cache_ks, cache_vs])."""
     b = x.shape[0]
     quant = cache_ks is not None
     positions = jnp.full((b, 1), idx, jnp.int32)
+    if kv_start is not None:
+        positions = positions - kv_start[:, None].astype(jnp.int32)
     q, k, v = _project(p, x, positions, rope_theta=rope_theta,
                        mrope_sections=mrope_sections, pos3d=pos3d)
     if update_cache:
@@ -133,7 +141,8 @@ def attn_decode(p, x, cache_k, cache_v, idx, *, window=0, rope_theta=0.0,
         vd = dequantize_kv(cache_v, cache_vs, q.dtype)
     else:
         kd, vd = cache_k, cache_v
-    o = decode_attention(q[:, 0], kd, vd, kv_len, window=window, impl=impl)
+    o = decode_attention(q[:, 0], kd, vd, kv_len, window=window, impl=impl,
+                         kv_start=kv_start)
     out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
     if quant:
         return out, cache_k, cache_v, cache_ks, cache_vs

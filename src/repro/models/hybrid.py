@@ -16,7 +16,7 @@ from ..kernels.decode_attention import decode_attention
 from ..kernels.flash_attention import attention
 from ..sharding import shard
 from .layers import apply_rope, dense_init, embed_apply, embed_init, \
-    mlp_apply, mlp_init, rms_norm
+    mlp_apply, mlp_init, pad_mask, ragged_positions, rms_norm
 from .mamba2 import mamba2_apply, mamba2_decode, mamba2_init
 from .stacking import scan_layers
 
@@ -109,11 +109,12 @@ def _shared_out(ap, lora, o):
 
 
 def _shared_block(ap, lora, x, x0, positions, cfg, attn_impl,
-                  return_kv=False):
+                  return_kv=False, kv_start=None):
     u = jnp.concatenate([x, x0], axis=-1)
     h = rms_norm(u, ap["ln"], cfg.rms_eps)
     q, k, v = _shared_qkv(ap, lora, h, positions, cfg)
-    o = attention(q, k, v, causal=True, window=cfg.window, impl=attn_impl)
+    o = attention(q, k, v, causal=True, window=cfg.window, impl=attn_impl,
+                  kv_start=kv_start)
     x = x + _shared_out(ap, lora, o)
     h = rms_norm(jnp.concatenate([x, x0], axis=-1), ap["ln2"], cfg.rms_eps)
     x = x + mlp_apply(ap["mlp"], h, cfg.act)
@@ -125,14 +126,18 @@ def _shared_block(ap, lora, x, x0, positions, cfg, attn_impl,
 
 def hybrid_forward(p, cfg: ModelConfig, tokens, attn_impl: str = "ref",
                    ssm_impl: str = "chunked", collect_cache: bool = False,
-                   last_only: bool = False):
+                   last_only: bool = False, lengths=None):
+    """``lengths`` (B,) int32: real-token count per left-padded row.  Pad
+    slots are identity transitions for the mamba conv/SSD state and masked
+    keys for the shared attention, so outputs at real positions (and the
+    collected caches) are batch-composition-invariant."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_apply(p["embed"], tokens).astype(dt)
     x = shard(x, "act_batch", "act_seq", "act_embed")
     x0 = x
     b, s_len = x.shape[:2]
-    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
-                                 (b, s_len))
+    positions, kv_start = ragged_positions(lengths, b, s_len)
+    mask = None if lengths is None else pad_mask(lengths, s_len)
     G, k_every = _n_groups(cfg), cfg.shared_attn_every
     grouped = jax.tree.map(
         lambda a: a.reshape(G, k_every, *a.shape[1:]), p["mamba"])
@@ -145,18 +150,19 @@ def hybrid_forward(p, cfg: ModelConfig, tokens, attn_impl: str = "ref",
             h, st = mamba2_apply(
                 {k: v for k, v in lp.items() if k != "ln"}, h,
                 head_dim=cfg.ssm.head_dim, chunk=cfg.ssm.chunk,
-                impl=ssm_impl, rms_eps=cfg.rms_eps)
+                impl=ssm_impl, rms_eps=cfg.rms_eps, mask=mask)
             return x + h, (st if collect_cache else 0)
 
         x, msts = scan_layers(mamba_body, x, mparams,
                               use_scan=cfg.scan_layers)
         if collect_cache:
             x, (ck, cv) = _shared_block(p["shared"], lora, x, x0, positions,
-                                        cfg, attn_impl, return_kv=True)
+                                        cfg, attn_impl, return_kv=True,
+                                        kv_start=kv_start)
             cdt = jnp.dtype(cfg.param_dtype)
             return x, (msts, (ck.astype(cdt), cv.astype(cdt)))
         x = _shared_block(p["shared"], lora, x, x0, positions, cfg,
-                          attn_impl)
+                          attn_impl, kv_start=kv_start)
         return x, 0
 
     body = group_body
@@ -178,7 +184,7 @@ def hybrid_forward(p, cfg: ModelConfig, tokens, attn_impl: str = "ref",
 
 
 def hybrid_init_cache(cfg: ModelConfig, batch: int, cap: int,
-                      filled: int | None = None):
+                      filled: int | None = None, start=None):
     cdt = jnp.dtype(cfg.param_dtype)
     L, G = cfg.n_layers, _n_groups(cfg)
     d_in = cfg.ssm.expand * cfg.d_model
@@ -186,6 +192,8 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, cap: int,
     w1 = cfg.ssm.conv_width - 1
     gn = cfg.ssm.state_dim
     idx = cap - 1 if filled is None else filled
+    if start is None:
+        start = jnp.zeros((batch,), jnp.int32)
     return {
         "conv_x": jnp.zeros((L, batch, w1, d_in), cdt),
         "conv_B": jnp.zeros((L, batch, w1, gn), cdt),
@@ -195,6 +203,7 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, cap: int,
         "k": jnp.zeros((G, batch, cap, cfg.n_kv_heads, cfg.head_dim), cdt),
         "v": jnp.zeros((G, batch, cap, cfg.n_kv_heads, cfg.head_dim), cdt),
         "idx": jnp.int32(idx),
+        "start": start,
     }
 
 
@@ -205,12 +214,15 @@ def hybrid_decode(p, cfg: ModelConfig, cache, tokens,
     x0 = x
     b = x.shape[0]
     idx = cache["idx"]
+    start = cache.get("start")               # (B,) left-pad counts, or None
+    positions = jnp.full((b, 1), idx, jnp.int32)
+    if start is not None:
+        positions = positions - start[:, None].astype(jnp.int32)
     G, k_every = _n_groups(cfg), cfg.shared_attn_every
     grouped = jax.tree.map(
         lambda a: a.reshape(G, k_every, *a.shape[1:]), p["mamba"])
     gcache = {k: cache[k].reshape(G, k_every, *cache[k].shape[1:])
               for k in ("conv_x", "conv_B", "conv_C", "ssd")}
-    positions = jnp.full((b, 1), idx, jnp.int32)
 
     def group_body(x, xs):
         mparams, lora, mc, ck, cv = xs
@@ -238,7 +250,7 @@ def hybrid_decode(p, cfg: ModelConfig, cache, tokens,
                                           (0, idx, 0, 0))
         kv_len = jnp.full((b,), idx + 1, jnp.int32)
         o = decode_attention(q[:, 0], ck, cv, kv_len, window=cfg.window,
-                             impl=attn_impl)[:, None]
+                             impl=attn_impl, kv_start=start)[:, None]
         x = x + _shared_out(p["shared"], lora, o)
         h2 = rms_norm(jnp.concatenate([x, x0], axis=-1),
                       p["shared"]["ln2"], cfg.rms_eps)
@@ -259,4 +271,6 @@ def hybrid_decode(p, cfg: ModelConfig, cache, tokens,
         "ssd": mnew[3].reshape(cache["ssd"].shape),
         "k": ck, "v": cv, "idx": idx + 1,
     }
+    if start is not None:
+        newc["start"] = start
     return logits, newc

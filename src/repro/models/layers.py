@@ -56,6 +56,38 @@ def layer_norm(x, weight, bias, eps: float):
             + bias.astype(jnp.float32)).astype(dt)
 
 
+# ---------------------------------------------------------- ragged batch ----
+# Prompts are LEFT-padded into shape-bucketed batches (runtime/server
+# pack_prompts): row i holds `lengths[i]` real tokens in its last slots.
+# These two helpers are the single source of truth for what that layout
+# means — every family derives its positions and masks from them, so a
+# request's logits cannot depend on which batch it was packed into.
+
+def pad_mask(lengths, s_len: int):
+    """(B,) real-token counts -> (B, S) bool, True at real-token slots of a
+    left-padded batch.  A zero length (filler row) is all-False."""
+    cols = jnp.arange(s_len, dtype=jnp.int32)[None, :]
+    return cols >= (s_len - lengths.astype(jnp.int32))[:, None]
+
+
+def ragged_positions(lengths, batch: int, s_len: int):
+    """Per-row token positions + left-pad counts for a left-padded batch.
+
+    Returns ``(positions (B, S) int32, kv_start (B,) int32 | None)``:
+    positions count from 0 at each row's first REAL token (pad slots clamp
+    to 0 — they are masked out of attention anyway), so rotary phases are
+    identical however much padding the batch added.  ``lengths=None`` means
+    a dense batch: absolute positions, no mask.
+    """
+    if lengths is None:
+        pos = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
+                               (batch, s_len))
+        return pos, None
+    kv_start = (s_len - lengths.astype(jnp.int32)).astype(jnp.int32)
+    pos = jnp.arange(s_len, dtype=jnp.int32)[None, :] - kv_start[:, None]
+    return jnp.maximum(pos, 0), kv_start
+
+
 # ------------------------------------------------------------------ RoPE ----
 
 def rope_freqs(head_dim: int, theta: float) -> np.ndarray:

@@ -82,11 +82,24 @@ def _inner(p, x, *, head_dim):
 
 
 def mamba2_apply(p, x, *, head_dim: int, chunk: int = 64, impl: str = "chunked",
-                 rms_eps: float = 1e-6):
-    """Train/prefill path.  x (B,S,d) -> (y, final_state (conv+ssd))."""
+                 rms_eps: float = 1e-6, mask=None):
+    """Train/prefill path.  x (B,S,d) -> (y, final_state (conv+ssd)).
+
+    ``mask`` (B,S) bool: True at real-token slots of a left-padded batch.
+    Pad steps become identity transitions — their conv-tap inputs are
+    zeroed (a real token near the boundary convolves over zeros, exactly
+    the decode path's fresh conv state) and dt is gated to 0 so the SSD
+    recurrence neither decays nor absorbs anything on a pad step.  The
+    returned conv/ssd states are therefore batch-composition-invariant.
+    """
     b, s_len, d = x.shape
     z, xc, Bc, Cc, dt = _inner(p, x, head_dim=head_dim)
     g, n = Bc.shape[-2:]
+    if mask is not None:
+        m = mask[..., None].astype(xc.dtype)
+        xc = xc * m
+        Bc = Bc * m[..., None]
+        Cc = Cc * m[..., None]
 
     conv_in = (xc, Bc.reshape(b, s_len, g * n), Cc.reshape(b, s_len, g * n))
     xc = jax.nn.silu(_conv_shift(p["conv_x"], conv_in[0]))
@@ -99,6 +112,10 @@ def mamba2_apply(p, x, *, head_dim: int, chunk: int = 64, impl: str = "chunked",
     xh = xc.reshape(b, s_len, h, head_dim)
     xh = shard(xh, "act_batch", "act_seq", "act_inner", None)
     dt = jax.nn.softplus(dt + p["dt_bias"])
+    if mask is not None:
+        # dt=0 on pad steps => decay exp(dt*A)=1 and input contribution 0:
+        # the SSD state passes through pad slots unchanged
+        dt = dt * mask[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
 
     y, ssd_state = ssd(xh, dt, A, Bc, Cc, chunk=chunk, impl=impl)

@@ -109,7 +109,12 @@ def _moe_local_ep(p, x, *, n_experts, top_k, capacity_factor, act,
     aux = e * jnp.sum(density * density_prob)
     zloss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
 
-    cap = int(max(top_k, round(t * top_k / e * capacity_factor)))
+    # capacity_factor <= 0 => dropless: capacity covers the worst case
+    # (every token lists this expert in its top-k), so routing of one
+    # token can never evict another's — the serving path uses this to keep
+    # logits batch-composition-invariant (training keeps finite capacity).
+    cap = (int(t) if capacity_factor <= 0
+           else int(max(top_k, round(t * top_k / e * capacity_factor))))
     ids_flat = ids.reshape(-1)
     order = jnp.argsort(ids_flat)
     sorted_eid = ids_flat[order]
@@ -165,7 +170,12 @@ def _moe_local(p, x, *, n_experts, top_k, capacity_factor, act,
     zloss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
 
     # ---- pack: sort (token, k) slots by expert id
-    cap = int(max(top_k, round(t * top_k / e * capacity_factor)))
+    # capacity_factor <= 0 => dropless: capacity covers the worst case
+    # (every token lists this expert in its top-k), so routing of one
+    # token can never evict another's — the serving path uses this to keep
+    # logits batch-composition-invariant (training keeps finite capacity).
+    cap = (int(t) if capacity_factor <= 0
+           else int(max(top_k, round(t * top_k / e * capacity_factor))))
     ids_flat = ids.reshape(-1)                                   # (T*k,)
     order = jnp.argsort(ids_flat)
     sorted_eid = ids_flat[order]

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..sharding import shard
-from .layers import embed_apply, embed_init, layer_norm, rms_norm
+from .layers import embed_apply, embed_init, layer_norm, pad_mask, rms_norm
 from .rwkv6 import (rwkv6_channel_mix, rwkv6_init, rwkv6_time_mix,
                     rwkv6_time_mix_decode)
 from .stacking import scan_layers
@@ -46,19 +46,31 @@ def _split(lp):
 
 
 def rwkv_forward(p, cfg: ModelConfig, tokens, ssm_impl: str = "chunked",
-                 collect_cache: bool = False, last_only: bool = False):
+                 collect_cache: bool = False, last_only: bool = False,
+                 lengths=None):
+    """``lengths`` (B,) int32: real-token count per left-padded row.  The
+    per-layer mix inputs are zeroed on pad slots, so a pad step contributes
+    nothing to the WKV state or the token-shift stream — the first real
+    token sees exactly the zero shift/state a fresh decode would (pad steps
+    are identity transitions), whatever the batch's padded length."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = embed_apply(p["embed"], tokens).astype(dt)
     x = shard(x, "act_batch", "act_seq", "act_embed")
+    mask = (None if lengths is None
+            else pad_mask(lengths, tokens.shape[1])[..., None])
 
     def body(x, lp):
         tm, cm = _split(lp)
         h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        if mask is not None:
+            h = h * mask.astype(h.dtype)
         h, s_last, tshift = rwkv6_time_mix(
             tm, h, n_heads=cfg.ssm.n_heads, head_dim=cfg.ssm.head_dim,
             chunk=cfg.ssm.chunk, impl=ssm_impl)
         x = x + h
         h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        if mask is not None:
+            h = h * mask.astype(h.dtype)
         h, cshift = rwkv6_channel_mix(cm, h)
         x = x + h
         ys = (s_last, tshift, cshift) if collect_cache else 0

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..sharding import shard
 from .attention import attn_decode, attn_full, attn_init
-from .layers import embed_apply, embed_init, mlp_apply, mlp_init, rms_norm
+from .layers import (embed_apply, embed_init, mlp_apply, mlp_init,
+                     ragged_positions, rms_norm)
 from .moe import moe_apply, moe_init
 from .stacking import scan_layers
 
@@ -79,12 +80,19 @@ def _logits(p, cfg, x):
     return out.astype(jnp.float32) if cfg.logits_fp32 else out
 
 
-def _ffn(lp, cfg: ModelConfig, h):
-    """Dense MLP or MoE; returns (y, (aux, zloss, drop))."""
+def _ffn(lp, cfg: ModelConfig, h, dropless: bool = False):
+    """Dense MLP or MoE; returns (y, (aux, zloss, drop)).
+
+    ``dropless`` (the prefill/decode entry points): expert capacity covers
+    the worst case, so a token's routing never depends on what else is in
+    the batch — capacity dropping is a training-throughput trade, and it
+    would make serving batch-composition-DEPENDENT.
+    """
     if cfg.moe.n_experts:
         y, m = moe_apply(
             lp["moe"], h, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
-            capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
+            capacity_factor=(0.0 if dropless else cfg.moe.capacity_factor),
+            act=cfg.act,
             impl=("ep_a2a" if cfg.moe.impl == "ep" else "replicated"))
         return y, (m["moe_aux"], m["moe_zloss"], m["moe_drop"])
     y = mlp_apply(lp["mlp"], h, cfg.act)
@@ -101,12 +109,11 @@ def _remat(cfg: ModelConfig, fn):
 
 
 def lm_forward(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
-               attn_impl: str = "ref"):
+               attn_impl: str = "ref", lengths=None):
     """Training forward: full logits (B, S, V) + moe metrics."""
     x = _embed_in(p, cfg, tokens, embeds)
     b, s_len = x.shape[:2]
-    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
-                                 (b, s_len))
+    positions, kv_start = ragged_positions(lengths, b, s_len)
 
     def body(carry, lp):
         x, aux = carry
@@ -114,7 +121,7 @@ def lm_forward(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
         h = attn_full(lp["attn"], h, positions, causal=True,
                       window=cfg.window, rope_theta=cfg.rope_theta,
                       mrope_sections=cfg.mrope_sections, pos3d=pos3d,
-                      impl=attn_impl)
+                      impl=attn_impl, kv_start=kv_start)
         x = x + h
         h = rms_norm(x, lp["ln2"], cfg.rms_eps)
         h, m = _ffn(lp, cfg, h)
@@ -131,12 +138,18 @@ def lm_forward(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
 
 
 def lm_prefill(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
-               attn_impl: str = "ref"):
-    """Prefill: last-token logits + populated KV cache."""
+               attn_impl: str = "ref", lengths=None):
+    """Prefill: last-token logits + populated KV cache.
+
+    ``lengths`` (B,) int32: real-token count per left-padded row.  Pad keys
+    are masked out of every attention layer and RoPE positions count real
+    tokens, so a prompt's logits (and its cache suffix) are identical
+    whatever ragged company it was packed with.  The cache records each
+    row's first valid slot under ``"start"`` for the decode path.
+    """
     x = _embed_in(p, cfg, tokens, embeds)
     b, s_len = x.shape[:2]
-    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32),
-                                 (b, s_len))
+    positions, kv_start = ragged_positions(lengths, b, s_len)
     cdt = jnp.dtype(cfg.param_dtype)
 
     def body(x, lp):
@@ -144,10 +157,11 @@ def lm_prefill(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
         h, (k, v) = attn_full(lp["attn"], h, positions, causal=True,
                               window=cfg.window, rope_theta=cfg.rope_theta,
                               mrope_sections=cfg.mrope_sections, pos3d=pos3d,
-                              impl=attn_impl, return_kv=True)
+                              impl=attn_impl, kv_start=kv_start,
+                              return_kv=True)
         x = x + h
         h = rms_norm(x, lp["ln2"], cfg.rms_eps)
-        h, _ = _ffn(lp, cfg, h)
+        h, _ = _ffn(lp, cfg, h, dropless=True)
         if cfg.kv_quant == "int8":
             from .attention import quantize_kv
             kq, ks = quantize_kv(k)
@@ -157,30 +171,35 @@ def lm_prefill(p, cfg: ModelConfig, tokens=None, embeds=None, pos3d=None,
 
     x, caches = scan_layers(body, x, p["layers"], use_scan=cfg.scan_layers)
     logits = _logits(p, cfg, x[:, -1])
+    start = (jnp.zeros((b,), jnp.int32) if kv_start is None else kv_start)
     if cfg.kv_quant == "int8":
         ck, cv, cks, cvs = caches
         cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
-                 "idx": jnp.int32(s_len)}
+                 "idx": jnp.int32(s_len), "start": start}
     else:
         ck, cv = caches
-        cache = {"k": ck, "v": cv, "idx": jnp.int32(s_len)}
+        cache = {"k": ck, "v": cv, "idx": jnp.int32(s_len), "start": start}
     return logits, cache
 
 
 def lm_init_cache(cfg: ModelConfig, batch: int, cap: int,
-                  filled: int | None = None):
+                  filled: int | None = None, start=None):
     """Abstract/zero cache of capacity ``cap``; idx = filled (default cap-1,
-    i.e. the decode_32k cell: a full cache, new token in the last slot)."""
+    i.e. the decode_32k cell: a full cache, new token in the last slot).
+    ``start`` (B,) int32: per-row first valid slot (left-pad count from a
+    ragged prefill); default 0 = fully dense rows."""
     cdt = jnp.dtype(cfg.param_dtype)
     shp = (cfg.n_layers, batch, cap, cfg.n_kv_heads, cfg.head_dim)
     idx = cap - 1 if filled is None else filled
+    if start is None:
+        start = jnp.zeros((batch,), jnp.int32)
     if cfg.kv_quant == "int8":
         return {"k": jnp.zeros(shp, jnp.int8), "v": jnp.zeros(shp, jnp.int8),
                 "k_scale": jnp.zeros(shp[:-1], jnp.float32),
                 "v_scale": jnp.zeros(shp[:-1], jnp.float32),
-                "idx": jnp.int32(idx)}
+                "idx": jnp.int32(idx), "start": start}
     return {"k": jnp.zeros(shp, cdt), "v": jnp.zeros(shp, cdt),
-            "idx": jnp.int32(idx)}
+            "idx": jnp.int32(idx), "start": start}
 
 
 def lm_decode(p, cfg: ModelConfig, cache, tokens, pos3d=None,
@@ -188,9 +207,12 @@ def lm_decode(p, cfg: ModelConfig, cache, tokens, pos3d=None,
     """One decode step.  tokens (B, 1) -> logits (B, V), updated cache."""
     x = _embed_in(p, cfg, tokens, None)
     idx = cache["idx"]
+    start = cache.get("start")               # (B,) left-pad counts, or None
     if cfg.mrope_sections and pos3d is None:
         b = tokens.shape[0]
-        pos3d = jnp.broadcast_to(idx.astype(jnp.int32), (3, b, 1))
+        rel = (jnp.full((b,), idx, jnp.int32) if start is None
+               else idx - start.astype(jnp.int32))
+        pos3d = jnp.broadcast_to(rel[None, :, None], (3, b, 1))
 
     quant = cfg.kv_quant == "int8"
 
@@ -205,15 +227,16 @@ def lm_decode(p, cfg: ModelConfig, cache, tokens, pos3d=None,
                           window=cfg.window, rope_theta=cfg.rope_theta,
                           mrope_sections=cfg.mrope_sections,
                           pos3d=pos3d, impl=attn_impl,
-                          cache_ks=cks, cache_vs=cvs)
+                          cache_ks=cks, cache_vs=cvs, kv_start=start)
         h, ck, cv = out[:3]
         x = x + h
         h = rms_norm(x, lp["ln2"], cfg.rms_eps)
-        h, _ = _ffn(lp, cfg, h)
+        h, _ = _ffn(lp, cfg, h, dropless=True)
         if quant:
             return x + h, (ck, cv, out[3], out[4])
         return x + h, (ck, cv)
 
+    carry = {} if start is None else {"start": start}
     if quant:
         xs = (p["layers"], cache["k"], cache["v"], cache["k_scale"],
               cache["v_scale"])
@@ -221,9 +244,9 @@ def lm_decode(p, cfg: ModelConfig, cache, tokens, pos3d=None,
                                             use_scan=cfg.scan_layers)
         logits = _logits(p, cfg, x[:, -1])
         return logits, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
-                        "idx": idx + 1}
+                        "idx": idx + 1, **carry}
     x, (ck, cv) = scan_layers(body, x,
                               (p["layers"], cache["k"], cache["v"]),
                               use_scan=cfg.scan_layers)
     logits = _logits(p, cfg, x[:, -1])
-    return logits, {"k": ck, "v": cv, "idx": idx + 1}
+    return logits, {"k": ck, "v": cv, "idx": idx + 1, **carry}

@@ -35,7 +35,7 @@ from ..cloud import Session, gather, session_for
 from ..dispatch import Dispatcher
 from ..models import build_model
 from ..models.api import grow_cache
-from ..serialization import put_artifact
+from ..serialization import prune_artifacts, put_artifact, release_artifact
 from ..configs.base import ModelConfig
 
 
@@ -70,7 +70,8 @@ def decode_bucket(max_new: int) -> int:
 
 def pack_prompts(prompts: Sequence[Sequence[int]], pad: int = 0,
                  min_rows: int = 1):
-    """Pack prompts into a shape-*bucketed* token batch.
+    """Pack prompts into a shape-*bucketed* token batch; returns
+    ``(tokens (B, S) int32, lengths (B,) int32)``.
 
     Entry-point identity is shape-dependent (the AOT stable name
     fingerprints abstract payloads), so a serving scheduler that emitted
@@ -80,32 +81,44 @@ def pack_prompts(prompts: Sequence[Sequence[int]], pad: int = 0,
     ever compile, at worst 2× padding compute — the standard
     shape-bucketing trade every XLA serving system makes.
 
-    Rows are left-padded (last real token aligned); filler rows replicate
-    row 0 and are sliced off at unpack.  ``min_rows`` pins the row bucket
-    from below: a scheduler that always passes its full batch size gets
-    exactly ONE compiled shape per decode bucket — partial tail batches
-    pad instead of compiling a fresh entry point mid-serve.
-
-    Caveat (pre-existing model behavior, not introduced by bucketing): the
-    model families have no prefill attention mask, so left-pad tokens are
-    *attended* — a request's logits can shift with the batch's padded
-    length.  Results are exactly reproducible for like-length prompts
-    (every test/bench workload here); ragged prompt sets get
-    batch-composition-dependent perturbations under ANY batched packing,
-    wave or continuous.  The real fix is a prefill mask (ROADMAP).
+    Rows are left-padded (last real token aligned) with ``pad`` (the
+    model's ``cfg.pad_id`` — NOT a sentinel: ``lengths`` is the source of
+    truth for what is padding, and the model families mask pad slots out
+    of attention and recurrent state, so packing is batch-composition-
+    invariant for ragged prompt sets).  Filler rows below the row bucket
+    are all-pad with length 0 — fully masked, sliced off at unpack.
+    ``min_rows`` pins the row bucket from below: a scheduler that always
+    passes its full batch size gets exactly ONE compiled shape per decode
+    bucket — partial tail batches pad instead of compiling a fresh entry
+    point mid-serve.
     """
+    if not prompts:
+        raise ValueError("pack_prompts: empty prompt list — nothing to "
+                         "pack into a batch")
+    for i, p in enumerate(prompts):
+        if len(p) == 0:
+            raise ValueError(
+                f"pack_prompts: prompt {i} is empty — a zero-length prompt "
+                "has no last token to decode from (it would silently become "
+                "an all-pad row)")
     b = shape_bucket(max(len(prompts), min_rows))
     s = shape_bucket(max(len(p) for p in prompts))
     out = np.full((b, s), pad, np.int32)
+    lengths = np.zeros((b,), np.int32)   # filler rows: length 0, fully masked
     for i, p in enumerate(prompts):
         out[i, s - len(p):] = p          # left-pad so last token aligns
-    for i in range(len(prompts), b):
-        out[i] = out[0]                  # filler rides along, never unpacked
-    return out
+        lengths[i] = len(p)
+    return out, lengths
 
 
 def make_generate_fn(cfg: ModelConfig, max_new: int):
-    """Build the stateless serve task: (params, tokens) -> generated ids.
+    """Build the stateless serve task:
+    (params, tokens, lengths) -> generated ids.
+
+    ``lengths`` (B,) int32 rides with every batch: prefill masks each row's
+    left pad out of attention/recurrent state, and the cache's ``start``
+    plane keeps masking it through decode — so the generated tokens for a
+    prompt do not depend on what it was packed with.
 
     Capture discipline (the Cppless contract): the closure captures only
     *data* (``cfg``, ``max_new``) — both ship in the payload (``ModelConfig``
@@ -117,10 +130,11 @@ def make_generate_fn(cfg: ModelConfig, max_new: int):
     defines functions; the real cost is the AOT compile the worker pays
     once per cold start anyway).
     """
-    def generate(params, tokens):
+    def generate(params, tokens, lengths):
         model = build_model(cfg)
         b, s = tokens.shape
-        logits, cache = model.prefill(params, {"tokens": tokens})
+        logits, cache = model.prefill(params, {"tokens": tokens,
+                                               "lengths": lengths})
         cache = grow_cache(cfg, cache, s + max_new)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
 
@@ -165,6 +179,27 @@ class LMServer:
         # the default-bucket handle, kept under the historical name
         self.generate = self._generate_for(max_new)
 
+    # ------------------------------------------------------------ teardown
+    def close(self, *, prune: bool = True) -> None:
+        """Release this server's params artifact and (by default) prune the
+        content-addressed store: blobs still referenced by other live
+        servers in this process — or passed to ``prune_artifacts(keep=…)``
+        by the caller — survive; everything unreferenced is unlinked, so
+        long-running serve hosts don't accumulate every params tree they
+        ever deployed.  Idempotent."""
+        ref, self._params_ref = self._params_ref, None
+        if ref is None:
+            return
+        release_artifact(ref)
+        if prune:
+            prune_artifacts()
+
+    def __enter__(self) -> "LMServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def _generate_for(self, max_new: int):
         """The bound generate function for ``max_new``'s decode bucket
         (deployed on first use, cached after)."""
@@ -185,10 +220,15 @@ class LMServer:
         future.  Schedulers pass their nominal batch size as ``min_rows``
         so tail batches pad to the warmed shape instead of compiling a
         fresh one."""
-        tokens = pack_prompts([r.prompt for r in requests],
-                              min_rows=min_rows)
+        if self._params_ref is None:
+            raise RuntimeError("LMServer is closed (params artifact "
+                               "released)")
+        tokens, lengths = pack_prompts([r.prompt for r in requests],
+                                       pad=self.cfg.pad_id,
+                                       min_rows=min_rows)
         gen = self._generate_for(max(r.max_new for r in requests))
-        return gen.submit(self._params_ref, jnp.asarray(tokens))
+        return gen.submit(self._params_ref, jnp.asarray(tokens),
+                          jnp.asarray(lengths))
 
     def unpack_wave(self, requests: Sequence[Request], fut) -> list[Completion]:
         """Join one dispatched batch: per-request token trim + pro-rata

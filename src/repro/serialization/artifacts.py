@@ -46,6 +46,14 @@ class ArtifactRef:
 
 _CACHE: dict[str, Any] = {}
 _CACHE_LOCK = threading.Lock()
+# refs produced by THIS process that are still live (put minus release),
+# counted per sha: content-addressing means two producers of identical
+# params share one blob, and pruning must outlive the first one to close
+_LIVE: dict[str, int] = {}
+# every sha this process ever put: the default GC sweep only reaps its own
+# garbage, so concurrent serve processes sharing the store directory can't
+# delete each other's live params out from under a cold worker
+_PRODUCED: set[str] = set()
 
 
 def default_artifact_dir() -> str:
@@ -72,7 +80,66 @@ def put_artifact(value: Any, directory: str | None = None) -> ArtifactRef:
         # the producer keeps the live value: local backends resolve with
         # zero IO and zero extra copies
         _CACHE.setdefault(sha, value)
+        _LIVE[sha] = _LIVE.get(sha, 0) + 1
+        _PRODUCED.add(sha)
     return ArtifactRef(path=path, sha=sha)
+
+
+def release_artifact(ref: ArtifactRef) -> None:
+    """Drop one live claim on ``ref`` (the producer is done with it).  The
+    blob itself is only removed by :func:`prune_artifacts`; releasing just
+    makes it eligible.  Also evicts the process cache entry once the last
+    claim drops, so a served model's params don't outlive their server."""
+    with _CACHE_LOCK:
+        n = _LIVE.get(ref.sha, 0) - 1
+        if n > 0:
+            _LIVE[ref.sha] = n
+        else:
+            _LIVE.pop(ref.sha, None)
+            _CACHE.pop(ref.sha, None)
+
+
+def prune_artifacts(keep: Any = (), directory: str | None = None,
+                    all_blobs: bool = False) -> list[str]:
+    """Garbage-collect the store: unlink blobs not named by ``keep`` and
+    not live in this process (``put_artifact`` without a matching
+    :func:`release_artifact`).  Returns the removed paths.
+
+    The content-addressed store grows without bound otherwise — every
+    distinct params tree ever served leaves a blob behind.  Callers pass
+    the refs they still need (``keep=[ref, ...]``); :meth:`LMServer.close`
+    does this on teardown.  By default only blobs THIS process produced
+    are candidates, so concurrent serve processes sharing the store
+    directory never reap each other's live params; ``all_blobs=True``
+    sweeps everything in the directory (use it from a coordinating client
+    to clear garbage left by dead processes).
+    """
+    keep_shas = {r.sha for r in keep}
+    d = directory or default_artifact_dir()
+    removed: list[str] = []
+    if not os.path.isdir(d):
+        return removed
+    for name in os.listdir(d):
+        if not name.endswith(".bin"):
+            continue
+        sha = name[:-len(".bin")]
+        if sha in keep_shas:
+            continue
+        path = os.path.join(d, name)
+        with _CACHE_LOCK:
+            # liveness re-checked under the lock at unlink time: a blob
+            # put by a concurrent thread after a snapshot would otherwise
+            # be deleted while live
+            if sha in _LIVE or (not all_blobs and sha not in _PRODUCED):
+                continue
+            try:
+                os.unlink(path)
+            except OSError:
+                continue                # raced another pruner / still open
+            _CACHE.pop(sha, None)
+            _PRODUCED.discard(sha)
+        removed.append(path)
+    return removed
 
 
 def load_artifact(ref: ArtifactRef) -> Any:

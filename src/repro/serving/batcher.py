@@ -17,9 +17,10 @@ fixed partition with *slot-based admission*:
 
 Batches dispatch through the same ``submit_wave`` / ``unpack_wave`` core
 as wave mode — same wire payloads, same per-request pro-rata billing —
-so the two schedulers differ *only* in admission policy (like-length
-prompt sets decode to identical tokens either way; ragged sets inherit
-the maskless-left-pad caveat documented on ``pack_prompts``).
+so the two schedulers differ *only* in admission policy: packing is pad-
+masked end to end (``pack_prompts`` lengths → prefill/decode masks), so a
+request decodes to the same greedy tokens whichever scheduler ran it and
+whatever ragged company it was batched with.
 
 Granularity note: each batch is one stateless serverless task, so
 admission happens between batches (a request cannot join a decode loop

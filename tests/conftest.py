@@ -11,3 +11,54 @@ import pytest  # noqa: E402
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ------------------------------------------------- ragged-batch invariance --
+# Shared across test_apps_server.py (wave mode) and test_serving.py
+# (continuous mode): one tiny model per family, float32 so the greedy
+# argmax comparison proves algorithmic equality rather than bf16 luck.
+
+FAMILY_ARCHS = {
+    "dense": "smollm-360m",
+    "moe": "phi3.5-moe-42b-a6.6b",
+    "hybrid": "zamba2-2.7b",
+    "ssm": "rwkv6-1.6b",
+}
+
+
+@pytest.fixture(scope="session", params=tuple(FAMILY_ARCHS),
+                ids=tuple(FAMILY_ARCHS))
+def lm_family(request):
+    """(family, cfg, params) for one architecture family (session-cached:
+    params init + entry-point compiles are the expensive part)."""
+    import jax
+    from repro.configs import get_smoke
+    from repro.models import build_model
+
+    cfg = get_smoke(FAMILY_ARCHS[request.param]).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    return request.param, cfg, params
+
+
+def make_ragged_requests(cfg):
+    """Mixed-length prompts with mixed decode lengths — the batch shape the
+    maskless serve path used to get wrong.  One prompt deliberately
+    contains the pad id (token 0): per-row lengths, not sentinel scanning,
+    must be what separates content from padding."""
+    from repro.runtime.server import Request
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(1, cfg.vocab_size, n)) for n in (5, 3, 8, 1)]
+    prompts[1] = [cfg.pad_id, cfg.pad_id, prompts[1][-1]]
+    max_news = (4, 8, 4, 4)
+    return [Request(prompt=p, max_new=m) for p, m in zip(prompts, max_news)]
+
+
+def solo_reference(server, requests):
+    """Reference greedy tokens: every request served ALONE (batch of one)
+    through the SAME server/backend that will serve the packed batch —
+    invariance is a property of batch composition, so the solo run must
+    share the packed run's numerics (a worker subprocess may partition
+    matmuls differently from the client process, and MoE routing can flip
+    on 1-ulp router differences)."""
+    return [server.serve_wave([r])[0].tokens for r in requests]

@@ -1,15 +1,19 @@
 """Paper applications + serverless LM serving."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import make_ragged_requests
 from repro.apps import (KNOWN, compute_pi, prefixes, random_scene,
                         render_serial, render_serverless, solve_serial,
                         solve_serverless)
+from repro.cloud import Session
 from repro.configs import get_smoke
 from repro.dispatch import Dispatcher
 from repro.models import build_model
-from repro.runtime import LMServer, Request
+from repro.models.api import grow_cache
+from repro.runtime import LMServer, Request, pack_prompts
 
 
 def test_nqueens_serial_known():
@@ -51,6 +55,72 @@ def test_raytracer_tile_count_scales():
     _, i16 = render_serverless(sc, tile=16, spp=1)
     _, i8 = render_serverless(sc, tile=8, spp=1)
     assert i8.cost.invocations == 4 * i16.cost.invocations
+
+
+# ------------------------------------------------ ragged batching (pack) ---
+
+def test_pack_prompts_returns_lengths_and_all_pad_fillers():
+    tokens, lengths = pack_prompts([[5, 0, 7], [9]], pad=3, min_rows=4)
+    assert tokens.shape == (4, 4) and tokens.dtype == np.int32
+    assert list(lengths) == [3, 1, 0, 0]
+    np.testing.assert_array_equal(tokens[0], [3, 5, 0, 7])   # left-padded
+    np.testing.assert_array_equal(tokens[1], [3, 3, 3, 9])
+    assert (tokens[2:] == 3).all()       # filler rows all-pad, length 0
+
+
+def test_pack_prompts_pad_id_not_a_sentinel():
+    """A prompt may legitimately CONTAIN the pad id: lengths are the source
+    of truth, so its tokens survive packing verbatim."""
+    tokens, lengths = pack_prompts([[0, 0, 4, 0]], pad=0)
+    np.testing.assert_array_equal(tokens[0], [0, 0, 4, 0])
+    assert list(lengths) == [4]
+
+
+def test_pack_prompts_rejects_empty_inputs():
+    with pytest.raises(ValueError, match="empty prompt list"):
+        pack_prompts([])
+    with pytest.raises(ValueError, match="prompt 1 is empty"):
+        pack_prompts([[1, 2], []])
+
+
+# -------------------------------- batch-composition invariance (wave mode) --
+# The acceptance property of the pad-mask work: greedy decode of a prompt
+# is identical whether it was submitted alone or packed into a ragged
+# batch — per family, per backend, with mixed max_new (bucket trimming)
+# and a prompt that contains the pad id.
+
+@pytest.mark.parametrize("backend", ("inline", "processes"))
+def test_wave_ragged_batch_is_composition_invariant(lm_family, backend):
+    from conftest import solo_reference
+
+    _, cfg, params = lm_family
+    with Session(backend, os_threads=1) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = make_ragged_requests(cfg)
+        solo = solo_reference(server, reqs)
+        comps = server.unpack_wave(reqs, server.submit_wave(reqs))
+        assert [c.tokens for c in comps] == solo
+        server.close(prune=False)
+
+
+def test_fully_masked_filler_rows_decode_finite(lm_family):
+    """min_rows pinning adds all-pad filler rows (length 0): every row of
+    every entry point must stay finite — a fully masked softmax row must
+    not NaN-poison the batch."""
+    _, cfg, params = lm_family
+    model = build_model(cfg)
+    tokens, lengths = pack_prompts([[1, 2, 3]], pad=cfg.pad_id, min_rows=4)
+    assert list(lengths) == [3, 0, 0, 0]
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths)})
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    cache = grow_cache(cfg, cache, tokens.shape[1] + 4)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(4):
+        logits, cache = model.decode(params, cache, tok)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
 
 
 def test_lm_server_serves_and_bills():

@@ -58,6 +58,65 @@ def test_flash_attention_q_offset():
                                atol=2e-5)
 
 
+def test_flash_attention_kv_start_masks_left_pad_on_all_impls():
+    """Per-row kv_start (ragged-batch left padding): XLA and Pallas paths
+    must agree with the oracle, and an explicit slice of the unpadded
+    problem must agree with the masked padded one."""
+    b, s, hq, hkv, d = 3, 64, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    kv_start = jnp.asarray([0, 17, 40], jnp.int32)
+    ref = attention_ref(q, k, v, causal=True, kv_start=kv_start)
+    for impl, kw in (("xla", {}), ("pallas_interpret",
+                                   {"block_q": 32, "block_k": 32})):
+        out = attention(q, k, v, causal=True, kv_start=kv_start,
+                        impl=impl, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=impl)
+    # row 2: the masked suffix must equal attention over the suffix alone
+    st_ = 40
+    solo = attention_ref(q[2:, st_:], k[2:, st_:], v[2:, st_:], causal=True)
+    np.testing.assert_allclose(np.asarray(ref[2, st_:]),
+                               np.asarray(solo[0]), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_fully_masked_rows_finite():
+    """kv_start == Skv (a filler row): output must be finite on every
+    impl, never NaN from an all-masked softmax row."""
+    b, s, hq, hkv, d = 2, 32, 2, 2, 16
+    q = jnp.asarray(RNG.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    kv_start = jnp.asarray([s, 5], jnp.int32)     # row 0 fully masked
+    for impl, kw in (("ref", {}), ("xla", {}),
+                     ("pallas_interpret", {"block_q": 16, "block_k": 16})):
+        out = attention(q, k, v, causal=True, kv_start=kv_start,
+                        impl=impl, **kw)
+        assert bool(jnp.all(jnp.isfinite(out))), impl
+
+
+def test_decode_attention_kv_start_matches_unpadded():
+    """Decode over a cache with left-pad junk below kv_start must equal
+    decode over the compacted cache, ref and Pallas."""
+    b, skv, hq, hkv, d = 2, 64, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, hkv, d)), jnp.float32)
+    kv_start = jnp.asarray([0, 24], jnp.int32)
+    kv_len = jnp.asarray([50, 64], jnp.int32)
+    ref = decode_attention_ref(q, k, v, kv_len, kv_start=kv_start)
+    pal = decode_attention(q, k, v, kv_len, kv_start=kv_start,
+                           impl="pallas_interpret", block_k=128)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # row 1 vs the compacted (junk removed) cache
+    solo = decode_attention_ref(q[1:], k[1:, 24:], v[1:, 24:],
+                                jnp.asarray([40], jnp.int32))
+    np.testing.assert_allclose(np.asarray(ref[1]), np.asarray(solo[0]),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_attention_xla_chunked_matches_oracle():
     q = jnp.asarray(RNG.normal(size=(2, 100, 6, 32)), jnp.float32)
     k = jnp.asarray(RNG.normal(size=(2, 100, 3, 32)), jnp.float32)

@@ -4,6 +4,7 @@ admission gate), the thread-safe future-callback contract underneath it,
 the continuous batcher, the artifact store, and the serve bench's schema.
 """
 import asyncio
+import os
 import threading
 import time
 
@@ -217,9 +218,9 @@ def _mixed_requests(cfg, n=6, prompt_len=8):
 
 def test_continuous_batching_matches_waves(lm_setup):
     """Same pack/unpack core ⇒ identical greedy tokens, wave or continuous,
-    with mixed decode lengths (bucketing trims, never truncates).  Prompts
-    share one length so packing is batch-composition-independent — ragged
-    prompts inherit the maskless-left-pad caveat (see pack_prompts)."""
+    with mixed decode lengths (bucketing trims, never truncates).  Ragged
+    prompt sets are covered by the composition-invariance matrix below —
+    packing is pad-masked end to end."""
     from repro.runtime.server import LMServer
 
     cfg, params = lm_setup
@@ -278,7 +279,79 @@ def test_batcher_cancelled_request_is_skipped(lm_setup):
         assert stats.requests < 3            # the cancelled one never packed
 
 
+# ------------------- batch-composition invariance (continuous batching) ----
+# Wave-mode invariance lives in test_apps_server.py; this is the same
+# property under slot-based admission: whatever batches the scheduler
+# happens to seal (bucketed, topped-up, min_rows-padded with fully masked
+# filler rows), each request's greedy tokens equal its solo run.
+
+@pytest.mark.parametrize("backend", ("inline", "processes"))
+def test_continuous_ragged_batch_is_composition_invariant(lm_family,
+                                                          backend):
+    from conftest import make_ragged_requests, solo_reference
+    from repro.runtime.server import LMServer
+
+    _, cfg, params = lm_family
+    with Session(backend, os_threads=1) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = make_ragged_requests(cfg)
+        solo = solo_reference(server, reqs)
+        comps = run_continuous(server, reqs, concurrency=4, max_batch=4,
+                               slots=2, max_wait_ms=5)
+        assert [c.tokens for c in comps] == solo
+        server.close(prune=False)
+
+
 # ------------------------------------------------------- artifact store ----
+
+def test_artifact_gc_spares_live_and_kept_refs(tmp_path):
+    """prune_artifacts unlinks only blobs that are neither live in this
+    process nor explicitly kept."""
+    from repro.serialization import (load_artifact, prune_artifacts,
+                                     put_artifact, release_artifact)
+    d = str(tmp_path)
+    live = put_artifact({"a": np.arange(3)}, directory=d)
+    kept = put_artifact({"b": np.arange(4)}, directory=d)
+    dead = put_artifact({"c": np.arange(5)}, directory=d)
+    release_artifact(kept)
+    release_artifact(dead)
+    removed = prune_artifacts(keep=[kept], directory=d)
+    assert removed == [dead.path]
+    assert os.path.exists(live.path) and os.path.exists(kept.path)
+    np.testing.assert_array_equal(load_artifact(kept)["b"], np.arange(4))
+    release_artifact(live)                       # leave no live claims behind
+    assert sorted(prune_artifacts(directory=d)) == sorted(
+        [live.path, kept.path])
+
+
+def test_lmserver_close_prunes_own_params_not_anothers(lm_setup):
+    """LMServer teardown GCs the store: the closed server's params blob is
+    unlinked, a still-open server's blob survives and keeps serving."""
+    from conftest import make_ragged_requests
+    from repro.runtime.server import LMServer
+
+    cfg, _ = lm_setup
+    import jax
+    from repro.models import build_model
+    # params unique to this test: other tests hold live claims on the
+    # shared lm_setup params (same content => same blob), which close()
+    # must — and does — refuse to reap
+    params1, _ = build_model(cfg).init(jax.random.PRNGKey(2))
+    params2, _ = build_model(cfg).init(jax.random.PRNGKey(1))
+    with Session("inline") as sess:
+        s1 = LMServer(cfg, params1, session=sess, max_new=4)
+        s2 = LMServer(cfg, params2, session=sess, max_new=4)
+        p1, p2 = s1._params_ref.path, s2._params_ref.path
+        assert p1 != p2                          # distinct content, two blobs
+        s1.close()
+        assert not os.path.exists(p1)            # own blob reaped
+        assert os.path.exists(p2)                # live neighbour survives
+        reqs = make_ragged_requests(cfg)[:2]
+        assert len(s2.serve_wave(reqs)) == 2     # ...and still serves
+        with pytest.raises(RuntimeError, match="closed"):
+            s1.submit_wave(reqs)
+        s2.close(prune=False)
+
 
 def test_artifact_refs_resolve_across_processes(lm_setup):
     """Params deploy once (content-addressed); payloads carry the pointer
