@@ -1,8 +1,9 @@
-"""Serving load generator: sync-waves vs async-continuous, side by side.
+"""Serving load generator: waves vs batch-level vs iteration-level.
 
   PYTHONPATH=src python -m benchmarks.serve_bench \
       [--backend threads|processes|http|...] [--requests 48] \
-      [--concurrency 32] [--open-rate 0] [--json BENCH_serving.json]
+      [--concurrency 32] [--open-rate 0] [--prefix-shared 0.5] \
+      [--json BENCH_serving.json]
 
 Closed loop (default): ``--concurrency`` clients each keep one request
 outstanding until ``--requests`` total have completed — the paper's
@@ -10,27 +11,33 @@ fork-join client turned into sustained traffic.  Open loop
 (``--open-rate`` req/s): Poisson arrivals, latency includes queueing the
 way a real client sees it.
 
-Two schedulers over the *same* pack/dispatch/unpack core:
+Three schedulers over the *same* model entry points:
 
-* ``waves``      — ``LMServer.serve``: fixed fork-join partition into
-                   ``--wave``-sized batches, ``--slots`` in flight (the
-                   sync client: blocking threads).
-* ``continuous`` — ``repro.serving.ContinuousBatcher`` on an event loop:
-                   arriving requests admitted into decode slots as they
-                   free, bucketed by decode length.  On the ``http``
-                   backend the client side is the multiplexed
-                   ``http-aio`` asyncio client (paper-style
-                   conns × streams, no thread per request).
+* ``waves``            — ``LMServer.serve``: fixed fork-join partition
+                         into ``--wave``-sized batches.
+* ``continuous-batch`` — ``ContinuousBatcher`` pinned to the PR 4
+                         batch-level path (``iteration_level=False``):
+                         slot admission *between* batches, every batch
+                         re-runs prefill.
+* ``continuous``       — the ISSUE 5 iteration-level path where the
+                         backend supports worker-resident state: KV cache
+                         arenas live on the workers, admission every
+                         ``--quantum`` decode steps, eviction at
+                         ``max_new`` without batch-tail wait, and a
+                         worker-resident prompt-prefix cache that lets
+                         repeated prompts skip prefill entirely.
 
-Requests are *long-tail mixed* on both axes: decode lengths (~3/4 short
-at ``max_new/8``, ~1/4 long at ``--max-new``) and prompt lengths (~3/4 at
-``prompt_len/4``, ~1/4 at ``--prompt-len``) — the workload where fixed
-waves pay the long-neighbour tax and continuous batching shows up in
-throughput.  Ragged packing is exact: pad masks run prefill-to-decode, so
-the numbers are honest for mixed-length traffic.
+Requests are *long-tail mixed* on both axes (decode ~3/4 short at
+``max_new/8``; prompts ~3/4 short at ``prompt_len/4``), and
+``--prefix-shared`` replaces that fraction of prompts with one shared
+system prompt of length ``--prompt-len`` — the workload where prefix
+reuse shows up.  Reported per mode: throughput, completion-latency
+percentiles, **TTFT** percentiles (time to first token — batch-level
+schedulers have no token stream, so their TTFT *is* the completion
+latency) and **TPOT** (time per output token after the first).
 
-``--json`` writes the machine-readable ``repro.serve_bench/v1`` schema
-(see ``make_result``); CI's serving smoke step runs a tiny instance on
+``--json`` writes the machine-readable ``repro.serve_bench/v2`` schema
+(see ``make_result``); CI's serving smoke steps run tiny instances on
 every push.
 """
 from __future__ import annotations
@@ -45,29 +52,29 @@ import numpy as np
 
 # ------------------------------------------------------------- workload ----
 
-def make_requests(cfg, n: int, prompt_len: int, max_new: int, seed: int = 0):
+def make_requests(cfg, n: int, prompt_len: int, max_new: int, seed: int = 0,
+                  prefix_shared: float = 0.0):
     """Long-tail request mix on BOTH axes: ~3/4 short, ~1/4 long, for the
-    prompt length and (independently) the decode length.
-
-    The production-shaped workload: most prompts and completions are
-    short, a tail is long.  Ragged prompt lengths are honest now — packing
-    is pad-masked end to end (pack_prompts lengths → prefill/decode
-    masks), so a mixed batch returns the same tokens each request would
-    get alone.  Arrival-order waves almost always contain one long
-    request, so every member decodes the full tail; length-bucketed
-    continuous batches mostly decode short — that delta is the throughput
-    story.
-    """
+    prompt length and (independently) the decode length; ``prefix_shared``
+    of the requests instead carry one identical shared prompt (the
+    system-prompt pattern the prefix cache exists for)."""
     from repro.runtime.server import Request
     rng = np.random.default_rng(seed)
     short_new = max(1, max_new // 8)
     short_prompt = max(1, prompt_len // 4)
-    return [Request(
-        prompt=list(rng.integers(1, cfg.vocab_size,
-                                 (short_prompt if rng.random() < 0.75
-                                  else prompt_len))),
-        max_new=(short_new if rng.random() < 0.75 else max_new))
-        for _ in range(n)]
+    shared = list(rng.integers(1, cfg.vocab_size, prompt_len))
+    out = []
+    for _ in range(n):
+        if prefix_shared > 0 and rng.random() < prefix_shared:
+            prompt = list(shared)
+        else:
+            prompt = list(rng.integers(
+                1, cfg.vocab_size,
+                (short_prompt if rng.random() < 0.75 else prompt_len)))
+        out.append(Request(
+            prompt=prompt,
+            max_new=(short_new if rng.random() < 0.75 else max_new)))
+    return out
 
 
 def make_server(backend: str, arch: str, max_new: int, os_threads: int):
@@ -98,21 +105,61 @@ def warmup(server, cfg, max_new: int, prompt_len: int, batch: int) -> None:
             server.serve_wave([Request(prompt=prompt, max_new=b)] * batch)
 
 
-def percentiles(lats_ms: list[float]) -> dict:
+def warmup_iteration(server, cfg, max_new: int, prompt_len: int, wave: int,
+                     slots: int, **batcher_kwargs) -> None:
+    """Untimed pass through the iteration-level scheduler itself: pays the
+    engine entry points' jit compiles (prefill per prompt-width bucket,
+    decode per chunk-length bucket) on the same affinity-pinned workers
+    the timed run will use — the engine analogue of ``warmup``."""
+    from repro.runtime.server import Request, shape_bucket
+    from repro.serving import run_continuous
+    reqs = []
+    for plen in sorted({shape_bucket(max(1, prompt_len // 4)),
+                        shape_bucket(prompt_len)}):
+        for new in sorted({max(1, max_new // 8), max_new}):
+            reqs.extend([Request(prompt=list(range(1, plen + 1)),
+                                 max_new=new)] * wave)
+    run_continuous(server, reqs, concurrency=wave * slots, max_batch=wave,
+                   slots=slots, iteration_level=True, **batcher_kwargs)
+
+
+def percentiles(lats_ms: list[float], prefix: str = "") -> dict:
     a = np.asarray(lats_ms, dtype=np.float64)
-    return {"p50_ms": float(np.percentile(a, 50)),
-            "p95_ms": float(np.percentile(a, 95)),
-            "p99_ms": float(np.percentile(a, 99)),
-            "mean_ms": float(a.mean())}
+    return {f"{prefix}p50_ms": float(np.percentile(a, 50)),
+            f"{prefix}p95_ms": float(np.percentile(a, 95)),
+            f"{prefix}p99_ms": float(np.percentile(a, 99)),
+            f"{prefix}mean_ms": float(a.mean())}
 
 
 def summarize(lats_ms: list[float], wall_s: float, n_requests: int,
-              tokens: int) -> dict:
+              tokens: int, ttfts_ms: list[float] | None = None,
+              tpots_ms: list[float] | None = None) -> dict:
     out = {"requests": n_requests, "wall_s": round(wall_s, 3),
            "throughput_rps": round(n_requests / wall_s, 3),
            "tokens_per_s": round(tokens / wall_s, 3)}
     out.update({k: round(v, 2) for k, v in percentiles(lats_ms).items()})
+    if ttfts_ms:
+        out.update({k: round(v, 2)
+                    for k, v in percentiles(ttfts_ms, "ttft_").items()})
+    if tpots_ms:
+        out.update({k: round(v, 3)
+                    for k, v in percentiles(tpots_ms, "tpot_").items()})
     return out
+
+
+def _token_metrics(comps, lats_ms):
+    """Client-side TTFT/TPOT: completions carry ttft_ms where the
+    scheduler streams (iteration-level); batch-level completions fall back
+    to their completion latency — the honest number for a scheduler whose
+    whole batch joins at once."""
+    ttfts, tpots = [], []
+    for comp, lat in zip(comps, lats_ms):
+        ttft = comp.ttft_ms if comp.ttft_ms is not None else lat
+        ttfts.append(ttft)
+        n = len(comp.tokens)
+        if n > 1:
+            tpots.append(max(0.0, lat - ttft) / (n - 1))
+    return ttfts, tpots
 
 
 # ----------------------------------------------------------- sync waves ----
@@ -142,20 +189,24 @@ def bench_waves(server, requests, *, wave_size: int, slots: int) -> dict:
     wall = time.perf_counter() - t0
     lats = [done_at[i // wave_size] * 1000.0 for i in range(len(requests))]
     tokens = sum(len(c.tokens) for c in comps)
-    return summarize(lats, wall, len(requests), tokens)
+    ttfts, tpots = _token_metrics(comps, lats)
+    return summarize(lats, wall, len(requests), tokens, ttfts, tpots)
 
 
 # ----------------------------------------------------- async continuous ----
 
 def bench_continuous(server, requests, *, concurrency: int, max_batch: int,
                      slots: int, max_wait_ms: float,
-                     open_rate: float = 0.0, seed: int = 0) -> dict:
+                     open_rate: float = 0.0, seed: int = 0,
+                     **batcher_kwargs) -> dict:
     """Closed loop (``open_rate==0``): ``concurrency`` clients back to
     back.  Open loop: Poisson arrivals at ``open_rate`` req/s, latency
-    measured from *arrival* (queueing included)."""
+    measured from *arrival* (queueing included).  ``batcher_kwargs``
+    select the granularity (``iteration_level`` etc.)."""
     from repro.serving import ContinuousBatcher
 
     lats_ms: list[float] = []
+    comps_out: list = []
     tokens = 0
 
     async def go():
@@ -169,8 +220,8 @@ def bench_continuous(server, requests, *, concurrency: int, max_batch: int,
             arrivals = np.cumsum(gaps)
 
         async with ContinuousBatcher(server, max_batch=max_batch,
-                                     slots=slots,
-                                     max_wait_ms=max_wait_ms) as batcher:
+                                     slots=slots, max_wait_ms=max_wait_ms,
+                                     **batcher_kwargs) as batcher:
             t0 = loop.time()
 
             async def one(i, r):
@@ -185,6 +236,7 @@ def bench_continuous(server, requests, *, concurrency: int, max_batch: int,
                         t_issue = loop.time()
                     comp = await batcher.submit(r)
                     lats_ms.append((loop.time() - t_issue) * 1000.0)
+                    comps_out.append(comp)
                     tokens += len(comp.tokens)
 
             await asyncio.gather(*[one(i, r) for i, r in enumerate(requests)])
@@ -192,21 +244,34 @@ def bench_continuous(server, requests, *, concurrency: int, max_batch: int,
             return wall, batcher.stats.summary()
 
     wall, sched = asyncio.run(go())
-    out = summarize(lats_ms, wall, len(requests), tokens)
+    ttfts, tpots = _token_metrics(comps_out, lats_ms)
+    out = summarize(lats_ms, wall, len(requests), tokens, ttfts, tpots)
     out["scheduler"] = sched
     return out
 
 
 # ------------------------------------------------------------------ run ----
 
+MODES = ("waves", "continuous-batch", "continuous")
+
+
 def make_result(config: dict, results: dict) -> dict:
     """The ``--json`` document — stable schema for CI and plots."""
-    doc = {"schema": "repro.serve_bench/v1", "config": config,
+    doc = {"schema": "repro.serve_bench/v2", "config": config,
            "results": results}
-    w, c = results.get("waves"), results.get("continuous")
+    w = results.get("waves")
+    cb = results.get("continuous-batch")
+    c = results.get("continuous")
     if w and c:
         doc["speedup_continuous_vs_waves"] = round(
             c["throughput_rps"] / max(w["throughput_rps"], 1e-9), 3)
+    if cb and c:
+        # the ISSUE 5 acceptance number: iteration-level vs the PR 4
+        # batch-level continuous baseline, same workload, same backend
+        doc["speedup_iteration_vs_batch"] = round(
+            c["throughput_rps"] / max(cb["throughput_rps"], 1e-9), 3)
+        doc["ttft_p50_iteration_vs_batch_ms"] = [
+            c.get("ttft_p50_ms"), cb.get("ttft_p50_ms")]
     return doc
 
 
@@ -214,18 +279,22 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
         requests: int = 64, concurrency: int = 32, prompt_len: int = 16,
         max_new: int = 32, wave: int = 8, slots: int = 4,
         max_wait_ms: float = 10.0, open_rate: float = 0.0,
+        prefix_shared: float = 0.0, quantum: int = 8,
+        prefix_tokens: int = 1 << 16,
         os_threads: int = 8, modes=("waves", "continuous"),
         seed: int = 0) -> dict:
     results: dict = {}
     config = {"backend": backend, "arch": arch, "requests": requests,
               "concurrency": concurrency, "prompt_len": prompt_len,
               "max_new": max_new, "wave_size": wave, "slots": slots,
-              "max_wait_ms": max_wait_ms, "open_rate": open_rate}
+              "max_wait_ms": max_wait_ms, "open_rate": open_rate,
+              "prefix_shared": prefix_shared, "quantum": quantum}
 
     if "waves" in modes:
         cfg, session, server = make_server(backend, arch, max_new, os_threads)
         try:
-            reqs = make_requests(cfg, requests, prompt_len, max_new, seed)
+            reqs = make_requests(cfg, requests, prompt_len, max_new, seed,
+                                 prefix_shared)
             warmup(server, cfg, max_new, prompt_len, wave)
             results["waves"] = bench_waves(server, reqs, wave_size=wave,
                                            slots=slots)
@@ -234,7 +303,9 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
             server.close()
             session.close()
 
-    if "continuous" in modes:
+    for mode in ("continuous-batch", "continuous"):
+        if mode not in modes:
+            continue
         # the async stack's client half: on the plain http backend swap in
         # the multiplexed asyncio client (same worker model, no thread per
         # in-flight request) — that pairing IS the async-serving story
@@ -242,14 +313,23 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
         cfg, session, server = make_server(cont_backend, arch, max_new,
                                            os_threads)
         try:
-            reqs = make_requests(cfg, requests, prompt_len, max_new, seed)
+            reqs = make_requests(cfg, requests, prompt_len, max_new, seed,
+                                 prefix_shared)
             warmup(server, cfg, max_new, prompt_len, wave)
-            results["continuous"] = bench_continuous(
+            kwargs = ({"iteration_level": False} if mode == "continuous-batch"
+                      else {"quantum": quantum,
+                            "prompt_cap": max(prompt_len, 8),
+                            "prefix_tokens": prefix_tokens})
+            if mode == "continuous":
+                warmup_iteration(server, cfg, max_new, prompt_len, wave,
+                                 slots, **{k: v for k, v in kwargs.items()
+                                           if k != "iteration_level"})
+            results[mode] = bench_continuous(
                 server, reqs, concurrency=concurrency, max_batch=wave,
                 slots=slots, max_wait_ms=max_wait_ms, open_rate=open_rate,
-                seed=seed)
-            results["continuous"]["backend"] = cont_backend
-            results["continuous"]["cost"] = session.cost.summary()
+                seed=seed, **kwargs)
+            results[mode]["backend"] = cont_backend
+            results[mode]["cost"] = session.cost.summary()
         finally:
             server.close()
             session.close()
@@ -268,22 +348,32 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--wave", type=int, default=8,
-                    help="wave size / continuous max_batch")
+                    help="wave size / continuous max_batch / arena rows")
     ap.add_argument("--slots", type=int, default=4,
-                    help="in-flight batches, both modes")
+                    help="in-flight batches (batch modes) / arenas (iteration)")
     ap.add_argument("--max-wait-ms", type=float, default=10.0)
     ap.add_argument("--open-rate", type=float, default=0.0,
                     help="req/s Poisson arrivals (0 = closed loop)")
+    ap.add_argument("--prefix-shared", type=float, default=0.0,
+                    help="fraction of requests carrying one shared prompt "
+                         "(prefix-cache workload)")
+    ap.add_argument("--quantum", type=int, default=8,
+                    help="iteration mode: decode steps per chunk")
+    ap.add_argument("--prefix-tokens", type=int, default=1 << 16,
+                    help="iteration mode: prefix-cache budget (0 disables)")
     ap.add_argument("--os-threads", type=int, default=8)
-    ap.add_argument("--modes", default="waves,continuous")
+    ap.add_argument("--modes", default="waves,continuous",
+                    help=f"comma list from {MODES}")
     ap.add_argument("--json", dest="json_path", default=None,
-                    help="write the repro.serve_bench/v1 document here")
+                    help="write the repro.serve_bench/v2 document here")
     args = ap.parse_args(argv)
 
     doc = run(args.backend, args.arch, requests=args.requests,
               concurrency=args.concurrency, prompt_len=args.prompt_len,
               max_new=args.max_new, wave=args.wave, slots=args.slots,
               max_wait_ms=args.max_wait_ms, open_rate=args.open_rate,
+              prefix_shared=args.prefix_shared, quantum=args.quantum,
+              prefix_tokens=args.prefix_tokens,
               os_threads=args.os_threads,
               modes=tuple(args.modes.split(",")))
     text = json.dumps(doc, indent=1)

@@ -7,9 +7,12 @@
 Every decode batch is one stateless serverless invocation (prefill +
 greedy decode loop, AOT-compiled entry point); the dispatcher provides
 retry/hedging and the GB-seconds bill per request.  ``--mode continuous``
-runs the same requests through the asyncio continuous batcher (arriving
-requests admitted into free decode slots, grouped by decode length)
-instead of fixed waves — same results, serving-shaped scheduling.
+runs the same requests through the asyncio continuous batcher instead of
+fixed waves — same results, serving-shaped scheduling.  On backends with
+worker-resident state (threads/inline/processes/http*) the batcher runs
+*iteration-level*: the KV cache stays resident on the worker across
+invocations, requests join a running decode batch every few steps, and
+repeated prompts skip prefill via the prompt-prefix cache (ISSUE 5).
 """
 import argparse
 import sys

@@ -22,6 +22,12 @@ class FunctionConfig:
     max_retries: int = 2           # serverless contract: idempotent → retry
     hedge_after_quantile: float | None = None  # straggler backup (beyond paper)
     serializer: str = "binary"     # binary | binary_json | structured_json
+    # Worker pinning for stateful serving (ISSUE 5): invocations sharing an
+    # affinity key land on the same worker slot, so a resident cache arena
+    # is reachable across calls.  Pure dispatch policy — it travels with
+    # each Invocation and never salts the deployed name (same entry point,
+    # different routing).  None = any worker (the stateless default).
+    affinity: int | None = None
 
     def with_memory(self, mb: int) -> "FunctionConfig":
         return dataclasses.replace(self, memory_mb=mb)

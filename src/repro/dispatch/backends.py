@@ -119,7 +119,8 @@ class InlineBackend(WorkerPool):
     """
 
     capabilities = BackendCapabilities(concurrent=False, warm_reuse=True,
-                                       fault_injection=True)
+                                       fault_injection=True,
+                                       resident_state=True)
 
     def __init__(self, *, max_concurrency: int = 1000,
                  fault_plan: FaultPlan | None = None, **_):

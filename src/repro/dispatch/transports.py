@@ -65,7 +65,8 @@ class _TransportBackend:
 
     capabilities = BackendCapabilities(concurrent=True, warm_reuse=True,
                                        measures_latency=True,
-                                       cross_process=True)
+                                       cross_process=True,
+                                       resident_state=True)
 
     def __init__(self, *, deployment: Deployment | None = None,
                  manifest_path: str | None = None, n_workers: int = 2):
@@ -86,6 +87,14 @@ class _TransportBackend:
         self._started = False
         self._stop = False
         self._n_workers = max(1, n_workers)
+        # affinity pinning (ISSUE 5): an affinity key maps to one slot
+        # index, frozen at first use (scale_to growing n_workers must not
+        # re-home resident state), served by a dedicated dispatch thread
+        # per pinned slot.  Pinned and anonymous traffic may share a slot
+        # — the per-slot lock already serializes the byte transport.
+        self._affinity_slots: dict[int, int] = {}
+        self._affinity_queues: dict[int, "queue_mod.Queue"] = {}
+        self._affinity_threads: list[threading.Thread] = []
 
     def _persist_manifest(self, deployment: Deployment) -> str:
         """Workers share the client's manifest through the filesystem —
@@ -105,11 +114,51 @@ class _TransportBackend:
     # ------------------------------------------------------------ backend
     def submit(self, inv: Invocation) -> None:
         self._ensure_started()
-        self._queue.put(inv)
+        cfg = inv.config or inv.deployed.config
+        affinity = getattr(cfg, "affinity", None)
+        if affinity is None:
+            self._queue.put(inv)
+        else:
+            self._affinity_queue(affinity).put(inv)
+
+    def _affinity_slot(self, affinity: int) -> int:
+        with self._lock:
+            idx = self._affinity_slots.get(affinity)
+            if idx is None:
+                idx = affinity % self._n_workers
+                self._affinity_slots[affinity] = idx
+            return idx
+
+    def _affinity_queue(self, affinity: int) -> "queue_mod.Queue":
+        idx = self._affinity_slot(affinity)
+        with self._lock:
+            q = self._affinity_queues.get(idx)
+            if q is None:
+                q = queue_mod.Queue()
+                self._affinity_queues[idx] = q
+                t = threading.Thread(target=self._serve_queue,
+                                     args=(idx, q), daemon=True)
+                t.start()
+                self._affinity_threads.append(t)
+            return q
+
+    def state_control(self, affinity: int, op: str, **data: Any) -> dict:
+        """One CONTROL round-trip to the worker an affinity key pins —
+        the client surface for state-lease management (ISSUE 5)."""
+        slot = self._slot_for(self._affinity_slot(affinity))
+        reply = wire.decode(self._request(slot, wire.encode_control(op,
+                                                                    **data)))
+        if isinstance(reply, wire.ErrorReply):
+            raise wire.to_exception(reply)
+        if not isinstance(reply, wire.ControlRequest):
+            raise wire.WireProtocolError(
+                f"unexpected control reply {type(reply).__name__}")
+        return reply.data
 
     @property
     def queue_depth(self) -> int:
-        return self._queue.qsize()
+        return self._queue.qsize() + sum(
+            q.qsize() for q in self._affinity_queues.values())
 
     def scale_to(self, os_threads: int) -> None:
         with self._lock:
@@ -140,6 +189,10 @@ class _TransportBackend:
         self._stop = True
         for _ in self._threads:
             self._queue.put(None)
+        with self._lock:
+            aqueues = list(self._affinity_queues.values())
+        for q in aqueues:
+            q.put(None)
         with self._lock:
             slots, self._slots = dict(self._slots), {}
         for slot in slots.values():
@@ -177,8 +230,12 @@ class _TransportBackend:
         return slot
 
     def _serve(self, idx: int) -> None:
+        self._serve_queue(idx, self._queue)
+
+    def _serve_queue(self, idx: int,
+                     queue: "queue_mod.Queue[Invocation | None]") -> None:
         while not self._stop:
-            inv = self._queue.get()
+            inv = queue.get()
             if inv is None:
                 return
             if inv.future.done():          # hedged sibling already won
@@ -201,6 +258,7 @@ class _TransportBackend:
             slot = self._slot_for(idx)
             t0 = time.perf_counter()
             reply = self._request(slot, request)
+            reply = self._serve_missing_artifacts(slot, request, reply)
             measured_ms = (time.perf_counter() - t0) * 1000.0
         except Exception as e:
             # transport loss: burn the slot, surface a retryable crash
@@ -212,6 +270,34 @@ class _TransportBackend:
         rec.modeled_latency_ms = measured_ms
         rec.latency_measured = True
         self._complete(inv, reply, rec)
+
+    def _serve_missing_artifacts(self, slot, request: bytes,
+                                 reply: bytes) -> bytes:
+        """Artifact remote fetch (ROADMAP): a worker that cannot resolve an
+        ``ArtifactRef`` (no shared filesystem) answers ``ArtifactMissing``;
+        the client pushes the blob over the wire (CONTROL ``artifact_put``)
+        and replays the invocation.  Bounded by distinct shas, so a worker
+        that keeps losing blobs cannot loop the client forever."""
+        from ..serialization.artifacts import export_artifact_blob
+        served: set[str] = set()
+        while True:
+            miss = wire.decode_artifact_missing(reply)
+            if miss is None:
+                return reply
+            sha, path = miss
+            if sha in served:
+                return reply               # pushed already and still missing
+            blob = export_artifact_blob(sha, path)
+            if blob is None:
+                return reply               # client doesn't have it either
+            ack = wire.decode(self._request(
+                slot, wire.encode_control("artifact_put", body=blob,
+                                          sha=sha)))
+            if not (isinstance(ack, wire.ControlRequest)
+                    and ack.data.get("ok")):
+                return reply
+            served.add(sha)
+            reply = self._request(slot, request)
 
     def _complete(self, inv: Invocation, reply: bytes,
                   rec: InvocationRecord) -> None:

@@ -33,6 +33,11 @@ class BackendCapabilities:
     models_latency: bool = False   # fills InvocationRecord.modeled_latency_ms
     measures_latency: bool = False # modeled_latency_ms is a *measurement*
     cross_process: bool = False    # payloads cross a process/socket boundary
+    # worker-resident state (ISSUE 5): entries in repro.runtime.state
+    # survive between invocations and FunctionConfig.affinity pinning is
+    # honored (trivially, for in-process backends) — iteration-level
+    # serving requires this; backends without it get the wave fallback
+    resident_state: bool = False
 
 
 def fill_record(rec: InvocationRecord, *, stats, server_s: float,
@@ -67,7 +72,8 @@ class WorkerPool:
     """
 
     capabilities = BackendCapabilities(concurrent=True, warm_reuse=True,
-                                       fault_injection=True)
+                                       fault_injection=True,
+                                       resident_state=True)
 
     def __init__(self, max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None):

@@ -44,9 +44,19 @@ def main():
     ap.add_argument("--mode", default="waves",
                     choices=("waves", "continuous"))
     ap.add_argument("--slots", type=int, default=2,
-                    help="continuous mode: in-flight decode batches")
+                    help="continuous mode: in-flight decode batches/arenas")
     ap.add_argument("--max-wait-ms", type=float, default=10.0,
                     help="continuous mode: batch-fill wait")
+    ap.add_argument("--iteration", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="continuous mode: iteration-level scheduling "
+                         "(worker-resident KV arena; auto = when the "
+                         "backend supports resident state)")
+    ap.add_argument("--quantum", type=int, default=8,
+                    help="iteration mode: decode steps per chunk")
+    ap.add_argument("--prefix-tokens", type=int, default=1 << 16,
+                    help="iteration mode: prompt-prefix cache budget "
+                         "(tokens; 0 disables)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -63,9 +73,14 @@ def main():
     t0 = time.perf_counter()
     if args.mode == "continuous":
         from ..serving import run_continuous
+        iteration = {"auto": None, "on": True, "off": False}[args.iteration]
         comps = run_continuous(server, reqs, concurrency=args.requests,
                                max_batch=args.wave, slots=args.slots,
-                               max_wait_ms=args.max_wait_ms)
+                               max_wait_ms=args.max_wait_ms,
+                               iteration_level=iteration,
+                               quantum=args.quantum,
+                               prompt_cap=max(8, args.prompt_len),
+                               prefix_tokens=args.prefix_tokens)
     else:
         comps = server.serve(reqs, wave_size=args.wave)
     wall = time.perf_counter() - t0

@@ -186,12 +186,21 @@ def cache_specs(cfg: ModelConfig):
     raise ValueError(cfg.family)
 
 
-def grow_cache(cfg: ModelConfig, cache, new_cap: int):
+def grow_cache(cfg: ModelConfig, cache, new_cap: int, bucket: bool = True):
     """Pad the seq-capacity dimension of a prefill cache so decode can
     append: dynamic_update_slice clamps out-of-range starts, so writing
-    token S into a capacity-S cache silently corrupts the last slot."""
+    token S into a capacity-S cache silently corrupts the last slot.
+
+    ``bucket`` rounds the grown capacity up to the next power of two.
+    Entry-point identity fingerprints every cache shape, so exact-fit
+    growth compiles a fresh decode program per distinct ``s + max_new`` —
+    pow2 buckets make nearby lengths share one compiled entry point (at
+    worst 2x padded capacity, whose extra slots are masked out of
+    attention exactly like left pad)."""
     if cfg.family == "ssm":
         return cache                                # O(1) state, no seq dim
+    if bucket:
+        new_cap = 1 << max(0, int(new_cap) - 1).bit_length()
     out = dict(cache)
     for k in ("k", "v", "k_scale", "v_scale"):      # NOT cross_k/v (static)
         if k not in cache:
@@ -202,6 +211,171 @@ def grow_cache(cfg: ModelConfig, cache, new_cap: int):
             widths = [(0, 0)] * a.ndim
             widths[2] = (0, pad)
             out[k] = jnp.pad(a, widths)
+    return out
+
+
+# ------------------------------------------------- slot-arena primitives --
+# Iteration-level serving (ISSUE 5) keeps one *arena* cache resident on a
+# worker: a batch of B row slots sharing one write cursor ``idx``.  A row
+# prefilled separately (in its own width-s buffer) drops into a slot by
+# aligning its content so the last real token sits at ``idx - 1`` and
+# setting the row's ``start`` to ``idx - length`` — exactly the left-pad
+# layout PR 4's masks already handle, so a newly admitted request never
+# touches its neighbours' math.  Every non-scalar cache leaf carries batch
+# at axis 1 (see ``cache_specs``); the seq-capacity leaves below are the
+# only ones needing cursor alignment — everything else is per-row O(1)
+# state copied wholesale.
+
+SEQ_CACHE_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+def arena_supported(cfg: ModelConfig) -> bool:
+    """Families whose caches support slot insert/free (all token-prompt LM
+    families; encdec needs frames and modality stubs stay wave-only)."""
+    return cfg.family in ("dense", "moe", "vlm", "hybrid", "ssm") \
+        and not cfg.embeds_input
+
+
+def arena_init_cache(cfg: ModelConfig, batch: int, cap: int, cursor: int):
+    """A fresh arena: capacity ``cap``, write cursor ``cursor``, every row
+    fully masked (``start == cursor``) until something is inserted."""
+    model = build_model(cfg)
+    if cfg.family == "ssm":
+        return model.init_cache(batch, cap, filled=cursor)
+    return model.init_cache(batch, cap, filled=cursor,
+                            start=jnp.full((batch,), cursor, jnp.int32))
+
+
+def cache_extract_rows(cfg: ModelConfig, cache, rows):
+    """Row-subset of a cache pytree (batch axis 1 everywhere; per-row
+    ``start`` subset; scalar ``idx`` kept) — the primitive behind prefix-
+    cache capture and slot hand-off."""
+    rows = jnp.asarray(rows, jnp.int32)
+    out = {}
+    for key, a in cache.items():
+        if key == "idx":
+            out[key] = a
+        elif key == "start":
+            out[key] = a[rows]
+        else:
+            out[key] = a[:, rows]
+    return out
+
+
+def cache_insert_rows(cfg: ModelConfig, arena, rows, slots, lengths,
+                      width: int | None = None, check: bool = True):
+    """Insert per-row caches (a prefill result of seq width ``width``) into
+    arena slots, aligned so each row's last real token lands at the arena
+    cursor minus one; the row's ``start`` becomes ``idx - length`` (its
+    left pad and whatever junk precedes it stay masked).  Requires
+    ``width <= idx`` — iteration-level schedulers initialise the cursor at
+    the prompt-capacity bucket so this always holds.  Jit-compatible with
+    ``check=False`` (the cursor bound cannot be asserted on a tracer)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    cur = arena["idx"]
+    out = dict(arena)
+    if cfg.family == "ssm":
+        for key, a in arena.items():
+            if key == "idx":
+                continue
+            out[key] = a.at[:, slots].set(rows[key].astype(a.dtype))
+        return out
+    if width is None:
+        width = int(rows["idx"])
+    if check and width > int(cur):
+        raise ValueError(
+            f"cache_insert_rows: row width {width} exceeds arena cursor "
+            f"{int(cur)} — the arena must be initialised with cursor >= "
+            "the prompt-capacity bucket")
+    pos = cur - width + jnp.arange(width)
+    for key, a in arena.items():
+        if key == "idx":
+            continue
+        if key == "start":
+            out[key] = a.at[slots].set((cur - lengths).astype(jnp.int32))
+            continue
+        r = rows[key]
+        if key in SEQ_CACHE_KEYS:
+            out[key] = a.at[:, slots[:, None], pos[None, :]].set(
+                r.astype(a.dtype))
+        else:
+            out[key] = a.at[:, slots].set(r.astype(a.dtype))
+    return out
+
+
+def cache_insert_rows_masked(cfg: ModelConfig, arena, rows, sel, mask,
+                             lengths, width: int):
+    """Shape-stable variant of :func:`cache_insert_rows` for jitted
+    admission: every arena row is (conditionally) written in one fused op.
+
+    ``rows`` carries a full arena-batch of candidate rows (a ``min_rows``-
+    pinned prefill); ``sel (B,)`` names each arena slot's source row,
+    ``mask (B,)`` which slots are actually replaced, ``lengths (B,)`` the
+    per-slot real token count (ignored where unmasked).  All shapes are
+    fixed by ``(B, width)``, so ONE program compiles per prompt-width
+    bucket — an index-scattered insert would compile per admission size,
+    which is a multi-hundred-ms stall on the serve path.
+    """
+    sel = jnp.asarray(sel, jnp.int32)
+    mask = jnp.asarray(mask, bool)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    cur = arena["idx"]
+    out = dict(arena)
+    if cfg.family == "ssm":
+        for key, a in arena.items():
+            if key == "idx":
+                continue
+            r = rows[key][:, sel].astype(a.dtype)
+            m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+            out[key] = jnp.where(m, r, a)
+        return out
+    pos = cur - width + jnp.arange(width)
+    for key, a in arena.items():
+        if key == "idx":
+            continue
+        if key == "start":
+            out[key] = jnp.where(mask, (cur - lengths).astype(jnp.int32),
+                                 a).astype(jnp.int32)
+            continue
+        r = rows[key][:, sel].astype(a.dtype)
+        if key in SEQ_CACHE_KEYS:
+            window = a[:, :, pos]
+            m = mask.reshape((1, -1) + (1,) * (window.ndim - 2))
+            out[key] = a.at[:, :, pos].set(jnp.where(m, r, window))
+        else:
+            m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+            out[key] = jnp.where(m, r, a)
+    return out
+
+
+def cache_free_rows(cfg: ModelConfig, arena, slots):
+    """Evict rows: ``start`` jumps to the cursor so a freed slot holds no
+    valid keys (its future junk writes stay masked) and stops pinning
+    compaction.  O(1)-state families have nothing to mask — a freed row's
+    output is simply never read."""
+    if "start" not in arena:
+        return arena
+    slots = jnp.asarray(slots, jnp.int32)
+    out = dict(arena)
+    out["start"] = arena["start"].at[slots].set(
+        jnp.int32(int(arena["idx"])))
+    return out
+
+
+def cache_shift_left(cfg: ModelConfig, arena, shift: int):
+    """Compact the arena: roll every seq-capacity leaf left by ``shift``
+    (the minimum live ``start``), rebasing ``start``/``idx``.  Wrapped
+    junk lands beyond the new cursor, where the decode mask never looks —
+    this is what lets a long-running arena's cursor stay bounded."""
+    if cfg.family == "ssm" or shift <= 0:
+        return arena
+    out = dict(arena)
+    for key in SEQ_CACHE_KEYS:
+        if key in arena:
+            out[key] = jnp.roll(arena[key], -shift, axis=2)
+    out["start"] = (arena["start"] - shift).astype(jnp.int32)
+    out["idx"] = arena["idx"] - jnp.int32(shift)
     return out
 
 

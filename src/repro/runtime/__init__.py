@@ -12,6 +12,9 @@ _EXPORTS = {
     "Completion": ".server", "LMServer": ".server", "Request": ".server",
     "make_generate_fn": ".server", "decode_bucket": ".server",
     "shape_bucket": ".server", "pack_prompts": ".server",
+    "EngineClient": ".engine", "engine_prefill": ".engine",
+    "engine_decode": ".engine", "prefix_key": ".engine",
+    "is_state_lost": ".engine",
     "SimulatedPreemption": ".trainer", "TrainReport": ".trainer",
     "train": ".trainer",
     "SandboxHost": ".sandbox", "WorkerInstance": ".sandbox",

@@ -1,0 +1,463 @@
+"""Iteration-level serving engine: worker-resident KV arena + step decode.
+
+PR 4's serving path is batch-level: one deployed entry point runs prefill
+*and* the whole decode scan, so a request can only join between batches
+and every admission re-runs prefill from scratch.  This module splits
+that monolith into the two entry points the paper's warm-state economics
+actually want (ISSUE 5):
+
+* :func:`engine_prefill` — prefill arriving prompts in a bucketed side
+  buffer and *insert* each row into a worker-resident, slot-allocated
+  cache arena (:mod:`repro.runtime.state`), keyed by a client-generated
+  handle.  The cache never crosses the wire back; only the first decoded
+  token per row returns.  Rows whose full prompt is already resident in
+  the arena's prefix store skip prefill compute entirely.
+* :func:`engine_decode` — advance *all* live slots ``k`` greedy steps and
+  return just the ``(B, k)`` new token ids (a few hundred bytes), freeing
+  evicted rows and compacting the arena when the cursor nears capacity.
+
+Both are ordinary shippable functions (``jax_traceable=False``): the
+worker imports this module, rebuilds the model from ``cfg`` and pays each
+jit once per shape bucket — the same cold-start contract as every other
+deployed entry point.  :class:`EngineClient` is the client half: it owns
+the handle, mirrors the cursor and the prefix-store LRU (the client is
+the single writer, so the mirror is exact), pins every call to one worker
+via ``FunctionConfig.affinity`` on cross-process backends, and falls back
+to direct :mod:`repro.runtime.state` calls when the backend shares the
+client process.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import uuid
+from functools import lru_cache
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import build_model
+from ..models.api import (arena_init_cache, arena_supported,
+                          cache_extract_rows, cache_insert_rows,
+                          cache_insert_rows_masked, cache_shift_left)
+from . import state
+from .server import pack_prompts, shape_bucket
+
+DEFAULT_QUANTUM = 8
+
+
+# ---------------------------------------------------------------- hashing --
+
+def prefix_key(tokens: Sequence[int]) -> str:
+    """Content hash of a token prefix: length-prefixed over the *raw*
+    token ids, never over a padded row.  A prompt that happens to contain
+    the pad id therefore cannot collide with a shorter prompt whose
+    padded row looks identical (``[pad, x, y]`` vs ``[x, y]``)."""
+    h = hashlib.sha256()
+    h.update(len(tokens).to_bytes(8, "little"))
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.hexdigest()
+
+
+def is_state_lost(err: BaseException) -> bool:
+    """The wire-reconstructed signature of a reclaimed/respawned arena."""
+    return isinstance(err, KeyError) and "state handle" in str(err)
+
+
+# ------------------------------------------------------- worker-side jits --
+
+@lru_cache(maxsize=None)
+def _model_for(cfg: ModelConfig):
+    return build_model(cfg)
+
+
+@lru_cache(maxsize=64)
+def _prefill_fn(cfg: ModelConfig):
+    model = _model_for(cfg)
+
+    def run(params, tokens, lengths):
+        logits, cache = model.prefill(params, {"tokens": tokens,
+                                               "lengths": lengths})
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        return first, cache
+
+    return jax.jit(run)
+
+
+@lru_cache(maxsize=256)
+def _insert_full_fn(cfg: ModelConfig, width: int):
+    """Jitted full-batch masked insert + first-token splice: one compiled
+    program per prompt-width bucket, whatever subset of slots admits."""
+    def run(arena, last, rows, first, sel, mask, lengths):
+        arena = cache_insert_rows_masked(cfg, arena, rows, sel, mask,
+                                         lengths, width=width)
+        last = jnp.where(mask, first[sel], last).astype(jnp.int32)
+        return arena, last
+
+    return jax.jit(run)
+
+
+@lru_cache(maxsize=256)
+def _insert_one_fn(cfg: ModelConfig, width: int):
+    """Jitted single-row insert (prefix-cache hits re-insert one stored
+    row at a time; shapes fixed by width, so this compiles once each)."""
+    def run(arena, last, row, slot, length, first_tok):
+        arena = cache_insert_rows(cfg, arena, row, slot, length,
+                                  width=width, check=False)
+        last = last.at[slot[0]].set(jnp.int32(first_tok))
+        return arena, last
+
+    return jax.jit(run)
+
+
+@lru_cache(maxsize=256)
+def _decode_fn(cfg: ModelConfig, k: int):
+    model = _model_for(cfg)
+
+    def run(params, cache, tok, free_mask):
+        # eviction fused into the step program: freed rows jump their
+        # ``start`` to the cursor (no valid keys — junk writes stay
+        # masked) and feed the pad id.  A (B,) bool mask keeps the
+        # compiled program shared across every eviction pattern, where an
+        # eager per-slot update would copy the whole arena per chunk.
+        if "start" in cache:
+            cache = dict(cache)
+            cache["start"] = jnp.where(free_mask,
+                                       jnp.int32(cache["idx"]),
+                                       cache["start"]).astype(jnp.int32)
+        tok = jnp.where(free_mask[:, None], jnp.int32(cfg.pad_id), tok)
+
+        def step(carry, _):
+            cache, tok = carry
+            logits, cache = model.decode(params, cache, tok)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            return (cache, nxt), nxt[:, 0]
+
+        (cache, tok), toks = jax.lax.scan(step, (cache, tok), None, length=k)
+        return cache, tok[:, 0], jnp.moveaxis(toks, 0, 1)   # (B, k)
+
+    return jax.jit(run)
+
+
+# ------------------------------------------------------ worker entry fns --
+
+def engine_prefill(params, tokens, lengths, *, cfg, handle, batch, cap,
+                   cursor0, miss_slots=(), store_keys=(), hit_slots=(),
+                   hit_keys=(), evict_keys=(), create=True,
+                   ttl_s=state.DEFAULT_TTL_S):
+    """Prefill + slot-insert entry point (worker side).
+
+    ``tokens``/``lengths`` carry the prefix-cache *misses* packed by the
+    client (``None`` when every row hit); ``miss_slots`` names the arena
+    slot per packed row (filler rows beyond it are discarded).
+    ``store_keys`` (parallel to ``miss_slots``) asks the worker to retain
+    a row's fresh cache in the arena's prefix store; ``hit_slots`` /
+    ``hit_keys`` are rows served straight from it; ``evict_keys`` applies
+    the client's LRU decisions.  Returns ``{"first": first token per
+    inserted row (miss order then hit order), "idx": cursor}`` — the
+    cache itself stays resident and is never serialized back.
+    """
+    def make():
+        return {"cache": arena_init_cache(cfg, batch, cap, cursor0),
+                "last": jnp.full((batch,), cfg.pad_id, jnp.int32),
+                "prefix": {}, "prefix_tokens": 0, "cap": cap,
+                "cursor0": cursor0}
+
+    # ``create`` distinguishes building a fresh arena from renewing one
+    # that must already exist: an admission into an arena holding live
+    # rows must NOT silently recreate an expired lease (the live rows
+    # would decode garbage against a blank cache) — it must surface the
+    # state-lost KeyError so the scheduler fails those rows and rebuilds.
+    a = state.lease(handle, ttl_s=float(ttl_s),
+                    make=make if create else None)
+    cache, last = a["cache"], a["last"]
+    for key in evict_keys:
+        ent = a["prefix"].pop(key, None)
+        if ent is not None:
+            a["prefix_tokens"] -= ent[1]
+
+    first_out: list[int] = []
+    if len(miss_slots):
+        n = len(miss_slots)
+        if int(cache["idx"]) < int(tokens.shape[1]) \
+                and cfg.family != "ssm":
+            raise ValueError(
+                f"prefill width {int(tokens.shape[1])} exceeds arena "
+                f"cursor {int(cache['idx'])}")
+        tokens = jnp.asarray(tokens)
+        lengths = np.asarray(lengths, np.int32)
+        width = int(tokens.shape[1])
+        first, pcache = _prefill_fn(cfg)(params, tokens,
+                                         jnp.asarray(lengths))
+        first = np.asarray(first)
+        for j, key in enumerate(store_keys):
+            if key is None or key in a["prefix"]:
+                continue
+            row = cache_extract_rows(cfg, pcache, (j,))
+            a["prefix"][key] = (row, int(lengths[j]), int(first[j]), width)
+            a["prefix_tokens"] += int(lengths[j])
+        # shape-stable masked insert: sel routes packed row j to its slot
+        rows_b = last.shape[0]
+        sel = np.zeros((rows_b,), np.int32)
+        mask = np.zeros((rows_b,), bool)
+        len_by_slot = np.zeros((rows_b,), np.int32)
+        for j, slot in enumerate(miss_slots):
+            sel[slot], mask[slot] = j, True
+            len_by_slot[slot] = lengths[j]
+        if first.shape[0] < rows_b:
+            raise RuntimeError("prefill batch smaller than the arena: "
+                               "pack with min_rows == arena rows")
+        cache, last = _insert_full_fn(cfg, width)(
+            cache, last, pcache, jnp.asarray(first),
+            jnp.asarray(sel), jnp.asarray(mask), jnp.asarray(len_by_slot))
+        first_out.extend(int(t) for t in first[:n])
+
+    for slot, key in zip(hit_slots, hit_keys):
+        ent = a["prefix"].get(key)
+        if ent is None:
+            raise KeyError(
+                f"prefix key {key[:12]}… not resident for state handle "
+                f"{handle!r} (stale client mirror)")
+        row, length, t0, width = ent
+        cache, last = _insert_one_fn(cfg, width)(
+            cache, last, row, jnp.asarray([slot], jnp.int32),
+            jnp.asarray([length], jnp.int32), t0)
+        first_out.append(t0)
+
+    a["cache"], a["last"] = cache, last
+    return {"first": np.asarray(first_out, np.int32),
+            "idx": int(cache["idx"])}
+
+
+def engine_decode(params, *, cfg, handle, k, free_slots=(),
+                  ttl_s=state.DEFAULT_TTL_S):
+    """Decode-step entry point (worker side): free evicted rows, compact
+    if the cursor nears capacity, advance every slot ``k`` greedy steps.
+    Returns ``{"tokens": (B, k) ids, "idx": post-step cursor}``."""
+    a = state.get(handle, ttl_s=float(ttl_s))
+    cache, last = a["cache"], a["last"]
+    k = int(k)
+    free_mask = np.zeros((last.shape[0],), bool)
+    if len(free_slots):
+        free_mask[np.asarray(free_slots, np.int64)] = True
+    if cfg.family != "ssm":
+        cap = a["cap"]
+        if int(cache["idx"]) + k >= cap:
+            # compaction bound: minimum start over rows that are NOT being
+            # freed this call (schedulers pass every non-live slot in
+            # free_slots each chunk, so idle freed slots cannot pin the
+            # shift at their freeze-time start).  Clamped so the cursor
+            # never drops below the prompt-width bucket — otherwise the
+            # next admission's insert would have no room to align against.
+            starts = np.asarray(cache["start"])
+            starts = np.where(free_mask, int(cache["idx"]), starts)
+            shift = min(int(starts.min()),
+                        int(cache["idx"]) - int(a.get("cursor0", 0)))
+            cache = cache_shift_left(cfg, cache, shift)
+            if int(cache["idx"]) + k >= cap:
+                raise RuntimeError(
+                    f"cache arena {handle!r} full: cursor "
+                    f"{int(cache['idx'])} + {k} exceeds capacity {cap} "
+                    "even after compaction (a live row spans the arena)")
+    cache, last, toks = _decode_fn(cfg, k)(params, cache, last[:, None],
+                                           jnp.asarray(free_mask))
+    a["cache"], a["last"] = cache, last
+    return {"tokens": np.asarray(toks), "idx": int(cache["idx"])}
+
+
+# ------------------------------------------------------------ client half --
+
+_affinity_counter = itertools.count()
+
+
+class EngineClient:
+    """Client handle for one worker-resident decode arena.
+
+    Owns the state handle, the cursor mirror and the prefix-LRU mirror
+    (exact: this client is the arena's only writer), and the bound entry
+    points — pinned to one worker via ``affinity`` on cross-process
+    backends.  Methods are synchronous and must be driven by a single
+    scheduler loop (the iteration-level batcher runs one loop per engine).
+    """
+
+    def __init__(self, server, *, rows: int, prompt_cap: int = 64,
+                 quantum: int = DEFAULT_QUANTUM, prefix_tokens: int = 1 << 16,
+                 ttl_s: float = state.DEFAULT_TTL_S, cap: int | None = None,
+                 affinity: int | None = None):
+        cfg = server.cfg
+        if not arena_supported(cfg):
+            raise ValueError(f"family {cfg.family!r} does not support "
+                             "slot-arena serving (wave fallback only)")
+        self.server = server
+        self.cfg = cfg
+        self.rows = int(rows)
+        self.quantum = shape_bucket(max(1, quantum))
+        self.cursor0 = shape_bucket(max(1, prompt_cap))
+        self.cap = int(cap) if cap is not None else shape_bucket(
+            self.cursor0 + max(4 * self.quantum, 2 * server.max_new))
+        self.ttl_s = float(ttl_s)
+        self.affinity = (next(_affinity_counter) if affinity is None
+                         else int(affinity))
+        self.handle = uuid.uuid4().hex
+        self.prefix_budget = int(prefix_tokens)
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self._cursor = self.cursor0
+        self._prefix: dict[str, int] = {}       # key -> token count, LRU order
+        self._prefix_total = 0
+        self._closed = False
+        sess = server.session
+        self._local_state = not sess.backend.capabilities.cross_process
+        common = dict(memory_mb=server._memory_mb, serializer="binary",
+                      affinity=self.affinity)
+        self._f_prefill = sess.function(
+            engine_prefill, name=f"engine_prefill_{cfg.name}",
+            jax_traceable=False, **common)
+        self._f_decode = sess.function(
+            engine_decode, name=f"engine_decode_{cfg.name}",
+            jax_traceable=False, **common)
+
+    # ------------------------------------------------------------ sizing --
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        """Whether a request can ever live in this arena: its prompt must
+        fit below the initial cursor and its whole span (prompt + decode +
+        one quantum of slack) below capacity after compaction."""
+        if self.cfg.family == "ssm":
+            return True                      # O(1) state: no capacity bound
+        return prompt_len <= self.cursor0 and \
+            self.cursor0 + max_new + 2 * self.quantum <= self.cap
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    # ----------------------------------------------------------- prefix --
+    def _prefix_plan(self, prompts):
+        """Split an admission group into prefix hits and misses, and emit
+        the store/evict commands that keep the worker's store equal to the
+        client's LRU mirror (LRU by token count, budget ``prefix_tokens``).
+
+        A key stored *and* LRU-evicted within the same plan is cancelled
+        out client-side (store slot nulled, no evict emitted): the worker
+        applies evicts before stores, so emitting both would leak the
+        entry past the budget forever (the mirror forgets a key the
+        worker still holds)."""
+        hits, misses, store, evict = [], [], [], []
+        added_at: dict[str, int] = {}        # keys stored by THIS plan
+        for i, p in enumerate(prompts):
+            key = prefix_key(p)
+            if key in self._prefix:
+                self._prefix[key] = self._prefix.pop(key)   # LRU touch
+                hits.append((i, key))
+                continue
+            misses.append(i)
+            if self.prefix_budget and len(p) <= self.prefix_budget:
+                while self._prefix and \
+                        self._prefix_total + len(p) > self.prefix_budget:
+                    old, n = next(iter(self._prefix.items()))
+                    del self._prefix[old]
+                    self._prefix_total -= n
+                    if old in added_at:
+                        store[added_at.pop(old)] = None     # never stored
+                    else:
+                        evict.append(old)
+                self._prefix[key] = len(p)
+                self._prefix_total += len(p)
+                added_at[key] = len(store)
+                store.append(key)
+            else:
+                store.append(None)
+        self.prefix_hits += len(hits)
+        self.prefix_misses += len(misses)
+        return hits, misses, store, evict
+
+    # ------------------------------------------------------------- calls --
+    def _params(self):
+        ref = self.server._params_ref
+        if ref is None or self._closed:
+            raise RuntimeError("engine is closed (or its LMServer released "
+                               "the params artifact)")
+        return ref
+
+    def submit_admit(self, items, create: bool = True):
+        """Pack and dispatch one admission group.
+
+        ``items``: ``[(slot, prompt), ...]``.  Returns ``(future,
+        slot_order)`` — the future resolves to the worker reply, with
+        first tokens aligned to ``slot_order`` (misses first, then hits).
+        ``create=False`` asserts the arena already exists (the scheduler
+        has live rows in it): an expired lease then surfaces as state
+        lost instead of being silently rebuilt under those rows.
+        """
+        params = self._params()
+        slots = [s for s, _ in items]
+        prompts = [p for _, p in items]
+        hits, misses, store, evict = self._prefix_plan(prompts)
+        miss_slots = tuple(slots[i] for i in misses)
+        hit_slots = tuple(slots[i] for i, _ in hits)
+        hit_keys = tuple(k for _, k in hits)
+        if misses:
+            # min_rows pins the admission batch's row bucket to the arena
+            # size: exactly ONE compiled prefill shape per prompt-width
+            # bucket ever exists (same trade the batch-level scheduler
+            # makes via submit_wave min_rows) — padded filler compute in
+            # exchange for never compiling mid-serve
+            tokens, lengths = pack_prompts([prompts[i] for i in misses],
+                                           pad=self.cfg.pad_id,
+                                           min_rows=self.rows)
+            tokens, lengths = jnp.asarray(tokens), jnp.asarray(lengths)
+        else:
+            tokens = lengths = None
+        fut = self._f_prefill.submit(
+            params, tokens, lengths, cfg=self.cfg, handle=self.handle,
+            batch=self.rows, cap=self.cap, cursor0=self.cursor0,
+            miss_slots=miss_slots, store_keys=tuple(store),
+            hit_slots=hit_slots, hit_keys=hit_keys,
+            evict_keys=tuple(evict), create=bool(create), ttl_s=self.ttl_s)
+        return fut, list(miss_slots) + list(hit_slots)
+
+    def submit_step(self, k: int, free_slots=()):
+        """Dispatch one ``k``-step decode chunk (optionally freeing evicted
+        slots first); returns the invocation future."""
+        return self._f_decode.submit(
+            self._params(), cfg=self.cfg, handle=self.handle, k=int(k),
+            free_slots=tuple(free_slots), ttl_s=self.ttl_s)
+
+    def observe(self, reply: dict) -> dict:
+        """Fold a worker reply into the client mirrors (cursor)."""
+        self._cursor = int(reply["idx"])
+        return reply
+
+    def choose_k(self, max_remaining: int) -> int:
+        """Decode-chunk length: the quantum, shrunk (to a pow2 bucket, so
+        compiled step programs stay shared) when every live row is nearly
+        done — bounded overshoot, bounded compile variants."""
+        return shape_bucket(max(1, min(self.quantum, max_remaining)))
+
+    # ------------------------------------------------------------- reset --
+    def reset(self) -> None:
+        """After state loss (worker respawn / lease expiry): new handle,
+        cold mirrors.  The next admission rebuilds the arena."""
+        self.handle = uuid.uuid4().hex
+        self._cursor = self.cursor0
+        self._prefix.clear()
+        self._prefix_total = 0
+
+    def close(self) -> None:
+        """Release the worker-side lease (best effort, idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if self._local_state:
+                state.release(self.handle)
+            else:
+                backend = self.server.session.backend
+                ctrl = getattr(backend, "state_control", None)
+                if ctrl is not None:
+                    ctrl(self.affinity, "state_release", handle=self.handle)
+        except Exception:
+            pass                    # lease TTL reclaims it regardless

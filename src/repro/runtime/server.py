@@ -15,12 +15,18 @@ Two scheduling modes share one pack/dispatch/unpack core
 * **continuous** — :class:`repro.serving.batcher.ContinuousBatcher`:
   arriving requests are admitted into decode batches as slots free up,
   grouped by decode-length bucket so a short request never pays for a
-  long neighbour's tail.
+  long neighbour's tail.  On backends with worker-resident state it
+  upgrades to *iteration-level* scheduling: prefill and decode are split
+  into the two entry points of :mod:`repro.runtime.engine`, the KV cache
+  stays resident on the worker, and admission happens every ``k`` decode
+  steps instead of between batches (ISSUE 5).
 
 Decode length is *bucketed* (next power of two ≥ the batch's largest
 ``max_new``): one deployed entry point per bucket, cached, so a batch only
 decodes as far as its own requests need instead of always paying the
-server-wide maximum.
+server-wide maximum.  ``grow_cache`` additionally rounds the grown cache
+capacity up to a pow2 bucket, so nearby ``s + max_new`` combinations share
+one compiled decode program.
 """
 from __future__ import annotations
 
@@ -50,6 +56,15 @@ class Completion:
     tokens: list[int]
     latency_ms: float = 0.0
     cost_gb_s: float = 0.0
+    # time to first token (ms).  Batch-level schedulers have no token
+    # stream — the whole batch joins at once — so TTFT degenerates to the
+    # completion latency; the iteration-level scheduler fills in the real
+    # prefill-done time (ISSUE 5).  None = "same as latency_ms".
+    ttft_ms: float | None = None
+
+    @property
+    def ttft(self) -> float:
+        return self.latency_ms if self.ttft_ms is None else self.ttft_ms
 
 
 def shape_bucket(n: int) -> int:

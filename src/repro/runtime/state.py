@@ -1,0 +1,144 @@
+"""Worker-resident serving state: leased handles over a process registry.
+
+Cppless functions are stateless by contract — and Hellerstein et al.'s
+critique (PAPERS.md) is that this forces serving systems to ship data to
+code on every call.  Iteration-level serving (ISSUE 5) needs the opposite
+on its hottest path: the KV-cache arena a decode loop advances must stay
+*resident* where the compute runs, across invocations.  This module is
+that residence — a process-level registry of state entries keyed by
+client-generated handles, living in whatever process executes entry
+points:
+
+* in-process backends (``inline``/``threads``) share this exact module
+  with the client — the arena is process-local and free;
+* out-of-process workers (``processes``/``http``/``http-aio``) hold their
+  own copy, reached by pinning every invocation that names a handle to
+  one worker (``FunctionConfig.affinity``) and managed through wire
+  ``CONTROL`` verbs (``state_lease`` / ``state_release`` / ``state_stats``
+  in :mod:`repro.runtime.worker_host`).
+
+Leases, not ownership: every touch renews a TTL, and expired entries are
+reclaimed on the next registry access — a client that died mid-serve
+cannot pin worker memory forever.  A reclaimed (or respawned-worker)
+handle surfaces as ``KeyError`` mentioning "state handle", which the wire
+reconstructs client-side; schedulers treat it as *state lost* and rebuild
+rather than retry.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+# test seam: unit tests monkeypatch this to drive TTL expiry without sleeping
+_now = time.monotonic
+
+DEFAULT_TTL_S = 60.0
+
+
+@dataclass
+class StateEntry:
+    handle: str
+    data: dict[str, Any]
+    ttl_s: float
+    deadline: float
+    created: float = field(default_factory=lambda: _now())
+    touches: int = 0
+
+
+_ENTRIES: dict[str, StateEntry] = {}
+_LOCK = threading.Lock()
+
+
+def _state_lost(handle: str) -> KeyError:
+    # KeyError is a builtin: the wire reconstructs it client-side, and the
+    # "state handle" marker is the documented state-lost signature
+    return KeyError(f"state handle {handle!r} not resident "
+                    "(expired lease, released, or a fresh worker process)")
+
+
+def _sweep_locked(now: float) -> list[str]:
+    dead = [h for h, e in _ENTRIES.items() if e.deadline < now]
+    for h in dead:
+        del _ENTRIES[h]
+    return dead
+
+
+def sweep() -> list[str]:
+    """Reclaim every expired lease; returns the reclaimed handles."""
+    with _LOCK:
+        return _sweep_locked(_now())
+
+
+def lease(handle: str, *, ttl_s: float = DEFAULT_TTL_S,
+          make: Callable[[], dict] | None = None) -> dict[str, Any]:
+    """Fetch-or-create the state under ``handle``, renewing its lease.
+
+    ``make()`` builds the initial data dict on first use; without it a
+    missing handle raises the state-lost ``KeyError``.
+    """
+    now = _now()
+    with _LOCK:
+        _sweep_locked(now)
+        e = _ENTRIES.get(handle)
+        if e is None:
+            if make is None:
+                raise _state_lost(handle)
+            e = StateEntry(handle=handle, data=make(), ttl_s=ttl_s,
+                           deadline=now + ttl_s)
+            _ENTRIES[handle] = e
+        e.ttl_s = ttl_s
+        e.deadline = now + ttl_s
+        e.touches += 1
+        return e.data
+
+
+def get(handle: str, *, ttl_s: float | None = None) -> dict[str, Any]:
+    """Fetch existing state, renewing its lease; ``KeyError`` if lost."""
+    now = _now()
+    with _LOCK:
+        _sweep_locked(now)
+        e = _ENTRIES.get(handle)
+        if e is None:
+            raise _state_lost(handle)
+        if ttl_s is not None:
+            e.ttl_s = ttl_s
+        e.deadline = now + e.ttl_s
+        e.touches += 1
+        return e.data
+
+
+def release(handle: str) -> bool:
+    """Drop a handle (idempotent); returns whether it was resident."""
+    with _LOCK:
+        return _ENTRIES.pop(handle, None) is not None
+
+
+def stats() -> dict[str, Any]:
+    now = _now()
+    with _LOCK:
+        _sweep_locked(now)
+        return {"handles": sorted(_ENTRIES),
+                "count": len(_ENTRIES),
+                "prefix_tokens": sum(
+                    int(e.data.get("prefix_tokens", 0))
+                    for e in _ENTRIES.values())}
+
+
+def control(op: str, data: dict[str, Any]) -> dict[str, Any]:
+    """The CONTROL-verb surface shared by the worker host and local
+    backends: lease renewal, release, and observability."""
+    if op == "state_lease":
+        handle = data["handle"]
+        ttl_s = float(data.get("ttl_s", DEFAULT_TTL_S))
+        try:
+            get(handle, ttl_s=ttl_s)
+            return {"ok": True, "known": True}
+        except KeyError:
+            return {"ok": True, "known": False}
+    if op == "state_release":
+        return {"ok": True, "released": release(data["handle"])}
+    if op == "state_stats":
+        return stats()
+    raise ValueError(f"unknown state op {op!r}")

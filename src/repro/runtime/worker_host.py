@@ -34,7 +34,8 @@ import traceback
 from ..core.codeship import thaw_function
 from ..core.function import RemoteFunction
 from ..core.manifest import Manifest, ManifestEntry
-from ..serialization import deserialize, wire
+from ..serialization import (ArtifactMissingError, deserialize,
+                             import_artifact_blob, wire)
 from .sandbox import SandboxHost
 
 
@@ -130,6 +131,8 @@ class WorkerHost:
             done = self.sandboxes.invoke(
                 bridge.entry, msg.function, msg.payload,
                 task_id=msg.task_id, attempt=msg.attempt)
+        except ArtifactMissingError as e:  # no shared fs: ask for a push
+            return wire.encode_artifact_missing(e.sha, e.path)
         except Exception as e:             # user code / lookup / deserialize
             return wire.encode_error(
                 e, traceback_text=traceback.format_exc(), retryable=False)
@@ -154,6 +157,25 @@ class WorkerHost:
                     self._bridges.pop(name, None)
             return wire.encode_control("drained",
                                        count=self.sandboxes.drain(name))
+        if msg.op in ("state_lease", "state_release", "state_stats"):
+            # worker-resident serving state (ISSUE 5): lease renewal and
+            # release for cache arenas, TTL-reclaimed so a dead client
+            # cannot pin worker memory
+            from . import state
+            try:
+                return wire.encode_control(msg.op, **state.control(
+                    msg.op, msg.data))
+            except Exception as e:
+                return wire.encode_error(e, retryable=False)
+        if msg.op == "artifact_put":
+            # remote artifact fetch: the client pushes a blob this worker
+            # reported missing; deposit it in the local store and ack
+            try:
+                path = import_artifact_blob(msg.data["sha"], msg.body)
+                return wire.encode_control("artifact_put", ok=True,
+                                           path=path)
+            except Exception as e:
+                return wire.encode_error(e, retryable=False)
         return wire.encode_error(etype="WireProtocolError", retryable=False,
                                  message=f"unknown control op {msg.op!r}")
 

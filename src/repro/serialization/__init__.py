@@ -1,8 +1,10 @@
 from .archive import (FORMATS, decode_binary, decode_binary_json,
                       decode_structured_json, deserialize, encode_binary,
                       encode_binary_json, encode_structured_json, serialize)
-from .artifacts import (ArtifactRef, load_artifact, prune_artifacts,
-                        put_artifact, release_artifact, resolve_artifacts)
+from .artifacts import (ArtifactMissingError, ArtifactRef,
+                        export_artifact_blob, import_artifact_blob,
+                        load_artifact, prune_artifacts, put_artifact,
+                        release_artifact, resolve_artifacts)
 from .pytree import flatten, register_custom, unflatten
 from . import wire
 
@@ -10,6 +12,7 @@ __all__ = [
     "FORMATS", "serialize", "deserialize", "encode_binary", "decode_binary",
     "encode_binary_json", "decode_binary_json", "encode_structured_json",
     "decode_structured_json", "flatten", "unflatten", "register_custom",
-    "wire", "ArtifactRef", "put_artifact", "load_artifact",
-    "resolve_artifacts", "prune_artifacts", "release_artifact",
+    "wire", "ArtifactRef", "ArtifactMissingError", "put_artifact",
+    "load_artifact", "resolve_artifacts", "prune_artifacts",
+    "release_artifact", "export_artifact_blob", "import_artifact_blob",
 ]

@@ -44,6 +44,23 @@ class ArtifactRef:
     sha: str
 
 
+class ArtifactMissingError(RuntimeError):
+    """A reference names a blob this process cannot find anywhere local.
+
+    On a worker this is the remote-fetch trigger: the worker host answers
+    with an ``ArtifactMissing`` wire error, the client transport pushes
+    the blob over a CONTROL frame and replays the invocation — so
+    ``url=``-external workers no longer require a shared filesystem.
+    """
+
+    def __init__(self, ref: "ArtifactRef"):
+        super().__init__(
+            f"artifact {ref.sha[:12]}… not found (looked in the process "
+            f"cache, {ref.path!r}, and the local store)")
+        self.sha = ref.sha
+        self.path = ref.path
+
+
 _CACHE: dict[str, Any] = {}
 _CACHE_LOCK = threading.Lock()
 # refs produced by THIS process that are still live (put minus release),
@@ -143,14 +160,26 @@ def prune_artifacts(keep: Any = (), directory: str | None = None,
 
 
 def load_artifact(ref: ArtifactRef) -> Any:
-    """Resolve a reference: process-level cache, then the store file
-    (sha-verified)."""
+    """Resolve a reference: process-level cache, then the referenced store
+    file, then the *local* store directory (where a remote fetch deposits
+    blobs when the referenced path was another machine's).  All file loads
+    are sha-verified.  A blob found nowhere raises
+    :class:`ArtifactMissingError` — the remote-fetch trigger."""
     with _CACHE_LOCK:
         if ref.sha in _CACHE:
             return _CACHE[ref.sha]
     from .archive import deserialize
-    with open(ref.path, "rb") as f:
-        blob = f.read()
+    blob = None
+    local = os.path.join(default_artifact_dir(), f"{ref.sha}.bin")
+    for path in (ref.path, local):
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+            break
+        except OSError:
+            continue
+    if blob is None:
+        raise ArtifactMissingError(ref)
     sha = hashlib.sha256(blob).hexdigest()
     if sha != ref.sha:
         raise ValueError(
@@ -160,6 +189,50 @@ def load_artifact(ref: ArtifactRef) -> Any:
     with _CACHE_LOCK:
         _CACHE.setdefault(ref.sha, value)
     return _CACHE[ref.sha]
+
+
+def export_artifact_blob(sha: str, path: str = "") -> bytes | None:
+    """Client side of remote fetch: the raw store bytes for ``sha`` — from
+    the referenced file, the local store, or (for a pruned file whose
+    value is still live here) by re-serializing the cached value.  None if
+    this process has no way to produce them."""
+    from .archive import serialize
+    local = os.path.join(default_artifact_dir(), f"{sha}.bin")
+    for p in (path, local):
+        if not p:
+            continue
+        try:
+            with open(p, "rb") as f:
+                blob = f.read()
+        except OSError:
+            continue
+        if hashlib.sha256(blob).hexdigest() == sha:
+            return blob
+    with _CACHE_LOCK:
+        value = _CACHE.get(sha)
+    if value is None:
+        return None
+    blob = serialize(value)
+    return blob if hashlib.sha256(blob).hexdigest() == sha else None
+
+
+def import_artifact_blob(sha: str, blob: bytes,
+                         directory: str | None = None) -> str:
+    """Worker side of remote fetch: verify and deposit pushed bytes into
+    the local store, where :func:`load_artifact` finds them on replay."""
+    got = hashlib.sha256(blob).hexdigest()
+    if got != sha:
+        raise ValueError(f"pushed artifact hash {got[:12]}… does not match "
+                         f"announced {sha[:12]}…")
+    d = directory or default_artifact_dir()
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{sha}.bin")
+    if not os.path.exists(path):
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+    return path
 
 
 def resolve_artifacts(tree: Any) -> Any:

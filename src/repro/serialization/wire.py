@@ -24,7 +24,11 @@ Kinds:
                 ``WorkerCrash``; ``False`` marks a user-code error, which
                 is surfaced (with the original remote traceback text)
                 and never retried.
-* ``CONTROL`` — header {op, ...}; worker-management verbs (ping, drain).
+* ``CONTROL`` — header {op, ...}; worker-management verbs (ping, drain,
+                state_lease / state_release / state_stats for worker-
+                resident serving state, artifact_put for remote artifact
+                fetch).  A CONTROL frame may carry a body (the artifact
+                blob for ``artifact_put``); older verbs ignore it.
 
 Malformed frames raise :class:`WireProtocolError` — a transport must turn
 undecodable bytes into a visible invocation error, never a hung future.
@@ -83,8 +87,37 @@ class ErrorReply:
 
 @dataclass
 class ControlRequest:
-    op: str                        # "ping" | "drain" | "shutdown"
+    op: str                        # "ping" | "drain" | "state_*" | ...
     data: dict[str, Any] = field(default_factory=dict)
+    body: bytes = b""              # op-specific blob (artifact_put)
+
+
+# Error etype for a worker that cannot resolve an ArtifactRef locally; the
+# client transports special-case it into a push-and-replay (remote fetch)
+# instead of surfacing it.
+ARTIFACT_MISSING = "ArtifactMissing"
+
+
+def encode_artifact_missing(sha: str, path: str) -> bytes:
+    return encode_error(etype=ARTIFACT_MISSING, retryable=False,
+                        message=json.dumps({"sha": sha, "path": path}))
+
+
+def decode_artifact_missing(reply: bytes) -> tuple[str, str] | None:
+    """``(sha, path)`` if ``reply`` is an ArtifactMissing error, else None
+    (including when the bytes are not a decodable frame at all — the
+    ordinary completion path owns that diagnosis)."""
+    try:
+        msg = decode(reply)
+    except WireProtocolError:
+        return None
+    if isinstance(msg, ErrorReply) and msg.etype == ARTIFACT_MISSING:
+        try:
+            d = json.loads(msg.message)
+            return str(d["sha"]), str(d.get("path", ""))
+        except (json.JSONDecodeError, KeyError, TypeError):
+            return None
+    return None
 
 
 def _frame(kind: int, header: dict, body: bytes = b"") -> bytes:
@@ -118,8 +151,8 @@ def encode_error(err: BaseException | None = None, *, etype: str | None = None,
                           "retryable": retryable})
 
 
-def encode_control(op: str, **data: Any) -> bytes:
-    return _frame(CONTROL, {"op": op, "data": data})
+def encode_control(op: str, body: bytes = b"", **data: Any) -> bytes:
+    return _frame(CONTROL, {"op": op, "data": data}, body)
 
 
 def decode(data: bytes) -> InvokeRequest | ResultReply | ErrorReply | ControlRequest:
@@ -157,7 +190,7 @@ def decode(data: bytes) -> InvokeRequest | ResultReply | ErrorReply | ControlReq
                               retryable=header.get("retryable", False))
         if kind == CONTROL:
             return ControlRequest(op=header["op"],
-                                  data=header.get("data", {}))
+                                  data=header.get("data", {}), body=body)
     except KeyError as e:
         raise WireProtocolError(f"frame kind {kind} missing field {e}") from None
     raise WireProtocolError(f"unknown frame kind {kind}")

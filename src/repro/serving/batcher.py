@@ -1,32 +1,37 @@
-"""Continuous batching for :class:`~repro.runtime.server.LMServer` (ISSUE 3).
+"""Continuous batching for :class:`~repro.runtime.server.LMServer`.
 
 Wave mode pre-partitions requests into fixed batches and fork-joins them —
 fine for offline bulk, wrong for traffic: a request arriving just after a
 wave sealed waits a full wave, and every member of a wave decodes as far
 as its longest neighbour.  The :class:`ContinuousBatcher` replaces the
-fixed partition with *slot-based admission*:
+fixed partition with slot-based admission, at one of two granularities:
 
-* up to ``slots`` decode batches are in flight at once; the moment one
-  completes, its slot is refilled from whatever has arrived since;
-* a forming batch seals when it reaches ``max_batch`` requests or has
-  waited ``max_wait_ms`` since its head request arrived — the classic
-  throughput/latency knob pair;
-* queued requests are grouped by decode-length bucket
-  (:func:`~repro.runtime.server.decode_bucket`), so short generations are
-  not packed behind long ones and only decode as far as they need.
+* **batch-level** (the PR 3/4 path, any backend): up to ``slots`` decode
+  batches in flight; a batch seals on ``max_batch``/``max_wait_ms``,
+  grouped by decode-length bucket, and dispatches through the same
+  ``submit_wave`` / ``unpack_wave`` core as wave mode.  Admission happens
+  *between* batches — each batch re-runs prefill and rebuilds its KV
+  cache from scratch.
+* **iteration-level** (ISSUE 5, backends with ``resident_state``): one
+  :class:`~repro.runtime.engine.EngineClient` per slot owns a worker-
+  resident cache arena of ``max_batch`` rows.  Arriving prompts are
+  prefilled into free rows (or served from the worker's prompt-prefix
+  cache and skipped entirely), decode advances every live row in
+  ``quantum``-step chunks, rows evict the moment they hit their
+  ``max_new`` (no batch-tail wait), and freed rows are refilled at the
+  next chunk boundary.  The KV cache never crosses the wire; each chunk
+  ships a handle and returns token ids.  TTFT is the prefill round-trip,
+  not the batch tail.
 
-Batches dispatch through the same ``submit_wave`` / ``unpack_wave`` core
-as wave mode — same wire payloads, same per-request pro-rata billing —
-so the two schedulers differ *only* in admission policy: packing is pad-
-masked end to end (``pack_prompts`` lengths → prefill/decode masks), so a
-request decodes to the same greedy tokens whichever scheduler ran it and
-whatever ragged company it was batched with.
-
-Granularity note: each batch is one stateless serverless task, so
-admission happens between batches (a request cannot join a decode loop
-already running on a worker).  That is the serverless analogue of
-iteration-level continuous batching: the admission quantum is one task,
-not one decode step.
+Which one runs is automatic (``iteration_level=None``): iteration-level
+when the backend keeps worker-resident state (``inline``/``threads``
+process-local; ``processes``/``http``/``http-aio`` via affinity-pinned
+workers and CONTROL state leases) *and* the model family supports slot
+arenas; the batch-level path otherwise (e.g. ``sim-aws``, encdec).
+Requests that cannot fit an arena (prompt above ``prompt_cap``) fall back
+to a solo wave per request.  Both granularities are pad-masked end to
+end, so a request decodes to the same greedy tokens whichever scheduler
+ran it and whatever ragged company it kept.
 """
 from __future__ import annotations
 
@@ -43,25 +48,58 @@ from .aio import await_invocation
 @dataclass
 class BatcherStats:
     """Scheduler-side accounting (client latency is measured by callers)."""
+    mode: str = "batch"              # "batch" | "iteration"
     requests: int = 0
-    batches: int = 0
-    occupancy_sum: int = 0           # sum of batch sizes
-    decode_steps: int = 0            # sum of per-batch decode bucket lengths
+    batches: int = 0                 # batch-level: dispatched batches
+    occupancy_sum: int = 0           # sum of batch sizes / chunk occupancy
+    decode_steps: int = 0            # batch: bucket lengths; iter: real steps
     sealed_full: int = 0             # batches sealed by max_batch
     sealed_wait: int = 0             # batches sealed by max_wait
     bucket_histogram: dict = field(default_factory=dict)
+    # iteration-level accounting
+    admission_groups: int = 0        # prefill round-trips
+    decode_chunks: int = 0           # decode round-trips
+    prefix_hits: int = 0             # rows whose prefill was skipped
+    prefix_misses: int = 0
+    wave_fallbacks: int = 0          # requests too big for the arena
+    state_resets: int = 0            # arenas rebuilt after state loss
 
     @property
     def mean_batch(self) -> float:
-        return self.occupancy_sum / self.batches if self.batches else 0.0
+        n = self.batches or self.decode_chunks
+        return self.occupancy_sum / n if n else 0.0
 
     def summary(self) -> dict:
-        return {"requests": self.requests, "batches": self.batches,
-                "mean_batch": round(self.mean_batch, 2),
-                "decode_steps": self.decode_steps,
-                "sealed_full": self.sealed_full,
-                "sealed_wait": self.sealed_wait,
-                "buckets": dict(sorted(self.bucket_histogram.items()))}
+        out = {"mode": self.mode, "requests": self.requests,
+               "batches": self.batches,
+               "mean_batch": round(self.mean_batch, 2),
+               "decode_steps": self.decode_steps,
+               "sealed_full": self.sealed_full,
+               "sealed_wait": self.sealed_wait,
+               "buckets": dict(sorted(self.bucket_histogram.items()))}
+        if self.mode == "iteration":
+            out.update({"admission_groups": self.admission_groups,
+                        "decode_chunks": self.decode_chunks,
+                        "prefix_hits": self.prefix_hits,
+                        "prefix_misses": self.prefix_misses,
+                        "wave_fallbacks": self.wave_fallbacks,
+                        "state_resets": self.state_resets})
+        return out
+
+
+@dataclass
+class _LiveRow:
+    """One occupied arena slot (iteration-level scheduler bookkeeping)."""
+    request: Request
+    fut: asyncio.Future
+    t_arrival: float
+    tokens: list = field(default_factory=list)
+    ttft_ms: float = 0.0
+    cost_gb_s: float = 0.0
+
+    @property
+    def remaining(self) -> int:
+        return self.request.max_new - len(self.tokens)
 
 
 class ContinuousBatcher:
@@ -74,41 +112,81 @@ class ContinuousBatcher:
             completion = await batcher.submit(Request(prompt, max_new=16))
 
     ``submit`` may be called from any number of concurrent tasks; each
-    returns when *its* request's batch completes.  Cancelling the awaiting
-    task removes a still-queued request from the scheduler (a request
-    already packed into a dispatched batch runs to completion and is
-    dropped at unpack).
+    returns when *its* request completes.  Cancelling the awaiting task
+    removes a still-queued request from the scheduler (a request already
+    admitted runs on; its slot is reclaimed at the next chunk boundary and
+    its result dropped).
+
+    Iteration-level knobs (ignored on the batch-level path): ``quantum``
+    decode steps per chunk (admission/eviction granularity), ``prompt_cap``
+    longest admissible prompt (longer ones fall back to a solo wave),
+    ``prefix_tokens`` budget of the worker-resident prompt-prefix cache
+    (LRU by token count; 0 disables), ``arena_cap`` cache capacity
+    override, ``lease_ttl_s`` the worker-side state lease.
     """
 
     def __init__(self, server: LMServer, *, max_batch: int = 8,
-                 slots: int = 2, max_wait_ms: float = 10.0):
+                 slots: int = 2, max_wait_ms: float = 10.0,
+                 iteration_level: bool | None = None, quantum: int = 8,
+                 prompt_cap: int = 64, prefix_tokens: int = 1 << 16,
+                 arena_cap: int | None = None, lease_ttl_s: float = 60.0):
         self._server = server
         self._max_batch = max(1, max_batch)
         self._n_slots = max(1, slots)
         self._max_wait_s = max(0.0, max_wait_ms) / 1000.0
+        self._iteration = iteration_level
+        self._quantum = max(1, quantum)
+        self._prompt_cap = max(1, prompt_cap)
+        self._prefix_tokens = max(0, prefix_tokens)
+        self._arena_cap = arena_cap
+        self._lease_ttl_s = lease_ttl_s
         self._queue: deque[tuple[Request, asyncio.Future]] = deque()
         self._slots: asyncio.Semaphore | None = None
         self._arrived: asyncio.Event | None = None
         self._scheduler: asyncio.Task | None = None
+        self._loops: list[asyncio.Task] = []
         self._batch_tasks: set[asyncio.Task] = set()
         self._closed = False
         # ONE pack/unpack thread, deliberately: payload serialization is
         # GIL-bound python — fanning it across executor threads only adds
         # contention that stretches every in-flight roundtrip.  Transport
-        # IO still overlaps across all slots.
+        # IO still overlaps across all slots (iteration-level submits
+        # return futures immediately; only packing serializes here).
         self._cpu = ThreadPoolExecutor(max_workers=1,
                                        thread_name_prefix="repro-batcher")
         self.stats = BatcherStats()
 
     # ------------------------------------------------------------ lifecycle
+    def _resolve_mode(self) -> bool:
+        if self._iteration is not False:
+            # auto OR forced-on: both require a resident-state backend and
+            # an arena-capable family — a forced-on batcher on e.g. encdec
+            # demotes to batch-level rather than wedging every submit
+            # behind an engine that cannot be constructed
+            from ..models.api import arena_supported
+            caps = self._server.session.backend.capabilities
+            self._iteration = bool(getattr(caps, "resident_state", False)) \
+                and arena_supported(self._server.cfg)
+        return bool(self._iteration)
+
     def _ensure_running(self) -> None:
-        if self._scheduler is None or self._scheduler.done():
-            if self._closed:
-                raise RuntimeError("batcher is closed")
-            self._slots = self._slots or asyncio.Semaphore(self._n_slots)
-            self._arrived = self._arrived or asyncio.Event()
-            self._scheduler = asyncio.get_running_loop().create_task(
-                self._schedule())
+        running = (self._loops if self._resolve_mode()
+                   else (self._scheduler is not None
+                         and not self._scheduler.done()))
+        if running:
+            return
+        if self._closed:
+            raise RuntimeError("batcher is closed")
+        loop = asyncio.get_running_loop()
+        self._slots = self._slots or asyncio.Semaphore(self._n_slots)
+        self._arrived = self._arrived or asyncio.Event()
+        if self._iteration:
+            self.stats.mode = "iteration"
+            self._loops = [loop.create_task(self._engine_loop(i))
+                           for i in range(self._n_slots)]
+        else:
+            self.stats.mode = "batch"
+            self._scheduler = loop.create_task(self._schedule())
 
     async def __aenter__(self) -> "ContinuousBatcher":
         self._ensure_running()
@@ -118,13 +196,15 @@ class ContinuousBatcher:
         await self.aclose()
 
     async def aclose(self) -> None:
-        """Stop admitting, let in-flight batches finish, fail queued
-        requests that never made it into a batch."""
+        """Stop admitting, let in-flight work finish, fail queued requests
+        that never made it into a batch/arena."""
         self._closed = True
         if self._arrived is not None:
             self._arrived.set()
         if self._scheduler is not None:
             await self._scheduler
+        if self._loops:
+            await asyncio.gather(*self._loops, return_exceptions=True)
         if self._batch_tasks:
             await asyncio.gather(*self._batch_tasks, return_exceptions=True)
         while self._queue:
@@ -136,7 +216,7 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------- clients
     async def submit(self, request: Request) -> Completion:
-        """Queue one request; resolves when its decode batch completes."""
+        """Queue one request; resolves when its decode completes."""
         if self._closed:
             raise RuntimeError("batcher is closed")
         self._ensure_running()
@@ -149,11 +229,17 @@ class ContinuousBatcher:
     def queued(self) -> int:
         return sum(1 for _, f in self._queue if not f.done())
 
+    @property
+    def iteration_level(self) -> bool:
+        """Which granularity this batcher runs at (resolved lazily)."""
+        return self._resolve_mode()
+
     # ----------------------------------------------------------- scheduler
     def _prune(self) -> None:
         while self._queue and self._queue[0][1].done():
             self._queue.popleft()            # cancelled while queued
 
+    # ======================================================== batch-level =
     def _batch_ready(self) -> bool:
         """A batch can seal without waiting: the head's bucket alone fills
         it, or the whole queue does (top-up keeps the slot busy)."""
@@ -240,7 +326,8 @@ class ContinuousBatcher:
             task.add_done_callback(self._batch_tasks.discard)
 
     async def _run_batch(self,
-                         batch: list[tuple[Request, asyncio.Future]]) -> None:
+                         batch: list[tuple[Request, asyncio.Future]],
+                         *, hold_slot: bool = True) -> None:
         loop = asyncio.get_running_loop()
         requests = [r for r, _ in batch]
         bucket = decode_bucket(max(r.max_new for r in requests))
@@ -271,22 +358,194 @@ class ContinuousBatcher:
             self.stats.decode_steps += bucket
             self.stats.bucket_histogram[bucket] = \
                 self.stats.bucket_histogram.get(bucket, 0) + 1
-            self._slots.release()
+            if hold_slot:
+                self._slots.release()
+
+    # ==================================================== iteration-level =
+    def _fallback_wave(self, item: tuple[Request, asyncio.Future]) -> None:
+        """A request the arena cannot hold (prompt above ``prompt_cap``):
+        serve it as a solo wave so it is never silently starved."""
+        self.stats.wave_fallbacks += 1
+        task = asyncio.get_running_loop().create_task(
+            self._run_batch([item], hold_slot=False))
+        self._batch_tasks.add(task)
+        task.add_done_callback(self._batch_tasks.discard)
+
+    def _complete_row(self, slot: int, row: _LiveRow, now: float) -> None:
+        if not row.fut.done():
+            row.fut.set_result(Completion(
+                tokens=[int(t) for t in row.tokens[:row.request.max_new]],
+                latency_ms=(now - row.t_arrival) * 1000.0,
+                ttft_ms=row.ttft_ms, cost_gb_s=row.cost_gb_s))
+        self.stats.requests += 1
+
+    async def _engine_loop(self, index: int) -> None:
+        """One worker-resident arena, driven step-chunk by step-chunk:
+        admit into free rows, decode ``k`` steps, evict finished rows,
+        repeat.  Admission and eviction both happen at chunk boundaries —
+        the iteration-level quantum."""
+        from ..runtime.engine import EngineClient, is_state_lost
+        loop = asyncio.get_running_loop()
+        try:
+            # affinity = loop index, deterministically: a warmup pass and
+            # the run it warms land on the SAME workers (a global counter
+            # would re-home every fresh batcher onto cold slots)
+            engine = EngineClient(
+                self._server, rows=self._max_batch,
+                prompt_cap=self._prompt_cap, quantum=self._quantum,
+                prefix_tokens=self._prefix_tokens, ttl_s=self._lease_ttl_s,
+                cap=self._arena_cap, affinity=index)
+        except BaseException as e:
+            # a loop that dies before serving must not leave submitters
+            # parked forever: fail whatever is queued and surface the error
+            while self._queue:
+                _, fut = self._queue.popleft()
+                if not fut.done():
+                    fut.set_exception(
+                        e if isinstance(e, Exception)
+                        else RuntimeError(f"engine init failed: {e!r}"))
+            raise
+        live: dict[int, _LiveRow] = {}
+        free: deque[int] = deque(range(engine.rows))
+        hits_seen = misses_seen = 0
+
+        def lose_state(err: BaseException) -> None:
+            for slot, row in live.items():
+                if not row.fut.done():
+                    row.fut.set_exception(
+                        err if isinstance(err, Exception)
+                        else RuntimeError(f"engine failed: {err!r}"))
+                self.stats.requests += 1
+                free.append(slot)
+            live.clear()
+            engine.reset()
+            self.stats.state_resets += 1
+
+        try:
+            while True:
+                self._prune()
+                # ---------------------------------- admission (every chunk)
+                take: list[tuple[int, Request, asyncio.Future]] = []
+                while free and self._queue:
+                    r, fut = self._queue.popleft()
+                    if fut.done():
+                        continue
+                    if not engine.fits(len(r.prompt), r.max_new):
+                        self._fallback_wave((r, fut))
+                        continue
+                    take.append((free.popleft(), r, fut))
+                if take:
+                    t_sent = loop.time()
+                    try:
+                        inv_fut, order = await loop.run_in_executor(
+                            self._cpu, engine.submit_admit,
+                            [(slot, r.prompt) for slot, r, _ in take],
+                            # an arena holding live rows must already
+                            # exist: never silently recreate an expired
+                            # lease under them
+                            not live)
+                        reply = engine.observe(await await_invocation(inv_fut))
+                    except BaseException as e:
+                        for slot, _, fut in take:
+                            free.append(slot)
+                            if not fut.done():
+                                fut.set_exception(
+                                    e if isinstance(e, Exception) else
+                                    RuntimeError(f"admission failed: {e!r}"))
+                            self.stats.requests += 1
+                        if is_state_lost(e):
+                            lose_state(e)
+                        if isinstance(e, asyncio.CancelledError):
+                            raise
+                        continue
+                    now = loop.time()
+                    rec = inv_fut.record
+                    share = (rec.billed_gb_s / len(take)) if rec else 0.0
+                    by_slot = {slot: (r, fut) for slot, r, fut in take}
+                    for slot, t0 in zip(order, reply["first"]):
+                        r, fut = by_slot[slot]
+                        row = _LiveRow(request=r, fut=fut, t_arrival=t_sent,
+                                       tokens=[int(t0)],
+                                       ttft_ms=(now - t_sent) * 1000.0,
+                                       cost_gb_s=share)
+                        live[slot] = row
+                    self.stats.admission_groups += 1
+                # fold this engine's prefix-mirror counters into the shared
+                # stats as deltas (several engine loops share one stats)
+                self.stats.prefix_hits += engine.prefix_hits - hits_seen
+                self.stats.prefix_misses += engine.prefix_misses - misses_seen
+                hits_seen = engine.prefix_hits
+                misses_seen = engine.prefix_misses
+
+                # -------------------------------------- completion sweep
+                now = loop.time()
+                for slot in list(live):
+                    row = live[slot]
+                    if row.fut.done() or row.remaining <= 0:
+                        self._complete_row(slot, row, now)
+                        del live[slot]
+                        free.append(slot)
+
+                # ------------------------------------------ idle / close
+                if not live:
+                    if self._queue:
+                        continue            # free slots exist: admit again
+                    if self._closed:
+                        return
+                    self._arrived.clear()
+                    if self._queue or self._closed:
+                        continue
+                    await self._arrived.wait()
+                    continue
+
+                # -------------------------------------------- decode chunk
+                k = engine.choose_k(max(row.remaining
+                                        for row in live.values()))
+                # free every non-live slot, not just freshly-evicted ones:
+                # an idle freed slot whose start stayed at its freeze-time
+                # value would pin arena compaction forever
+                idle = tuple(s for s in range(engine.rows) if s not in live)
+                try:
+                    inv_fut = await loop.run_in_executor(
+                        self._cpu, engine.submit_step, k, idle)
+                    reply = engine.observe(await await_invocation(inv_fut))
+                except BaseException as e:
+                    lose_state(e)
+                    if isinstance(e, asyncio.CancelledError):
+                        raise
+                    continue
+                toks = reply["tokens"]
+                rec = inv_fut.record
+                share = (rec.billed_gb_s / len(live)) if rec else 0.0
+                for slot, row in live.items():
+                    need = row.remaining
+                    if need > 0:
+                        row.tokens.extend(int(t) for t in toks[slot][:need])
+                    row.cost_gb_s += share
+                self.stats.decode_chunks += 1
+                self.stats.decode_steps += k
+                self.stats.occupancy_sum += len(live)
+        finally:
+            await loop.run_in_executor(self._cpu, engine.close)
 
 
 def run_continuous(server: LMServer, requests: Sequence[Request], *,
                    concurrency: int = 16, max_batch: int = 8, slots: int = 2,
-                   max_wait_ms: float = 10.0) -> list[Completion]:
+                   max_wait_ms: float = 10.0,
+                   **batcher_kwargs) -> list[Completion]:
     """Closed-loop convenience driver: feed ``requests`` through a
     :class:`ContinuousBatcher` with at most ``concurrency`` outstanding;
     returns completions in request order.  This is what ``--mode
-    continuous`` in the serve launcher/example runs.
+    continuous`` in the serve launcher/example runs.  Extra keyword
+    arguments (``iteration_level``, ``quantum``, ``prefix_tokens``, …)
+    pass through to the batcher.
     """
     async def go() -> list[Completion]:
         sem = asyncio.Semaphore(max(1, concurrency))
         async with ContinuousBatcher(server, max_batch=max_batch,
                                      slots=slots,
-                                     max_wait_ms=max_wait_ms) as batcher:
+                                     max_wait_ms=max_wait_ms,
+                                     **batcher_kwargs) as batcher:
             async def one(r: Request) -> Completion:
                 async with sem:
                     return await batcher.submit(r)

@@ -167,9 +167,14 @@ class AioHttpBackend(HttpBackend):
     ``AsyncSession`` on top never blocks a thread at all.
     """
 
+    # resident_state: one worker process serves every connection, so a
+    # state handle is reachable on any of them (affinity is trivially
+    # satisfied — same WorkerHost) and state CONTROL verbs ride the
+    # inherited sync path
     capabilities = BackendCapabilities(concurrent=True, warm_reuse=True,
                                        measures_latency=True,
-                                       cross_process=True)
+                                       cross_process=True,
+                                       resident_state=True)
 
     def __init__(self, *, n_connections: int | None = None,
                  streams_per_connection: int = 100, os_threads: int = 16,
@@ -243,6 +248,8 @@ class AioHttpBackend(HttpBackend):
                 client = await self._ensure_client()
                 t0 = time.perf_counter()
                 reply = await client.request("/invoke", request)
+                reply = await self._push_missing_artifacts(client, request,
+                                                           reply)
                 rec.modeled_latency_ms = (time.perf_counter() - t0) * 1000.0
                 rec.latency_measured = True
             except Exception as e:
@@ -262,6 +269,33 @@ class AioHttpBackend(HttpBackend):
         finally:
             with self._pending_lock:
                 self._pending -= 1
+
+    async def _push_missing_artifacts(self, client: AioHttpClient,
+                                      request: bytes, reply: bytes) -> bytes:
+        """Async twin of the sync transports' remote artifact fetch: push
+        the blob the worker reported missing, replay the invocation."""
+        from ..serialization.artifacts import export_artifact_blob
+        loop = asyncio.get_running_loop()
+        served: set[str] = set()
+        while True:
+            miss = wire.decode_artifact_missing(reply)
+            if miss is None:
+                return reply
+            sha, path = miss
+            if sha in served:
+                return reply
+            blob = await loop.run_in_executor(
+                None, export_artifact_blob, sha, path)
+            if blob is None:
+                return reply
+            ack = wire.decode(await client.request(
+                "/invoke", wire.encode_control("artifact_put", body=blob,
+                                               sha=sha)))
+            if not (isinstance(ack, wire.ControlRequest)
+                    and ack.data.get("ok")):
+                return reply
+            served.add(sha)
+            reply = await client.request("/invoke", request)
 
     # ------------------------------------------------------------- control
     def drain_warm(self, function_name: str | None = None) -> int:

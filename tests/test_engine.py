@@ -1,0 +1,335 @@
+"""Iteration-level serving engine (ISSUE 5): slot-arena primitives, the
+worker-resident state registry (leases, TTL reclaim), the prompt-prefix
+cache, worker pinning, and the composition-invariance matrix — tokens
+from iteration-level admission (prefix hits included) must be
+bit-identical to solo wave decode, every family, inline and processes."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_ragged_requests, solo_reference
+from repro.cloud import Session
+from repro.runtime import state
+from repro.runtime.engine import EngineClient, is_state_lost, prefix_key
+from repro.runtime.server import LMServer, Request
+from repro.serving import ContinuousBatcher, run_continuous
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+
+    cfg = get_smoke("smollm-360m")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(autouse=True)
+def _clean_state_registry():
+    yield
+    for h in list(state.stats()["handles"]):
+        state.release(h)
+
+
+# ------------------------------------------------------- state registry ----
+
+def test_state_lease_create_touch_release():
+    made = []
+    data = state.lease("h1", ttl_s=30.0, make=lambda: made.append(1) or
+                       {"x": 1})
+    assert data == {"x": 1} and made == [1]
+    # second lease returns the same dict, does not rebuild
+    assert state.lease("h1", ttl_s=30.0, make=lambda: {"x": 2})["x"] == 1
+    assert state.get("h1")["x"] == 1
+    assert state.release("h1") is True
+    assert state.release("h1") is False          # idempotent
+    with pytest.raises(KeyError, match="state handle"):
+        state.get("h1")
+
+
+def test_state_ttl_reclaims_expired_leases(monkeypatch):
+    clock = [100.0]
+    monkeypatch.setattr(state, "_now", lambda: clock[0])
+    state.lease("short", ttl_s=5.0, make=dict)
+    state.lease("long", ttl_s=500.0, make=dict)
+    clock[0] += 10.0                             # short expires, long lives
+    assert state.sweep() == ["short"]
+    assert state.stats()["handles"] == ["long"]
+    with pytest.raises(KeyError, match="state handle"):
+        state.get("short")
+    # touching renews: long survives another near-expiry window
+    clock[0] += 490.0
+    state.get("long")
+    clock[0] += 490.0
+    assert state.stats()["handles"] == ["long"]
+
+
+def test_state_control_verbs():
+    state.lease("c1", ttl_s=60.0, make=dict)
+    assert state.control("state_lease", {"handle": "c1"}) == \
+        {"ok": True, "known": True}
+    assert state.control("state_lease", {"handle": "nope"}) == \
+        {"ok": True, "known": False}
+    assert state.control("state_stats", {})["count"] >= 1
+    assert state.control("state_release", {"handle": "c1"})["released"]
+    with pytest.raises(ValueError, match="unknown state op"):
+        state.control("state_nuke", {})
+
+
+# --------------------------------------------------------- prefix hashing ----
+
+def test_prefix_key_no_collision_on_pad_id_prompts():
+    """[pad, x, y] and [x, y] pack to identical left-padded rows; the
+    prefix key hashes the raw tokens + length, so they must differ."""
+    pad = 0
+    a = [pad, 7, 9]
+    b = [7, 9]
+    assert prefix_key(a) != prefix_key(b)
+    assert prefix_key([pad, pad, 3]) != prefix_key([pad, 3]) != \
+        prefix_key([3])
+    assert prefix_key(a) == prefix_key(list(a))  # deterministic
+
+
+# ------------------------------------------------------ arena primitives ----
+
+def test_arena_insert_extract_free_roundtrip(lm_setup):
+    """Inserting a prefilled row into an arena slot reproduces exactly the
+    row's cache content at the cursor-aligned offset, and freeing masks
+    the row (start jumps to the cursor)."""
+    from repro.models import build_model
+    from repro.models.api import (arena_init_cache, cache_extract_rows,
+                                  cache_free_rows, cache_insert_rows)
+    from repro.runtime.server import pack_prompts
+
+    cfg, params = lm_setup
+    model = build_model(cfg)
+    prompts = [[5, 6, 7], [1, 2, 3, 4, 5]]
+    tokens, lengths = pack_prompts(prompts, pad=cfg.pad_id)
+    _, cache = model.prefill(params, {"tokens": jnp.asarray(tokens),
+                                      "lengths": jnp.asarray(lengths)})
+    width = tokens.shape[1]
+    cursor = 16
+    arena = arena_init_cache(cfg, batch=4, cap=64, cursor=cursor)
+    rows = cache_extract_rows(cfg, cache, (0, 1))
+    arena = cache_insert_rows(cfg, arena, rows, (2, 0), lengths[:2],
+                              width=width)
+    # start = cursor - length, per inserted slot
+    assert int(arena["start"][2]) == cursor - 3
+    assert int(arena["start"][0]) == cursor - 5
+    assert int(arena["start"][1]) == cursor          # untouched: fully masked
+    # content: the row's keys land so its last token sits at cursor-1
+    np.testing.assert_array_equal(
+        np.asarray(arena["k"][:, 2, cursor - width:cursor]),
+        np.asarray(cache["k"][:, 0]))
+    freed = cache_free_rows(cfg, arena, (2,))
+    assert int(freed["start"][2]) == int(arena["idx"])
+
+
+def test_arena_insert_rejects_overwide_rows(lm_setup):
+    from repro.models import build_model
+    from repro.models.api import (arena_init_cache, cache_extract_rows,
+                                  cache_insert_rows)
+
+    cfg, params = lm_setup
+    model = build_model(cfg)
+    toks = jnp.asarray(np.arange(1, 33, dtype=np.int32)[None, :])
+    _, cache = model.prefill(params, {"tokens": toks,
+                                      "lengths": jnp.asarray([32])})
+    arena = arena_init_cache(cfg, batch=2, cap=64, cursor=16)
+    rows = cache_extract_rows(cfg, cache, (0,))
+    with pytest.raises(ValueError, match="cursor"):
+        cache_insert_rows(cfg, arena, rows, (0,), (32,), width=32)
+
+
+def test_grow_cache_rounds_to_pow2_bucket(lm_setup):
+    from repro.models import build_model
+    from repro.models.api import grow_cache
+
+    cfg, params = lm_setup
+    model = build_model(cfg)
+    toks = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]])
+    _, cache = model.prefill(params, {"tokens": toks,
+                                      "lengths": jnp.asarray([8])})
+    grown = grow_cache(cfg, cache, 8 + 3)        # exact fit would be 11
+    assert grown["k"].shape[2] == 16             # pow2 bucket
+    assert grow_cache(cfg, cache, 11, bucket=False)["k"].shape[2] == 11
+
+
+# -------------------------------------------------------- engine client ----
+
+def test_engine_prefix_mirror_lru_by_token_count(lm_setup):
+    cfg, params = lm_setup
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        eng = EngineClient(server, rows=4, prompt_cap=16, prefix_tokens=8)
+        p1, p2, p3 = [1, 2, 3], [4, 5, 6], [7, 8, 9]
+        hits, misses, store, evict = eng._prefix_plan([p1, p2])
+        assert not hits and store == [prefix_key(p1), prefix_key(p2)]
+        # a repeat is a hit AND refreshes p1's LRU position
+        hits, _, _, _ = eng._prefix_plan([p1])
+        assert hits == [(0, prefix_key(p1))]
+        # p3 (3 tokens) overflows the 8-token budget: LRU (now p2) evicts
+        _, _, store, evict = eng._prefix_plan([p3])
+        assert evict == [prefix_key(p2)] and store == [prefix_key(p3)]
+        hits, misses, _, _ = eng._prefix_plan([p2])
+        assert not hits and misses == [0]        # p2 was evicted: miss again
+        eng.close()
+        server.close(prune=False)
+
+
+def test_engine_prefix_plan_cancels_same_group_store_evict(lm_setup):
+    """A key stored and LRU-evicted within ONE plan must cancel out
+    client-side (store slot nulled, no evict emitted): the worker applies
+    evicts before stores, so emitting both would leak the entry past the
+    budget forever."""
+    cfg, params = lm_setup
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        eng = EngineClient(server, rows=4, prompt_cap=32, prefix_tokens=32)
+        a = list(range(1, 21))                   # 20 tokens
+        b = list(range(30, 50))                  # 20 tokens
+        hits, misses, store, evict = eng._prefix_plan([a, b])
+        # a was stored then evicted to make room for b — both commands
+        # must vanish, leaving only b's store
+        assert store == [None, prefix_key(b)]
+        assert evict == []
+        eng.close()
+        server.close(prune=False)
+
+
+def test_engine_state_lost_detection():
+    assert is_state_lost(KeyError("state handle 'x' not resident"))
+    assert not is_state_lost(KeyError("other"))
+    assert not is_state_lost(ValueError("state handle"))
+
+
+def test_engine_lease_released_on_close(lm_setup):
+    cfg, params = lm_setup
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        eng = EngineClient(server, rows=2, prompt_cap=8)
+        fut, order = eng.submit_admit([(0, [3, 1, 4])])
+        fut.result()
+        assert eng.handle in state.stats()["handles"]
+        eng.close()
+        assert eng.handle not in state.stats()["handles"]
+        server.close(prune=False)
+
+
+# ------------------------------------- composition-invariance (the matrix) --
+# The ISSUE 5 acceptance matrix: iteration-level admission — staggered
+# arrivals, slot reuse, prefix-cache hits — produces bit-identical greedy
+# tokens to a solo wave, for every family, inline and in real worker
+# processes (where the arena lives behind the wire and never comes back).
+
+@pytest.mark.parametrize("backend", ("inline", "processes"))
+def test_iteration_level_admission_is_composition_invariant(lm_family,
+                                                            backend):
+    fam, cfg, params = lm_family
+    with Session(backend, os_threads=1) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        base = make_ragged_requests(cfg)
+        # duplicate two prompts so admission sees prefix-cache hits; the
+        # duplicates arrive later (staggered by the concurrency gate), so
+        # hits insert into a *running* decode batch
+        reqs = base + [Request(prompt=list(base[0].prompt), max_new=6),
+                       Request(prompt=list(base[2].prompt), max_new=3)]
+        solo = solo_reference(server, reqs)
+        comps = run_continuous(server, reqs, concurrency=3, max_batch=3,
+                               slots=1, max_wait_ms=5,
+                               iteration_level=True, quantum=4,
+                               prompt_cap=16)
+        assert [c.tokens for c in comps] == solo
+        # iteration-level really ran, and the duplicates hit the prefix
+        for c in comps:
+            assert c.ttft_ms is not None and c.ttft_ms <= c.latency_ms
+        server.close(prune=False)
+
+
+def test_iteration_prefix_hits_skip_prefill_and_match(lm_setup):
+    """Repeated identical prompts: later admissions are served from the
+    worker-resident prefix cache (stats prove it) and still decode to the
+    solo reference tokens."""
+    cfg, params = lm_setup
+    shared = [11, 7, 5, 3]
+    reqs = [Request(prompt=list(shared), max_new=4) for _ in range(4)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        solo = solo_reference(server, reqs)
+
+        async def go():
+            async with ContinuousBatcher(server, max_batch=2, slots=1,
+                                         max_wait_ms=5, quantum=4,
+                                         prompt_cap=8) as b:
+                comps = await asyncio.gather(*[b.submit(r) for r in reqs])
+                return comps, b.stats
+
+        comps, stats = asyncio.run(go())
+        assert [c.tokens for c in comps] == solo
+        assert stats.mode == "iteration"
+        assert stats.prefix_hits >= 1            # repeats skipped prefill
+        assert stats.prefix_misses >= 1
+        server.close(prune=False)
+
+
+def test_iteration_disabled_prefix_cache_still_invariant(lm_setup):
+    cfg, params = lm_setup
+    reqs = [Request(prompt=[2, 4, 6], max_new=3),
+            Request(prompt=[2, 4, 6], max_new=3)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        solo = solo_reference(server, reqs)
+        comps = run_continuous(server, reqs, concurrency=2, max_batch=2,
+                               slots=1, iteration_level=True,
+                               prefix_tokens=0, prompt_cap=8)
+        assert [c.tokens for c in comps] == solo
+        server.close(prune=False)
+
+
+def test_iteration_long_prompt_falls_back_to_wave(lm_setup):
+    """A prompt above prompt_cap cannot live in the arena — it must still
+    be served (solo wave fallback), identically to its solo run."""
+    cfg, params = lm_setup
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=[1, 2, 3], max_new=3),
+            Request(prompt=list(rng.integers(1, cfg.vocab_size, 40)),
+                    max_new=3)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        solo = solo_reference(server, reqs)
+
+        async def go():
+            async with ContinuousBatcher(server, max_batch=2, slots=1,
+                                         prompt_cap=8,
+                                         iteration_level=True) as b:
+                comps = await asyncio.gather(*[b.submit(r) for r in reqs])
+                return comps, b.stats
+
+        comps, stats = asyncio.run(go())
+        assert [c.tokens for c in comps] == solo
+        assert stats.wave_fallbacks == 1
+        server.close(prune=False)
+
+
+def test_iteration_arena_compaction_under_sustained_load(lm_setup):
+    """More sequential decode steps than the arena capacity: compaction
+    must rebase live rows transparently (tokens stay solo-identical)."""
+    cfg, params = lm_setup
+    rng = np.random.default_rng(5)
+    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, 4)),
+                    max_new=8) for _ in range(8)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        solo = solo_reference(server, reqs)
+        # cap 32, cursor0 8: eight staggered 8-token decodes push the
+        # cursor far past 32 — only compaction keeps the arena serving
+        comps = run_continuous(server, reqs, concurrency=2, max_batch=2,
+                               slots=1, iteration_level=True, quantum=2,
+                               prompt_cap=8, arena_cap=32)
+        assert [c.tokens for c in comps] == solo
+        server.close(prune=False)

@@ -235,6 +235,10 @@ def test_continuous_batching_matches_waves(lm_setup):
 
 
 def test_batcher_stats_and_bucketing(lm_setup):
+    """The batch-level scheduler's internals (bucketing, seal stats) —
+    pinned to iteration_level=False, since on a resident-state backend the
+    batcher would otherwise upgrade to the iteration-level path (whose
+    stats are covered in test_engine.py)."""
     from repro.runtime.server import LMServer
 
     cfg, params = lm_setup
@@ -244,12 +248,14 @@ def test_batcher_stats_and_bucketing(lm_setup):
 
         async def go():
             async with ContinuousBatcher(server, max_batch=4, slots=2,
-                                         max_wait_ms=5) as b:
+                                         max_wait_ms=5,
+                                         iteration_level=False) as b:
                 comps = await asyncio.gather(*[b.submit(r) for r in reqs])
                 return comps, b.stats
         comps, stats = asyncio.run(go())
         assert len(comps) == 8
         assert stats.requests == 8
+        assert stats.mode == "batch"
         assert stats.batches >= 2
         # like-length grouping happened: both decode buckets appear
         assert set(stats.bucket_histogram) == {4, 8}
@@ -395,13 +401,19 @@ def test_serve_bench_schema_smoke():
     import benchmarks.serve_bench as sb
 
     doc = sb.run("threads", requests=8, concurrency=8, prompt_len=8,
-                 max_new=4, wave=4, slots=2, os_threads=2)
-    assert doc["schema"] == "repro.serve_bench/v1"
-    for mode in ("waves", "continuous"):
+                 max_new=4, wave=4, slots=2, os_threads=2,
+                 prefix_shared=0.5,
+                 modes=("waves", "continuous-batch", "continuous"))
+    assert doc["schema"] == "repro.serve_bench/v2"
+    for mode in ("waves", "continuous-batch", "continuous"):
         r = doc["results"][mode]
         assert r["requests"] == 8
         for k in ("throughput_rps", "tokens_per_s", "p50_ms", "p95_ms",
-                  "p99_ms", "wall_s"):
+                  "p99_ms", "wall_s", "ttft_p50_ms", "tpot_p50_ms"):
             assert k in r, (mode, k)
     assert "speedup_continuous_vs_waves" in doc
+    assert "speedup_iteration_vs_batch" in doc
     assert doc["results"]["continuous"]["scheduler"]["requests"] == 8
+    assert doc["results"]["continuous"]["scheduler"]["mode"] == "iteration"
+    assert doc["results"]["continuous"]["scheduler"]["prefix_hits"] >= 1
+    assert doc["results"]["continuous-batch"]["scheduler"]["mode"] == "batch"

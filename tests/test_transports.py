@@ -321,3 +321,93 @@ def test_http_worker_gone_is_retryable_error(tmp_path):
             f.submit(jnp.ones(2)).result(timeout=300)
         assert time.monotonic() - t0 < 120
     backend.shutdown()
+
+
+# ------------------------------- worker-resident state + affinity (ISSUE 5) --
+
+def task_pid(x):
+    return os.getpid()
+
+
+def task_state_note(handle, value):
+    from repro.runtime import state
+    data = state.lease(handle, ttl_s=60.0, make=dict)
+    data["value"] = value
+    return sorted(state.stats()["handles"])
+
+
+def task_state_read(handle):
+    from repro.runtime import state
+    return state.get(handle)["value"]
+
+
+def test_wire_control_frame_carries_body():
+    frame = wire.encode_control("artifact_put", body=b"\x00blob", sha="abc")
+    msg = wire.decode(frame)
+    assert isinstance(msg, wire.ControlRequest)
+    assert msg.op == "artifact_put"
+    assert msg.data == {"sha": "abc"} and msg.body == b"\x00blob"
+
+
+def test_affinity_pins_invocations_to_one_worker():
+    """Invocations sharing an affinity key land on one worker process
+    across calls (the resident-state prerequisite); the pin survives
+    interleaved anonymous traffic on the same backend."""
+    with Session("processes", os_threads=2) as sess:
+        pinned = sess.function(task_pid, name="pid_pinned",
+                               jax_traceable=False, affinity=0)
+        free = sess.function(task_pid, name="pid_free", jax_traceable=False)
+        pids = [pinned.submit(i).result(timeout=300) for i in range(4)]
+        free.submit(0).result(timeout=300)
+        pids.append(pinned.submit(9).result(timeout=300))
+        assert len(set(pids)) == 1
+
+
+def test_state_survives_across_invocations_and_control_release():
+    """A lease written by one invocation is readable by the next (same
+    affinity ⇒ same worker), visible to state_stats, and gone after the
+    CONTROL state_release — the wire half of the state-lease op."""
+    with Session("processes", os_threads=2) as sess:
+        note = sess.function(task_state_note, jax_traceable=False, affinity=3)
+        read = sess.function(task_state_read, jax_traceable=False, affinity=3)
+        handles = note.submit("h-trans", 42).result(timeout=300)
+        assert "h-trans" in handles
+        assert read.submit("h-trans").result(timeout=300) == 42
+        stats = sess.backend.state_control(3, "state_stats")
+        assert "h-trans" in stats["handles"]
+        out = sess.backend.state_control(3, "state_release",
+                                         handle="h-trans")
+        assert out["released"] is True
+        with pytest.raises(KeyError, match="state handle"):
+            read.submit("h-trans").result(timeout=300)
+
+
+def task_artifact_sum(tree):
+    import numpy as np
+    return float(np.sum(tree["a"]))
+
+
+def test_artifact_missing_on_worker_is_fetched_from_client():
+    """Remote artifact fetch (ROADMAP satellite): the store file vanishes
+    before a fresh worker resolves the ref — the worker reports
+    ArtifactMissing, the client pushes the blob over a CONTROL frame, the
+    invocation replays and succeeds, and the blob is re-deposited."""
+    import numpy as np
+
+    from repro.serialization import put_artifact, release_artifact
+
+    value = {"a": np.arange(7, dtype=np.float32)}
+    ref = put_artifact(value)
+    try:
+        os.unlink(ref.path)            # no shared file: only the client
+        assert not os.path.exists(ref.path)  # has it (in-memory cache)
+        with Session("processes", os_threads=1) as sess:
+            f = sess.function(task_artifact_sum, jax_traceable=False)
+            assert f.submit(ref).result(timeout=300) == 21.0
+            # warm path: resolved from the worker's process cache now
+            assert f.submit(ref).result(timeout=300) == 21.0
+        assert os.path.exists(ref.path)      # fetched blob was deposited
+    finally:
+        release_artifact(ref)
+        if os.path.exists(ref.path):
+            os.unlink(ref.path)
