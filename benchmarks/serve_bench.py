@@ -36,6 +36,17 @@ percentiles, **TTFT** percentiles (time to first token — batch-level
 schedulers have no token stream, so their TTFT *is* the completion
 latency) and **TPOT** (time per output token after the first).
 
+``--fleet N`` adds fleet mode (ISSUE 6): N engine-loop members on N
+affinity-pinned workers behind the prefix-aware ``FleetRouter``, plus two
+A/B baselines — ``fleet-random`` (same fleet, uniform-random placement)
+and ``single`` (ONE worker carrying the same total arena slots).  The
+JSON gains ``fleet_speedup_vs_single`` and
+``ttft_p50_prefix_vs_random_ms``, per-member served/migration counts,
+routing and scale-event logs, and per-worker busy-time shares from
+``Session.stats()``.  ``--fleet-disaggregate on`` splits prefill/decode
+roles; ``--fleet-elastic on`` (default) starts at ``--fleet-min`` and
+scales on backlog/occupancy.
+
 ``--json`` writes the machine-readable ``repro.serve_bench/v2`` schema
 (see ``make_result``); CI's serving smoke steps run tiny instances on
 every push.
@@ -45,6 +56,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import os
 import time
 
 import numpy as np
@@ -53,20 +65,29 @@ import numpy as np
 # ------------------------------------------------------------- workload ----
 
 def make_requests(cfg, n: int, prompt_len: int, max_new: int, seed: int = 0,
-                  prefix_shared: float = 0.0):
+                  prefix_shared: float = 0.0, prefix_suffixes: int = 0):
     """Long-tail request mix on BOTH axes: ~3/4 short, ~1/4 long, for the
     prompt length and (independently) the decode length; ``prefix_shared``
     of the requests instead carry one identical shared prompt (the
-    system-prompt pattern the prefix cache exists for)."""
+    system-prompt pattern the prefix cache exists for).  With
+    ``prefix_suffixes > 0`` the shared requests carry the shared *system
+    prefix* (3/4 of ``prompt_len``) plus one of that many user suffixes —
+    the fleet-routing workload, where the router's prefix key is the
+    system prefix (``shared_prefix_len``) rather than the whole prompt."""
     from repro.runtime.server import Request
     rng = np.random.default_rng(seed)
     short_new = max(1, max_new // 8)
     short_prompt = max(1, prompt_len // 4)
     shared = list(rng.integers(1, cfg.vocab_size, prompt_len))
+    head = shared[:shared_prefix_len(prompt_len)]
+    tails = [list(rng.integers(1, cfg.vocab_size,
+                               max(1, prompt_len - len(head))))
+             for _ in range(max(0, prefix_suffixes))]
     out = []
     for _ in range(n):
         if prefix_shared > 0 and rng.random() < prefix_shared:
-            prompt = list(shared)
+            prompt = (head + tails[int(rng.integers(len(tails)))]
+                      if tails else list(shared))
         else:
             prompt = list(rng.integers(
                 1, cfg.vocab_size,
@@ -75,6 +96,12 @@ def make_requests(cfg, n: int, prompt_len: int, max_new: int, seed: int = 0,
             prompt=prompt,
             max_new=(short_new if rng.random() < 0.75 else max_new)))
     return out
+
+
+def shared_prefix_len(prompt_len: int) -> int:
+    """Length of the shared system prefix in the suffix-pool workload —
+    the router's content-hash key covers exactly this many tokens."""
+    return max(1, (3 * prompt_len) // 4)
 
 
 def make_server(backend: str, arch: str, max_new: int, os_threads: int):
@@ -121,6 +148,46 @@ def warmup_iteration(server, cfg, max_new: int, prompt_len: int, wave: int,
                                  max_new=new)] * wave)
     run_continuous(server, reqs, concurrency=wave * slots, max_batch=wave,
                    slots=slots, iteration_level=True, **batcher_kwargs)
+
+
+def warmup_fleet(server, cfg, max_new: int, prompt_len: int, wave: int,
+                 n_members: int, **fleet_kwargs) -> None:
+    """Untimed non-elastic fleet pass: spawns all ``n_members`` so every
+    member's worker pays its engine jit compiles (prefill and decode per
+    shape bucket, per role) before the timed — possibly elastic — run
+    lands on the same affinity indices warm."""
+    from repro.fleet import run_fleet
+    from repro.runtime.server import Request, shape_bucket
+    reqs = []
+    for plen in sorted({shape_bucket(max(1, prompt_len // 4)),
+                        shape_bucket(prompt_len)}):
+        for new in sorted({max(1, max_new // 8), max_new}):
+            reqs.extend([Request(prompt=list(range(1, plen + 1)),
+                                 max_new=new)] * wave)
+    fleet_kwargs.setdefault("max_batch", wave)
+    run_fleet(server, reqs, concurrency=wave * n_members,
+              n_members=n_members, elastic=False, **fleet_kwargs)
+
+
+def worker_utilization(session) -> dict:
+    """Per-worker cold/warm and busy-time evidence (satellite: sandbox
+    counters surfaced through ``Session.stats()``).  Busy seconds include
+    warmup — shares across workers are the meaningful number."""
+    try:
+        st = session.stats()
+    except Exception as e:       # pragma: no cover - backend without stats
+        return {"error": repr(e)}
+    busy = {str(i): round(w.get("sandboxes", {}).get("busy_s", 0.0), 3)
+            for i, w in st.get("workers", {}).items() if isinstance(w, dict)}
+    total = sum(busy.values())
+    return {"n_workers": st.get("n_workers"),
+            "cold_starts": st.get("cold_starts"),
+            "warm_hits": st.get("warm_hits"),
+            "busy_s": round(st.get("busy_s", 0.0), 3),
+            "per_worker_busy_s": busy,
+            "per_worker_busy_share": {
+                i: round(b / total, 3) for i, b in busy.items()} if total
+            else {}}
 
 
 def percentiles(lats_ms: list[float], prefix: str = "") -> dict:
@@ -250,14 +317,69 @@ def bench_continuous(server, requests, *, concurrency: int, max_batch: int,
     return out
 
 
+# -------------------------------------------------------------- fleet ----
+
+def bench_fleet(server, requests, *, concurrency: int, open_rate: float = 0.0,
+                seed: int = 0, **fleet_kwargs) -> dict:
+    """Same client loops as :func:`bench_continuous`, but requests go
+    through a :class:`~repro.fleet.FleetRouter` — N members, each with its
+    own worker-resident arena, placed by the configured routing policy."""
+    from repro.fleet import FleetRouter
+
+    lats_ms: list[float] = []
+    comps_out: list = []
+    tokens = 0
+
+    async def go():
+        nonlocal tokens
+        loop = asyncio.get_running_loop()
+        sem = asyncio.Semaphore(max(1, concurrency))
+        rng = np.random.default_rng(seed)
+        arrivals = None
+        if open_rate > 0:
+            gaps = rng.exponential(1.0 / open_rate, size=len(requests))
+            arrivals = np.cumsum(gaps)
+
+        async with FleetRouter(server, **fleet_kwargs) as fleet:
+            t0 = loop.time()
+
+            async def one(i, r):
+                nonlocal tokens
+                t_issue = None
+                if arrivals is not None:
+                    await asyncio.sleep(max(0.0, arrivals[i]
+                                            - (loop.time() - t0)))
+                    t_issue = loop.time()   # open loop: latency from ARRIVAL
+                async with sem:
+                    if t_issue is None:
+                        t_issue = loop.time()
+                    comp = await fleet.submit(r)
+                    lats_ms.append((loop.time() - t_issue) * 1000.0)
+                    comps_out.append(comp)
+                    tokens += len(comp.tokens)
+
+            await asyncio.gather(*[one(i, r) for i, r in enumerate(requests)])
+            wall = loop.time() - t0
+            return wall, fleet.summary()
+
+    wall, fleet_summary = asyncio.run(go())
+    ttfts, tpots = _token_metrics(comps_out, lats_ms)
+    out = summarize(lats_ms, wall, len(requests), tokens, ttfts, tpots)
+    out["fleet"] = fleet_summary
+    return out
+
+
 # ------------------------------------------------------------------ run ----
 
-MODES = ("waves", "continuous-batch", "continuous")
+MODES = ("waves", "continuous-batch", "continuous", "fleet")
 
 
 def make_result(config: dict, results: dict) -> dict:
     """The ``--json`` document — stable schema for CI and plots."""
-    doc = {"schema": "repro.serve_bench/v2", "config": config,
+    # the A/B readings are meaningless without knowing how many cores the
+    # fleet's workers shared — a 1-core host serializes the whole fleet
+    doc = {"schema": "repro.serve_bench/v2",
+           "config": dict(config, host_cpus=os.cpu_count()),
            "results": results}
     w = results.get("waves")
     cb = results.get("continuous-batch")
@@ -272,6 +394,19 @@ def make_result(config: dict, results: dict) -> dict:
             c["throughput_rps"] / max(cb["throughput_rps"], 1e-9), 3)
         doc["ttft_p50_iteration_vs_batch_ms"] = [
             c.get("ttft_p50_ms"), cb.get("ttft_p50_ms")]
+    fl = results.get("fleet")
+    fr = results.get("fleet-random")
+    sg = results.get("single")
+    if fl and sg:
+        # the ISSUE 6 acceptance number: N members on N workers vs ONE
+        # worker carrying the same total arena slots, same workload
+        doc["fleet_speedup_vs_single"] = round(
+            fl["throughput_rps"] / max(sg["throughput_rps"], 1e-9), 3)
+    if fl and fr:
+        # prefix-aware vs uniform-random placement, same fleet shape:
+        # routed repeats skip prefill on the owning worker → lower TTFT
+        doc["ttft_p50_prefix_vs_random_ms"] = [
+            fl.get("ttft_p50_ms"), fr.get("ttft_p50_ms")]
     return doc
 
 
@@ -279,22 +414,35 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
         requests: int = 64, concurrency: int = 32, prompt_len: int = 16,
         max_new: int = 32, wave: int = 8, slots: int = 4,
         max_wait_ms: float = 10.0, open_rate: float = 0.0,
-        prefix_shared: float = 0.0, quantum: int = 8,
-        prefix_tokens: int = 1 << 16,
+        prefix_shared: float = 0.0, prefix_suffixes: int = 0,
+        quantum: int = 8, prefix_tokens: int = 1 << 16,
         os_threads: int = 8, modes=("waves", "continuous"),
-        seed: int = 0) -> dict:
+        fleet: dict | None = None, seed: int = 0) -> dict:
     results: dict = {}
     config = {"backend": backend, "arch": arch, "requests": requests,
               "concurrency": concurrency, "prompt_len": prompt_len,
               "max_new": max_new, "wave_size": wave, "slots": slots,
               "max_wait_ms": max_wait_ms, "open_rate": open_rate,
-              "prefix_shared": prefix_shared, "quantum": quantum}
+              "prefix_shared": prefix_shared,
+              "prefix_suffixes": prefix_suffixes, "quantum": quantum}
+    if "fleet" in modes:
+        fleet = dict(fleet or {})
+        fleet.setdefault("n", 3)
+        fleet.setdefault("policy", "prefix")
+        fleet.setdefault("elastic", True)
+        fleet.setdefault("min", 1)
+        fleet.setdefault("disaggregate", False)
+        fleet.setdefault("prefill", 1)
+        fleet.setdefault(
+            "prefix_len",
+            shared_prefix_len(prompt_len) if prefix_suffixes else None)
+        config["fleet"] = dict(fleet)
 
     if "waves" in modes:
         cfg, session, server = make_server(backend, arch, max_new, os_threads)
         try:
             reqs = make_requests(cfg, requests, prompt_len, max_new, seed,
-                                 prefix_shared)
+                                 prefix_shared, prefix_suffixes)
             warmup(server, cfg, max_new, prompt_len, wave)
             results["waves"] = bench_waves(server, reqs, wave_size=wave,
                                            slots=slots)
@@ -314,7 +462,7 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
                                            os_threads)
         try:
             reqs = make_requests(cfg, requests, prompt_len, max_new, seed,
-                                 prefix_shared)
+                                 prefix_shared, prefix_suffixes)
             warmup(server, cfg, max_new, prompt_len, wave)
             kwargs = ({"iteration_level": False} if mode == "continuous-batch"
                       else {"quantum": quantum,
@@ -330,6 +478,60 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
                 seed=seed, **kwargs)
             results[mode]["backend"] = cont_backend
             results[mode]["cost"] = session.cost.summary()
+        finally:
+            server.close()
+            session.close()
+
+    if "fleet" in modes:
+        n = fleet["n"]
+        common = dict(prefix_len=fleet["prefix_len"],
+                      disaggregate=fleet["disaggregate"],
+                      prefill_members=fleet["prefill"], max_batch=wave,
+                      quantum=quantum, prompt_cap=max(prompt_len, 8),
+                      prefix_tokens=prefix_tokens)
+        # the A/B pair: the configured policy vs uniform-random placement
+        # on an identical fleet — isolates what routing (not parallelism)
+        # buys.  The elastic run is the one that records scale events.
+        for key, policy, elastic in (
+                ("fleet", fleet["policy"], fleet["elastic"]),
+                ("fleet-random", "random", False)):
+            # the router provisions workers as members spawn — start at 1
+            cfg, session, server = make_server(backend, arch, max_new, 1)
+            try:
+                reqs = make_requests(cfg, requests, prompt_len, max_new,
+                                     seed, prefix_shared, prefix_suffixes)
+                warmup(server, cfg, max_new, prompt_len, wave)
+                warmup_fleet(server, cfg, max_new, prompt_len, wave, n,
+                             policy=policy, seed=seed, **common)
+                results[key] = bench_fleet(
+                    server, reqs, concurrency=concurrency, n_members=n,
+                    policy=policy, elastic=elastic,
+                    min_members=fleet["min"], open_rate=open_rate,
+                    seed=seed, **common)
+                results[key]["backend"] = backend
+                results[key]["cost"] = session.cost.summary()
+                results[key]["workers"] = worker_utilization(session)
+            finally:
+                server.close()
+                session.close()
+        # single-worker baseline at EQUAL TOTAL SLOTS: the same n arenas ×
+        # wave rows, all affinity-pinned onto one worker
+        cfg, session, server = make_server(backend, arch, max_new, 1)
+        try:
+            reqs = make_requests(cfg, requests, prompt_len, max_new, seed,
+                                 prefix_shared, prefix_suffixes)
+            warmup(server, cfg, max_new, prompt_len, wave)
+            kwargs = dict(quantum=quantum, prompt_cap=max(prompt_len, 8),
+                          prefix_tokens=prefix_tokens)
+            warmup_iteration(server, cfg, max_new, prompt_len, wave, n,
+                             **kwargs)
+            results["single"] = bench_continuous(
+                server, reqs, concurrency=concurrency, max_batch=wave,
+                slots=n, max_wait_ms=max_wait_ms, open_rate=open_rate,
+                seed=seed, iteration_level=True, **kwargs)
+            results["single"]["backend"] = backend
+            results["single"]["cost"] = session.cost.summary()
+            results["single"]["workers"] = worker_utilization(session)
         finally:
             server.close()
             session.close()
@@ -357,6 +559,25 @@ def main(argv=None):
     ap.add_argument("--prefix-shared", type=float, default=0.0,
                     help="fraction of requests carrying one shared prompt "
                          "(prefix-cache workload)")
+    ap.add_argument("--prefix-suffixes", type=int, default=0,
+                    help="shared requests carry the shared SYSTEM PREFIX "
+                         "plus one of this many user suffixes (0 = whole "
+                         "prompt identical)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="run fleet mode with N members (adds the fleet / "
+                         "fleet-random / single results and A/B numbers)")
+    ap.add_argument("--fleet-policy", default="prefix",
+                    choices=("prefix", "p2c", "random"))
+    ap.add_argument("--fleet-elastic", default="on", choices=("on", "off"),
+                    help="elastic pool: start at --fleet-min, grow under "
+                         "backlog, drain on low occupancy")
+    ap.add_argument("--fleet-min", type=int, default=1)
+    ap.add_argument("--fleet-disaggregate", default="off",
+                    choices=("on", "off"),
+                    help="split members into prefill/decode roles with row "
+                         "migration over CONTROL frames")
+    ap.add_argument("--fleet-prefill", type=int, default=1,
+                    help="prefill members in disaggregated mode")
     ap.add_argument("--quantum", type=int, default=8,
                     help="iteration mode: decode steps per chunk")
     ap.add_argument("--prefix-tokens", type=int, default=1 << 16,
@@ -368,14 +589,24 @@ def main(argv=None):
                     help="write the repro.serve_bench/v2 document here")
     args = ap.parse_args(argv)
 
+    modes = tuple(m for m in args.modes.split(",") if m)
+    fleet = None
+    if args.fleet > 0:
+        if "fleet" not in modes:
+            modes = modes + ("fleet",)
+        fleet = {"n": args.fleet, "policy": args.fleet_policy,
+                 "elastic": args.fleet_elastic == "on",
+                 "min": args.fleet_min,
+                 "disaggregate": args.fleet_disaggregate == "on",
+                 "prefill": args.fleet_prefill}
     doc = run(args.backend, args.arch, requests=args.requests,
               concurrency=args.concurrency, prompt_len=args.prompt_len,
               max_new=args.max_new, wave=args.wave, slots=args.slots,
               max_wait_ms=args.max_wait_ms, open_rate=args.open_rate,
-              prefix_shared=args.prefix_shared, quantum=args.quantum,
+              prefix_shared=args.prefix_shared,
+              prefix_suffixes=args.prefix_suffixes, quantum=args.quantum,
               prefix_tokens=args.prefix_tokens,
-              os_threads=args.os_threads,
-              modes=tuple(args.modes.split(",")))
+              os_threads=args.os_threads, modes=modes, fleet=fleet)
     text = json.dumps(doc, indent=1)
     print(text)
     if args.json_path:

@@ -298,6 +298,24 @@ class Session:
     def records(self):
         return self._inst.records
 
+    def stats(self) -> dict:
+        """Fleet state without log-scraping (ISSUE 6): cold/warm start
+        counters, per-slot busy time and resident-state leases, aggregated
+        from the backend (one CONTROL round-trip per spawned worker on
+        out-of-process backends — cheap, but not free; poll accordingly).
+        Always includes ``inflight``/``queue_depth``; backends without
+        accounting report just those."""
+        out: dict = {"backend": type(self.backend).__name__,
+                     "inflight": self.inflight,
+                     "queue_depth": self.queue_depth}
+        bstats = getattr(self.backend, "stats", None)
+        if callable(bstats):
+            try:
+                out.update(bstats())
+            except Exception as e:     # a dead fleet still reports the rest
+                out["error"] = str(e) or type(e).__name__
+        return out
+
     def modeled_latencies_ms(self) -> list[float]:
         return self._inst.modeled_latencies_ms()
 

@@ -142,29 +142,127 @@ class _TransportBackend:
                 self._affinity_threads.append(t)
             return q
 
-    def state_control(self, affinity: int, op: str, **data: Any) -> dict:
+    def state_control(self, affinity: int, op: str, body: bytes = b"",
+                      **data: Any) -> dict:
         """One CONTROL round-trip to the worker an affinity key pins —
-        the client surface for state-lease management (ISSUE 5)."""
+        the client surface for state-lease management (ISSUE 5) and arena
+        row migration (ISSUE 6).  A reply that carries a body (row
+        extraction) surfaces it under the ``"_body"`` key."""
         slot = self._slot_for(self._affinity_slot(affinity))
-        reply = wire.decode(self._request(slot, wire.encode_control(op,
-                                                                    **data)))
+        reply = wire.decode(self._request(
+            slot, wire.encode_control(op, body=body, **data)))
         if isinstance(reply, wire.ErrorReply):
             raise wire.to_exception(reply)
         if not isinstance(reply, wire.ControlRequest):
             raise wire.WireProtocolError(
                 f"unexpected control reply {type(reply).__name__}")
-        return reply.data
+        out = dict(reply.data)
+        if reply.body:
+            out["_body"] = reply.body
+        return out
+
+    def _slot_control(self, slot, op: str, **data: Any) -> dict:
+        """Best-effort CONTROL round-trip to one spawned slot (stats and
+        scale-in probes; a dead worker just reports nothing)."""
+        msg = wire.decode(self._request(slot, wire.encode_control(op,
+                                                                  **data)))
+        if isinstance(msg, wire.ErrorReply):
+            raise wire.to_exception(msg)
+        if not isinstance(msg, wire.ControlRequest):
+            raise wire.WireProtocolError(
+                f"unexpected control reply {type(msg).__name__}")
+        return msg.data
 
     @property
     def queue_depth(self) -> int:
         return self._queue.qsize() + sum(
             q.qsize() for q in self._affinity_queues.values())
 
-    def scale_to(self, os_threads: int) -> None:
+    def stats(self) -> dict:
+        """Fleet observability: per-worker sandbox/state accounting, one
+        ``host_stats`` CONTROL round-trip per *spawned* slot (an unspawned
+        slot has no process, hence nothing resident)."""
         with self._lock:
-            self._n_workers = max(self._n_workers, os_threads)
-        if self._started:
-            self._ensure_started(force_resize=True)
+            slots = dict(self._slots)
+            n = self._n_workers
+            pinned = dict(self._affinity_slots)
+        workers: dict[int, dict] = {}
+        totals = {"cold_starts": 0, "warm_hits": 0, "busy_s": 0.0,
+                  "state_handles": 0}
+        for idx, slot in sorted(slots.items()):
+            if slot is None:
+                continue
+            try:
+                d = self._slot_control(slot, "host_stats")
+            except Exception as e:
+                workers[idx] = {"error": str(e) or type(e).__name__}
+                continue
+            workers[idx] = d
+            sb = d.get("sandboxes", {})
+            totals["cold_starts"] += int(sb.get("cold_starts", 0))
+            totals["warm_hits"] += int(sb.get("warm_hits", 0))
+            totals["busy_s"] += float(sb.get("busy_s", 0.0))
+            totals["state_handles"] += int(d.get("state", {}).get("count", 0))
+        return {"n_workers": n, "spawned": len(workers),
+                "affinity_slots": pinned, "workers": workers, **totals}
+
+    def scale_to(self, os_threads: int) -> None:
+        n = max(1, int(os_threads))
+        with self._lock:
+            cur = self._n_workers
+        if n >= cur:
+            with self._lock:
+                self._n_workers = max(self._n_workers, n)
+            if self._started:
+                self._ensure_started(force_resize=True)
+            return
+        # ---- scale-in (ISSUE 6): slots above the new fleet size may hold
+        # affinity-pinned resident state.  Re-homing a frozen affinity
+        # would hand its next invocation a blank arena mid-serve, so this
+        # REFUSES while any doomed slot holds a live state lease — callers
+        # drain the fleet member (or release the lease) first.
+        with self._lock:
+            doomed = {aff: idx for aff, idx in self._affinity_slots.items()
+                      if idx >= n}
+            doomed_slots = sorted(set(doomed.values()))
+            slot_objs = {idx: self._slots.get(idx) for idx in doomed_slots}
+        stranded = []
+        for idx in doomed_slots:
+            slot = slot_objs.get(idx)
+            if slot is None:
+                continue               # never spawned: nothing resident
+            try:
+                st = self._slot_control(slot, "state_stats")
+            except Exception:
+                continue               # dead worker holds nothing
+            if int(st.get("count", 0)):
+                stranded.append((idx, list(st.get("handles", []))))
+        if stranded:
+            detail = "; ".join(
+                f"worker {idx} holds {', '.join(h[:12] for h in hs)}"
+                for idx, hs in stranded)
+            raise RuntimeError(
+                f"scale_to({n}) would strand live state leases on pinned "
+                f"workers ({detail}): drain those engines or release their "
+                "handles first — refusing to silently re-home resident "
+                "arenas")
+        closing = []
+        with self._lock:
+            self._n_workers = n
+            for aff in list(doomed):
+                # safe to re-home: the pin re-freezes at aff % n next use
+                self._affinity_slots.pop(aff, None)
+            for idx in [i for i in list(self._slots) if i >= n]:
+                slot = self._slots.pop(idx)
+                if slot is not None:
+                    closing.append(slot)
+            for idx in [i for i in list(self._affinity_queues) if i >= n]:
+                self._affinity_queues.pop(idx).put(None)   # retire its thread
+        for slot in closing:
+            try:
+                self._close_slot(slot)
+            except Exception:
+                pass
 
     def drain_warm(self, function_name: str | None = None) -> int:
         """Drop warm sandboxes in every live worker (control roundtrip);
@@ -246,6 +344,10 @@ class _TransportBackend:
                 inv.future.set_error(e)
 
     def _execute(self, idx: int, inv: Invocation) -> None:
+        # anonymous dispatch threads above a scaled-in fleet size share the
+        # low slots instead of resurrecting retired workers (pinned traffic
+        # re-froze its mapping below n in scale_to)
+        idx %= max(1, self._n_workers)
         bridge = inv.deployed.bridge
         rec = InvocationRecord(
             task_id=inv.task_id, function_name=bridge.name,

@@ -104,6 +104,18 @@ class WorkerPool:
         """Scale-in: drop warm sandboxes (next invocations pay cold starts)."""
         return self.sandboxes.drain(function_name)
 
+    def stats(self) -> dict:
+        """Fleet observability: the pool's cold/warm and busy accounting
+        plus the (process-local) resident-state registry — the in-process
+        shape of ``_TransportBackend.stats()``."""
+        from ..runtime import state
+        s = dict(self.sandboxes.stats())
+        st = state.stats()
+        return {"n_workers": max(1, len(self._threads)), "spawned": 1,
+                "workers": {0: {"sandboxes": s, "state": st}},
+                "cold_starts": s["cold_starts"], "warm_hits": s["warm_hits"],
+                "busy_s": s["busy_s"], "state_handles": st["count"]}
+
     # ------------------------------------------------------------ dispatch
     def submit(self, inv: Invocation) -> None:
         self._queue.put(inv)

@@ -1,0 +1,28 @@
+"""repro.fleet — fleet serving on top of the iteration-level runtime.
+
+One :class:`~repro.serving.batcher.EngineLoop` per fleet member, each
+pinned (``FunctionConfig.affinity``) to its own worker with its own
+resident cache arena, behind a :class:`FleetRouter`:
+
+* **prefix-aware routing** — a client-side content-hash index over each
+  member's resident prefix-cache mirror sends shared-prefix traffic to
+  the member whose worker already holds it, falling back to least-loaded
+  power-of-two-choices;
+* **disaggregated prefill/decode** — an optional role split where
+  prefill members admit prompts, extract the finished rows and migrate
+  them (CONTROL frames, ``cache_extract_rows``/``cache_insert_rows``)
+  into a decode member's arena;
+* **elastic scaling** — a :class:`FleetController` grows the pool from
+  queue backlog and drains (never kills) the least-loaded member on
+  sustained low decode-slot occupancy; a draining member serves out its
+  queue and live rows, so scale-down loses zero in-flight requests.
+
+    from repro.fleet import run_fleet
+    comps, fleet = run_fleet(server, requests, n_members=3,
+                             policy="prefix", return_stats=True)
+"""
+from .controller import FleetController
+from .router import FleetMember, FleetRouter, FleetStats, run_fleet
+
+__all__ = ["FleetController", "FleetMember", "FleetRouter", "FleetStats",
+           "run_fleet"]

@@ -1,0 +1,90 @@
+"""Elastic fleet controller: queue depth in, scale events out.
+
+Runs as one asyncio task next to the router (started by
+``FleetRouter(elastic=True)``), sampling the fleet every ``interval_s``:
+
+* **grow** when the backlog (queued or migrating rows) exceeds the free
+  decode slots fleet-wide — the signal that adding a member converts
+  queue wait into parallel decode — up to ``max_members``;
+* **drain** the least-loaded member after ``patience`` consecutive
+  samples of decode-slot occupancy below ``shrink_occupancy`` with an
+  empty backlog, down to ``min_members`` (and never below one member of
+  each role in disaggregated mode — the router's ``drain`` refuses).
+
+Scale-down is always a cooperative drain: the member leaves the routing
+set immediately, serves out everything it owns, then releases its state
+lease.  Workers are never killed — a drained member's worker keeps its
+warm sandboxes, so a later grow pays a warm start, which is the whole
+point of scaling the *fleet* rather than the process pool.  Cold/warm
+evidence for each event lives in ``Session.stats()`` (sandbox cold-start
+and busy-time counters), sampled by the benchmark after the run — the
+controller itself only reads client-side state, because backend stats are
+blocking round-trips that must not run on the event loop.
+"""
+from __future__ import annotations
+
+import asyncio
+
+__all__ = ["FleetController"]
+
+
+class FleetController:
+    """Grow/shrink policy over a :class:`~repro.fleet.router.FleetRouter`.
+
+    ``grow_cooldown_s`` spaces grows out so one backlog spike does not
+    instantly fan out to ``max_members`` before the first new member had
+    a chance to absorb anything.
+    """
+
+    def __init__(self, router, *, max_members: int, min_members: int = 1,
+                 interval_s: float = 0.01, shrink_occupancy: float = 0.25,
+                 patience: int = 5, grow_cooldown_s: float = 0.05):
+        self.router = router
+        self.max_members = max(1, max_members)
+        self.min_members = max(1, min_members)
+        self.interval_s = max(1e-3, interval_s)
+        self.shrink_occupancy = shrink_occupancy
+        self.patience = max(1, patience)
+        self.grow_cooldown_s = grow_cooldown_s
+        self._low_samples = 0
+        self._last_grow = float("-inf")
+
+    # one sample → at most one action; factored out so tests can drive the
+    # policy synchronously without the timer task
+    def step(self, now: float) -> str | None:
+        r = self.router
+        active = r.active_members
+        if not active:
+            return None
+        backlog = r.backlog
+        free = sum(m.loop.free_rows for m in active)
+        rows = sum(m.loop.rows for m in active)
+        live = rows - free
+        if (backlog > free and len(active) < self.max_members
+                and now - self._last_grow >= self.grow_cooldown_s):
+            self._low_samples = 0
+            self._last_grow = now
+            r.grow(reason=f"backlog={backlog} free_rows={free}")
+            return "grow"
+        if backlog == 0 and rows and live / rows < self.shrink_occupancy \
+                and len(active) > self.min_members:
+            self._low_samples += 1
+            if self._low_samples >= self.patience:
+                self._low_samples = 0
+                if r.drain(reason=f"occupancy={live}/{rows} for "
+                                  f"{self.patience} samples") is not None:
+                    return "drain"
+            return None
+        self._low_samples = 0
+        return None
+
+    async def run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while not self.router._closed:
+            await asyncio.sleep(self.interval_s)
+            if self.router._closed:
+                return
+            try:
+                self.step(loop.time())
+            except RuntimeError:
+                return                  # router closed under us

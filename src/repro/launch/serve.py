@@ -14,6 +14,12 @@ through the asyncio :class:`~repro.serving.batcher.ContinuousBatcher`
 ``processes``/``http``/``http-aio`` backends run generation in real worker
 processes behind the wire protocol; params deploy once to the
 content-addressed artifact store and payloads carry the reference.
+
+``--fleet N`` serves through the :class:`~repro.fleet.FleetRouter`
+instead: N engine-loop members, each pinned to its own worker, with
+prefix-aware routing (``--fleet-policy prefix|p2c|random``), optional
+prefill/decode disaggregation (``--fleet-disaggregate``), and elastic
+scale-up/drain (``--fleet-elastic``).
 """
 from __future__ import annotations
 
@@ -57,6 +63,21 @@ def main():
     ap.add_argument("--prefix-tokens", type=int, default=1 << 16,
                     help="iteration mode: prompt-prefix cache budget "
                          "(tokens; 0 disables)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through a FleetRouter with N members "
+                         "(overrides --mode)")
+    ap.add_argument("--fleet-policy", default="prefix",
+                    choices=("prefix", "p2c", "random"))
+    ap.add_argument("--fleet-elastic", default="off", choices=("on", "off"),
+                    help="start at --fleet-min members, grow under backlog, "
+                         "drain on sustained low occupancy")
+    ap.add_argument("--fleet-min", type=int, default=1)
+    ap.add_argument("--fleet-disaggregate", default="off",
+                    choices=("on", "off"),
+                    help="split members into prefill and decode roles; "
+                         "prefilled rows migrate over CONTROL frames")
+    ap.add_argument("--fleet-prefill", type=int, default=1,
+                    help="disaggregated mode: prefill member count")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -71,7 +92,19 @@ def main():
                     max_new=args.max_new)
             for _ in range(args.requests)]
     t0 = time.perf_counter()
-    if args.mode == "continuous":
+    fleet_summary = None
+    if args.fleet > 0:
+        from ..fleet import run_fleet
+        comps, fleet_summary = run_fleet(
+            server, reqs, concurrency=args.requests,
+            n_members=args.fleet, policy=args.fleet_policy,
+            elastic=args.fleet_elastic == "on", min_members=args.fleet_min,
+            disaggregate=args.fleet_disaggregate == "on",
+            prefill_members=args.fleet_prefill,
+            max_batch=args.wave, quantum=args.quantum,
+            prompt_cap=max(8, args.prompt_len),
+            prefix_tokens=args.prefix_tokens, return_stats=True)
+    elif args.mode == "continuous":
         from ..serving import run_continuous
         iteration = {"auto": None, "on": True, "off": False}[args.iteration]
         comps = run_continuous(server, reqs, concurrency=args.requests,
@@ -84,14 +117,19 @@ def main():
     else:
         comps = server.serve(reqs, wave_size=args.wave)
     wall = time.perf_counter() - t0
-    print(json.dumps({
-        "arch": cfg.name, "backend": args.backend, "mode": args.mode,
+    doc = {
+        "arch": cfg.name, "backend": args.backend,
+        "mode": f"fleet-{args.fleet}" if args.fleet > 0 else args.mode,
         "requests": len(comps),
         "wall_s": round(wall, 3),
         "tokens_generated": sum(len(c.tokens) for c in comps),
         "cost": server.cost_report.summary(),
         "sample": comps[0].tokens,
-    }, indent=1))
+    }
+    if fleet_summary is not None:
+        doc["fleet"] = fleet_summary
+        doc["workers"] = session.stats()
+    print(json.dumps(doc, indent=1))
     server.close()
     session.close()
 

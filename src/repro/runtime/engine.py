@@ -40,13 +40,22 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import build_model
-from ..models.api import (arena_init_cache, arena_supported,
-                          cache_extract_rows, cache_insert_rows,
-                          cache_insert_rows_masked, cache_shift_left)
+from ..models.api import (SEQ_CACHE_KEYS, arena_init_cache, arena_supported,
+                          cache_extract_rows, cache_free_rows,
+                          cache_insert_rows, cache_insert_rows_masked,
+                          cache_shift_left)
+from ..serialization import decode_binary, encode_binary
 from . import state
 from .server import pack_prompts, shape_bucket
 
 DEFAULT_QUANTUM = 8
+
+# CONTROL verbs for arena row migration (disaggregated prefill/decode,
+# ISSUE 6): a prefill worker's finished rows ship to a decode worker's
+# arena as a binary-archive CONTROL body, client-relayed (the client is
+# the single writer of both arenas, so its mirrors stay exact).
+MIGRATE_EXTRACT_OP = "state_extract_rows"
+MIGRATE_INSERT_OP = "state_insert_rows"
 
 
 # ---------------------------------------------------------------- hashing --
@@ -164,7 +173,7 @@ def engine_prefill(params, tokens, lengths, *, cfg, handle, batch, cap,
         return {"cache": arena_init_cache(cfg, batch, cap, cursor0),
                 "last": jnp.full((batch,), cfg.pad_id, jnp.int32),
                 "prefix": {}, "prefix_tokens": 0, "cap": cap,
-                "cursor0": cursor0}
+                "cursor0": cursor0, "cfg": cfg}
 
     # ``create`` distinguishes building a fresh arena from renewing one
     # that must already exist: an admission into an arena holding live
@@ -266,6 +275,117 @@ def engine_decode(params, *, cfg, handle, k, free_slots=(),
                                            jnp.asarray(free_mask))
     a["cache"], a["last"] = cache, last
     return {"tokens": np.asarray(toks), "idx": int(cache["idx"])}
+
+
+# ------------------------------------------------------- row migration ------
+
+def migration_control(op: str, data: dict, body: bytes = b""):
+    """Worker-side CONTROL surface for arena row migration — runs wherever
+    the state registry lives (the pinned worker process on cross-process
+    backends, the client process otherwise).  Returns ``(reply_data,
+    reply_body)``; errors raise (the worker host wraps them in ERROR
+    envelopes, so an expired arena surfaces as the usual state-lost
+    ``KeyError`` client-side)."""
+    if op == MIGRATE_EXTRACT_OP:
+        return _migrate_extract(data)
+    if op == MIGRATE_INSERT_OP:
+        return _migrate_insert(data, body)
+    raise ValueError(f"unknown migration op {op!r}")
+
+
+def _migrate_extract(data: dict):
+    """Window-extract rows from a resident arena (and free their slots):
+    the prefill half of a prefill→decode hand-off.  The body is a binary
+    archive of ``{"rows", "lengths", "last"}`` with the row axis at
+    position 1 everywhere (:func:`cache_extract_rows` layout), seq keys
+    trimmed to the trailing ``width`` positions so only each row's live
+    window crosses the wire."""
+    a = state.get(data["handle"],
+                  ttl_s=float(data.get("ttl_s") or state.DEFAULT_TTL_S))
+    cfg = a["cfg"]
+    cache, last = a["cache"], a["last"]
+    slots = [int(s) for s in data["slots"]]
+    rows = cache_extract_rows(cfg, cache, slots)
+    last_np = np.asarray(last)[slots].astype(np.int64)
+    if cfg.family == "ssm":
+        width = 0                        # O(1) state: whole-row, no window
+        lengths = np.asarray(data.get("lengths", [0] * len(slots)), np.int64)
+        payload = {k: np.asarray(v) for k, v in rows.items()
+                   if k not in ("idx", "start")}
+    else:
+        idx = int(cache["idx"])
+        width = int(data.get("width") or idx)
+        lengths = (idx - np.asarray(cache["start"])[slots]).astype(np.int64)
+        if width > idx or (len(lengths) and int(lengths.max()) > width):
+            raise ValueError(
+                f"migration window {width} cannot carry rows of lengths "
+                f"{lengths.tolist()} from an arena at cursor {idx}")
+        payload = {}
+        for k, v in rows.items():
+            if k in ("idx", "start"):
+                continue
+            v = np.asarray(v)
+            payload[k] = v[:, :, idx - width:idx] \
+                if k in SEQ_CACHE_KEYS else v
+        if bool(data.get("free", True)):
+            a["cache"] = cache_free_rows(cfg, cache, slots)
+    body = encode_binary({"rows": payload, "lengths": lengths,
+                          "last": last_np})
+    return ({"ok": True, "width": width,
+             "lengths": [int(x) for x in lengths],
+             "last": [int(x) for x in last_np]}, body)
+
+
+def _migrate_insert(data: dict, body: bytes):
+    """Insert migrated rows into a resident arena: the decode half.  The
+    target arena's cursor must already sit at or past the migration width
+    (both sides bucket ``prompt_cap`` identically, and decode compaction
+    clamps the cursor at ``cursor0``, so this holds by construction)."""
+    a = state.get(data["handle"],
+                  ttl_s=float(data.get("ttl_s") or state.DEFAULT_TTL_S))
+    cfg = a["cfg"]
+    cache, last = a["cache"], a["last"]
+    blob = decode_binary(body)
+    rows = {k: jnp.asarray(np.ascontiguousarray(v))
+            for k, v in blob["rows"].items()}
+    lengths = np.asarray(blob["lengths"], np.int64)
+    last_in = np.asarray(blob["last"], np.int64)
+    slots = [int(s) for s in data["slots"]]
+    width = int(data.get("width") or 0)
+    if cfg.family != "ssm" and width > int(cache["idx"]):
+        raise ValueError(
+            f"migrated width {width} exceeds arena cursor "
+            f"{int(cache['idx'])} for state handle {data['handle']!r}")
+    cache = cache_insert_rows(cfg, cache, rows, slots, lengths,
+                              width=width, check=False)
+    last = last.at[jnp.asarray(slots, jnp.int32)].set(
+        jnp.asarray(last_in, jnp.int32))
+    a["cache"], a["last"] = cache, last
+    return ({"ok": True, "idx": int(cache["idx"])}, b"")
+
+
+def split_rows(blob: bytes) -> list[dict]:
+    """Decode an extraction body into per-row client-side entries, so a
+    router can scatter one prefill group across several decode workers.
+    Each entry: ``{"rows": {key: (L, 1, ...)}, "length", "last"}``."""
+    doc = decode_binary(blob)
+    rows, lengths, last = doc["rows"], doc["lengths"], doc["last"]
+    n = len(np.asarray(lengths))
+    return [{"rows": {k: np.asarray(v)[:, j:j + 1] for k, v in rows.items()},
+             "length": int(np.asarray(lengths)[j]),
+             "last": int(np.asarray(last)[j])}
+            for j in range(n)]
+
+
+def merge_rows(entries: Sequence[dict]) -> bytes:
+    """Concatenate per-row entries (row axis 1) back into one insert body."""
+    keys = entries[0]["rows"].keys()
+    rows = {k: np.concatenate([e["rows"][k] for e in entries], axis=1)
+            for k in keys}
+    return encode_binary(
+        {"rows": rows,
+         "lengths": np.asarray([e["length"] for e in entries], np.int64),
+         "last": np.asarray([e["last"] for e in entries], np.int64)})
 
 
 # ------------------------------------------------------------ client half --
@@ -430,6 +550,47 @@ class EngineClient:
         """Fold a worker reply into the client mirrors (cursor)."""
         self._cursor = int(reply["idx"])
         return reply
+
+    # -------------------------------------------------------- migration --
+    def control(self, op: str, body: bytes = b"", **data):
+        """One state CONTROL verb against this engine's pinned worker
+        (direct registry call on in-process backends).  Returns
+        ``(reply_data, reply_body)``."""
+        if self._local_state:
+            if op in (MIGRATE_EXTRACT_OP, MIGRATE_INSERT_OP):
+                return migration_control(op, data, body)
+            return state.control(op, data), b""
+        backend = self.server.session.backend
+        reply = dict(backend.state_control(self.affinity, op, body=body,
+                                           **data))
+        return reply, reply.pop("_body", b"")
+
+    def extract_rows(self, slots, *, free: bool = True) -> list[dict]:
+        """Pull finished rows out of this arena (freeing their slots by
+        default) as per-row client-side entries — the prefill half of a
+        disaggregated hand-off.  Synchronous round-trip; run it off the
+        event loop like every other engine call."""
+        _, body = self.control(
+            MIGRATE_EXTRACT_OP, handle=self.handle,
+            slots=tuple(int(s) for s in slots),
+            width=self.cursor0 if self.cfg.family != "ssm" else 0,
+            free=bool(free), ttl_s=self.ttl_s)
+        return split_rows(body)
+
+    def insert_rows(self, slots, entries) -> None:
+        """Insert migrated per-row entries into this arena's ``slots`` —
+        the decode half.  The arena must already exist (``submit_admit([])``
+        creates one); an expired lease raises the state-lost ``KeyError``."""
+        width = 0          # read the window off the rows themselves: the
+        for k, v in entries[0]["rows"].items():   # source arena chose it
+            if k in SEQ_CACHE_KEYS:
+                width = int(np.asarray(v).shape[2])
+                break
+        reply, _ = self.control(
+            MIGRATE_INSERT_OP, body=merge_rows(entries),
+            handle=self.handle, slots=tuple(int(s) for s in slots),
+            width=width, ttl_s=self.ttl_s)
+        self._cursor = int(reply.get("idx", self._cursor))
 
     def choose_k(self, max_remaining: int) -> int:
         """Decode-chunk length: the quantum, shrunk (to a pow2 bucket, so

@@ -34,6 +34,7 @@ class WorkerInstance:
     function_name: str
     invocations: int = 0
     created_at: float = field(default_factory=time.time)
+    busy_s: float = 0.0                # real wall time spent inside entries
 
     @property
     def is_cold(self) -> bool:
@@ -81,6 +82,16 @@ class SandboxHost:
         self._next_worker_id = worker_id_base
         self._live_instances = 0
         self._lock = threading.Lock()
+        # fleet observability (ISSUE 6): cold/warm and busy-time accounting,
+        # total and per function, surfaced through stats() -> Session.stats()
+        self._cold_starts = 0
+        self._warm_hits = 0
+        self._busy_s = 0.0
+        self._per_fn: dict[str, dict[str, float]] = {}
+
+    def _fn_counters(self, function_name: str) -> dict[str, float]:
+        return self._per_fn.setdefault(
+            function_name, {"cold_starts": 0, "warm_hits": 0, "busy_s": 0.0})
 
     # ----------------------------------------------------------- lifecycle
     def acquire(self, function_name: str) -> Tuple[WorkerInstance, bool]:
@@ -88,9 +99,13 @@ class SandboxHost:
         with self._lock:
             warm = self._warm.setdefault(function_name, [])
             if warm:
+                self._warm_hits += 1
+                self._fn_counters(function_name)["warm_hits"] += 1
                 return warm.pop(), False
             self._next_worker_id += 1
             self._live_instances += 1
+            self._cold_starts += 1
+            self._fn_counters(function_name)["cold_starts"] += 1
             return WorkerInstance(self._next_worker_id, function_name), True
 
     def release(self, inst: WorkerInstance) -> None:
@@ -124,6 +139,19 @@ class SandboxHost:
                 return sum(len(v) for v in self._warm.values())
             return len(self._warm.get(function_name, []))
 
+    def stats(self) -> dict:
+        """Cold/warm and busy-time accounting, totals plus a per-function
+        breakdown — what the fleet controller and ``Session.stats()`` read
+        instead of scraping logs."""
+        with self._lock:
+            return {"cold_starts": self._cold_starts,
+                    "warm_hits": self._warm_hits,
+                    "busy_s": self._busy_s,
+                    "live_instances": self._live_instances,
+                    "warm_count": sum(len(v) for v in self._warm.values()),
+                    "functions": {name: dict(c)
+                                  for name, c in self._per_fn.items()}}
+
     # ------------------------------------------------------------- invoke
     def invoke(self, entry: Callable[[bytes], tuple], function_name: str,
                payload: bytes, *, task_id: int = 0,
@@ -145,8 +173,8 @@ class SandboxHost:
                 f"attempt {attempt})")
             self._stamp(crash, inst, cold)
             raise crash
+        t0 = time.perf_counter()
         try:
-            t0 = time.perf_counter()
             # stats come back with the blob: concurrent entries of the same
             # bridge must not read each other's accounting (shared-attr race)
             blob, stats = entry(payload)
@@ -155,6 +183,14 @@ class SandboxHost:
             self.discard(inst)       # errored sandbox is not re-warmed
             self._stamp(e, inst, cold)
             raise
+        finally:
+            # busy time is real wall clock inside the entry (straggler
+            # inflation is billing, not occupancy), per slot and per host
+            elapsed = time.perf_counter() - t0
+            inst.busy_s += elapsed
+            with self._lock:
+                self._busy_s += elapsed
+                self._fn_counters(function_name)["busy_s"] += elapsed
         if straggle:
             if self.fault_plan.straggler_sleep_s:
                 time.sleep(self.fault_plan.straggler_sleep_s)

@@ -123,7 +123,14 @@ def stats() -> dict[str, Any]:
                 "count": len(_ENTRIES),
                 "prefix_tokens": sum(
                     int(e.data.get("prefix_tokens", 0))
-                    for e in _ENTRIES.values())}
+                    for e in _ENTRIES.values()),
+                # per-handle lease detail: what a scale-down refusal names
+                # and what fleet observability reports per worker
+                "detail": {h: {"age_s": round(now - e.created, 3),
+                               "ttl_s": e.ttl_s,
+                               "expires_in_s": round(e.deadline - now, 3),
+                               "touches": e.touches}
+                           for h, e in _ENTRIES.items()}}
 
 
 def control(op: str, data: dict[str, Any]) -> dict[str, Any]:

@@ -167,6 +167,26 @@ class WorkerHost:
                     msg.op, msg.data))
             except Exception as e:
                 return wire.encode_error(e, retryable=False)
+        if msg.op in ("state_extract_rows", "state_insert_rows"):
+            # arena row migration (ISSUE 6): ship finished prefill rows out
+            # of / into this worker's resident arenas as CONTROL bodies —
+            # the disaggregated prefill→decode hand-off.  Lazy engine
+            # import: only workers already running engine entry points
+            # (jax loaded) ever receive these.
+            from .engine import migration_control
+            try:
+                reply, body = migration_control(msg.op, msg.data, msg.body)
+                return wire.encode_control(msg.op, body=body, **reply)
+            except Exception as e:
+                return wire.encode_error(e, retryable=False)
+        if msg.op == "host_stats":
+            # fleet observability (ISSUE 6): this worker's cold/warm and
+            # busy-time accounting plus its resident-state leases, one
+            # round-trip — what Session.stats() aggregates across slots
+            from . import state
+            return wire.encode_control(
+                "host_stats", pid=os.getpid(), functions=len(self._bridges),
+                sandboxes=self.sandboxes.stats(), state=state.stats())
         if msg.op == "artifact_put":
             # remote artifact fetch: the client pushes a blob this worker
             # reported missing; deposit it in the local store and ack

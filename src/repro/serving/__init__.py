@@ -17,11 +17,12 @@ waves.
 """
 from .aio import (AsyncBoundFunction, AsyncInvocation, AsyncSession,
                   await_invocation)
-from .batcher import BatcherStats, ContinuousBatcher, run_continuous
+from .batcher import (BatcherStats, ContinuousBatcher, EngineLoop,
+                      run_continuous)
 from .http_client import AioHttpBackend, AioHttpClient
 
 __all__ = [
     "AsyncSession", "AsyncBoundFunction", "AsyncInvocation",
-    "await_invocation", "ContinuousBatcher", "BatcherStats",
+    "await_invocation", "ContinuousBatcher", "BatcherStats", "EngineLoop",
     "run_continuous", "AioHttpClient", "AioHttpBackend",
 ]

@@ -63,6 +63,7 @@ class BatcherStats:
     prefix_misses: int = 0
     wave_fallbacks: int = 0          # requests too big for the arena
     state_resets: int = 0            # arenas rebuilt after state loss
+    migrated_rows: int = 0           # prefill→decode row hand-offs (fleet)
 
     @property
     def mean_batch(self) -> float:
@@ -83,7 +84,8 @@ class BatcherStats:
                         "prefix_hits": self.prefix_hits,
                         "prefix_misses": self.prefix_misses,
                         "wave_fallbacks": self.wave_fallbacks,
-                        "state_resets": self.state_resets})
+                        "state_resets": self.state_resets,
+                        "migrated_rows": self.migrated_rows})
         return out
 
 
@@ -100,6 +102,340 @@ class _LiveRow:
     @property
     def remaining(self) -> int:
         return self.request.max_new - len(self.tokens)
+
+
+class EngineLoop:
+    """One worker-resident arena driven step-chunk by step-chunk — the
+    iteration-level inner loop, factored out of :class:`ContinuousBatcher`
+    so the fleet layer (:mod:`repro.fleet`) can run one per fleet member
+    with its own queue, role, and hand-off callbacks (ISSUE 6).
+
+    Roles (disaggregated prefill/decode):
+
+    * ``"unified"`` — prefill and decode in one arena (the PR 5 path; what
+      every :class:`ContinuousBatcher` slot runs);
+    * ``"prefill"`` — admit/prefill only: each admitted row is extracted
+      (its arena slot freed immediately) and passed to ``await
+      handoff(items)``, which migrates it into some decode member's
+      ``intake``;
+    * ``"decode"`` — no prompt admission: pre-filled rows arrive through
+      ``intake`` (dicts ``{"entry": migration payload, "row": _LiveRow}``),
+      are inserted into this arena, and decode here to completion.
+
+    ``queue`` holds ``(Request, future)`` pairs; ``arrived`` is the shared
+    wake-up event (broadcast — every idle loop re-checks its own work
+    source after a wake); ``is_closed()`` polls the owner's shutdown flag;
+    ``fallback(item)`` takes requests the arena can never hold.  Setting
+    ``draining`` makes the loop exit once its queue/intake and live rows
+    are served out — the zero-loss scale-down path: the owner must simply
+    stop feeding the queue first.
+    """
+
+    def __init__(self, server: LMServer, *, index: int, queue, arrived,
+                 stats: BatcherStats, cpu, is_closed, fallback=None,
+                 max_batch: int = 8, quantum: int = 8, prompt_cap: int = 64,
+                 prefix_tokens: int = 1 << 16, arena_cap: int | None = None,
+                 lease_ttl_s: float = 60.0, role: str = "unified",
+                 handoff=None, intake=None):
+        if role not in ("unified", "prefill", "decode"):
+            raise ValueError(f"unknown engine-loop role {role!r}")
+        if role == "prefill" and handoff is None:
+            raise ValueError("a prefill-role loop needs a handoff callback")
+        self.server = server
+        self.index = index
+        self.queue = queue
+        self.intake = intake if intake is not None else deque()
+        self.arrived = arrived
+        self.stats = stats
+        self.cpu = cpu
+        self.is_closed = is_closed
+        self.fallback = fallback
+        self.role = role
+        self.handoff = handoff
+        self.draining = False
+        self.engine = None                     # set once run() starts
+        self.live: dict[int, _LiveRow] = {}
+        self._free: deque[int] = deque()
+        # per-member accounting the fleet router/bench report
+        self.served = 0
+        self.chunks = 0
+        self.chunk_occupancy = 0
+        self.migrated_in = 0
+        self.migrated_out = 0
+        self._kwargs = dict(rows=max(1, max_batch),
+                            prompt_cap=prompt_cap, quantum=quantum,
+                            prefix_tokens=prefix_tokens, ttl_s=lease_ttl_s,
+                            cap=arena_cap)
+
+    # -------------------------------------------------------- router view --
+    @property
+    def rows(self) -> int:
+        return self._kwargs["rows"]
+
+    @property
+    def free_rows(self) -> int:
+        return self.rows - len(self.live)
+
+    @property
+    def load(self) -> int:
+        """Row-units of work this member owns (queued + live + in-flight
+        hand-offs) — what the router's least-loaded policies compare."""
+        pend = sum(1 for _, f in self.queue if not f.done())
+        return pend + len(self.live) + len(self.intake)
+
+    @property
+    def closing(self) -> bool:
+        return self.draining or self.is_closed()
+
+    # ---------------------------------------------------------- internals --
+    def _prune(self) -> None:
+        while self.queue and self.queue[0][1].done():
+            self.queue.popleft()               # cancelled while queued
+        while self.intake and self.intake[0]["row"].fut.done():
+            self.intake.popleft()
+
+    def _fail(self, fut: asyncio.Future, e: BaseException,
+              what: str) -> None:
+        if not fut.done():
+            fut.set_exception(e if isinstance(e, Exception)
+                              else RuntimeError(f"{what}: {e!r}"))
+        self.stats.requests += 1
+
+    def _complete_row(self, row: _LiveRow, now: float) -> None:
+        if not row.fut.done():
+            row.fut.set_result(Completion(
+                tokens=[int(t) for t in row.tokens[:row.request.max_new]],
+                latency_ms=(now - row.t_arrival) * 1000.0,
+                ttft_ms=row.ttft_ms, cost_gb_s=row.cost_gb_s))
+        self.stats.requests += 1
+        self.served += 1
+
+    def _lose_state(self, err: BaseException) -> None:
+        for slot, row in self.live.items():
+            self._fail(row.fut, err, "engine failed")
+            self._free.append(slot)
+        self.live.clear()
+        self.engine.reset()
+        self.stats.state_resets += 1
+
+    # --------------------------------------------------------------- run --
+    async def run(self) -> None:
+        from ..runtime.engine import EngineClient, is_state_lost
+        loop = asyncio.get_running_loop()
+        try:
+            # affinity = member/loop index, deterministically: a warmup
+            # pass and the run it warms land on the SAME workers (a global
+            # counter would re-home every fresh loop onto cold slots)
+            self.engine = engine = EngineClient(self.server,
+                                               affinity=self.index,
+                                               **self._kwargs)
+        except BaseException as e:
+            # a loop that dies before serving must not leave submitters
+            # parked forever: fail whatever is queued and surface the error
+            while self.queue:
+                _, fut = self.queue.popleft()
+                self._fail(fut, e, "engine init failed")
+            while self.intake:
+                self._fail(self.intake.popleft()["row"].fut, e,
+                           "engine init failed")
+            raise
+        live = self.live
+        free = self._free
+        free.extend(range(engine.rows))
+        hits_seen = misses_seen = 0
+
+        try:
+            while True:
+                self._prune()
+                # ---------------------------------- admission (every chunk)
+                if self.role == "decode":
+                    await self._admit_migrated(loop, is_state_lost)
+                else:
+                    await self._admit_prompts(loop, is_state_lost)
+                # fold this engine's prefix-mirror counters into the shared
+                # stats as deltas (several engine loops share one stats)
+                self.stats.prefix_hits += engine.prefix_hits - hits_seen
+                self.stats.prefix_misses += engine.prefix_misses - misses_seen
+                hits_seen = engine.prefix_hits
+                misses_seen = engine.prefix_misses
+
+                # -------------------------------------- completion sweep
+                now = loop.time()
+                for slot in list(live):
+                    row = live[slot]
+                    if row.fut.done() or row.remaining <= 0:
+                        self._complete_row(row, now)
+                        del live[slot]
+                        free.append(slot)
+
+                # ------------------------------------------ idle / close
+                if not live:
+                    pending = (self.intake if self.role == "decode"
+                               else self.queue)
+                    if pending:
+                        continue        # free slots exist: admit again
+                    if self.closing:
+                        return
+                    self.arrived.clear()
+                    if pending or self.closing:
+                        continue
+                    await self.arrived.wait()
+                    continue
+
+                # -------------------------------------------- decode chunk
+                k = engine.choose_k(max(row.remaining
+                                        for row in live.values()))
+                # free every non-live slot, not just freshly-evicted ones:
+                # an idle freed slot whose start stayed at its freeze-time
+                # value would pin arena compaction forever
+                idle = tuple(s for s in range(engine.rows)
+                             if s not in live)
+                try:
+                    inv_fut = await loop.run_in_executor(
+                        self.cpu, engine.submit_step, k, idle)
+                    reply = engine.observe(await await_invocation(inv_fut))
+                except BaseException as e:
+                    self._lose_state(e)
+                    if isinstance(e, asyncio.CancelledError):
+                        raise
+                    continue
+                toks = reply["tokens"]
+                rec = inv_fut.record
+                share = (rec.billed_gb_s / len(live)) if rec else 0.0
+                for slot, row in live.items():
+                    need = row.remaining
+                    if need > 0:
+                        row.tokens.extend(int(t) for t in toks[slot][:need])
+                    row.cost_gb_s += share
+                self.stats.decode_chunks += 1
+                self.stats.decode_steps += k
+                self.stats.occupancy_sum += len(live)
+                self.chunks += 1
+                self.chunk_occupancy += len(live)
+        finally:
+            await loop.run_in_executor(self.cpu, engine.close)
+
+    # ---------------------------------------------------------- admission --
+    async def _admit_prompts(self, loop, is_state_lost) -> None:
+        """Unified/prefill admission: pop queued prompts into free slots,
+        one prefill round-trip; prefill-role loops then extract and hand
+        the finished rows off instead of keeping them live."""
+        engine, live, free = self.engine, self.live, self._free
+        take: list[tuple[int, Request, asyncio.Future]] = []
+        while free and self.queue:
+            r, fut = self.queue.popleft()
+            if fut.done():
+                continue
+            if not engine.fits(len(r.prompt), r.max_new):
+                if self.fallback is not None:
+                    self.fallback((r, fut))
+                else:
+                    self._fail(fut, ValueError(
+                        f"prompt of {len(r.prompt)} tokens cannot fit this "
+                        "arena and no fallback is configured"), "admission")
+                continue
+            take.append((free.popleft(), r, fut))
+        if not take:
+            return
+        t_sent = loop.time()
+        try:
+            inv_fut, order = await loop.run_in_executor(
+                self.cpu, engine.submit_admit,
+                [(slot, r.prompt) for slot, r, _ in take],
+                # an arena holding live rows must already exist: never
+                # silently recreate an expired lease under them
+                not live)
+            reply = engine.observe(await await_invocation(inv_fut))
+        except BaseException as e:
+            for slot, _, fut in take:
+                free.append(slot)
+                self._fail(fut, e, "admission failed")
+            if is_state_lost(e):
+                self._lose_state(e)
+            if isinstance(e, asyncio.CancelledError):
+                raise
+            return
+        now = loop.time()
+        rec = inv_fut.record
+        share = (rec.billed_gb_s / len(take)) if rec else 0.0
+        by_slot = {slot: (r, fut) for slot, r, fut in take}
+        for slot, t0 in zip(order, reply["first"]):
+            r, fut = by_slot[slot]
+            live[slot] = _LiveRow(request=r, fut=fut, t_arrival=t_sent,
+                                  tokens=[int(t0)],
+                                  ttft_ms=(now - t_sent) * 1000.0,
+                                  cost_gb_s=share)
+        self.stats.admission_groups += 1
+        if self.role == "prefill":
+            await self._handoff_rows(loop, list(live), is_state_lost)
+
+    async def _handoff_rows(self, loop, slots, is_state_lost) -> None:
+        """Prefill role: pull the freshly-prefilled rows out of the arena
+        (freeing its slots for the next admission group) and hand them to
+        the router, which places them in a decode member's intake.  TTFT
+        was already stamped at the prefill reply — migration latency shows
+        up in per-token time, not time-to-first-token."""
+        engine, live, free = self.engine, self.live, self._free
+        try:
+            payloads = await loop.run_in_executor(
+                self.cpu, engine.extract_rows, slots)
+        except BaseException as e:
+            for slot in slots:
+                row = live.pop(slot, None)
+                if row is not None:
+                    self._fail(row.fut, e, "row hand-off failed")
+                free.append(slot)
+            if is_state_lost(e):
+                engine.reset()
+                self.stats.state_resets += 1
+            if isinstance(e, asyncio.CancelledError):
+                raise
+            return
+        items = []
+        for slot, payload in zip(slots, payloads):
+            row = live.pop(slot)
+            free.append(slot)
+            items.append({"entry": payload, "row": row})
+        self.migrated_out += len(items)
+        self.stats.migrated_rows += len(items)
+        await self.handoff(items)
+
+    async def _admit_migrated(self, loop, is_state_lost) -> None:
+        """Decode-role admission: insert migrated rows from the intake into
+        free slots.  An idle decode arena may have expired between bursts —
+        when no rows are live it is (re)built empty first, so an insert can
+        never silently target a blank lease."""
+        engine, live, free = self.engine, self.live, self._free
+        take: list[tuple[int, dict]] = []
+        while free and self.intake:
+            ent = self.intake.popleft()
+            if ent["row"].fut.done():
+                continue
+            take.append((free.popleft(), ent))
+        if not take:
+            return
+        slots = [slot for slot, _ in take]
+        try:
+            if not live:
+                inv_fut, _ = await loop.run_in_executor(
+                    self.cpu, engine.submit_admit, [], True)
+                engine.observe(await await_invocation(inv_fut))
+            await loop.run_in_executor(
+                self.cpu, engine.insert_rows, slots,
+                [ent["entry"] for _, ent in take])
+        except BaseException as e:
+            for slot, ent in take:
+                free.append(slot)
+                self._fail(ent["row"].fut, e, "row insert failed")
+            if is_state_lost(e):
+                self._lose_state(e)
+            if isinstance(e, asyncio.CancelledError):
+                raise
+            return
+        for slot, ent in take:
+            live[slot] = ent["row"]
+        self.migrated_in += len(take)
+        self.stats.admission_groups += 1
 
 
 class ContinuousBatcher:
@@ -371,162 +707,20 @@ class ContinuousBatcher:
         self._batch_tasks.add(task)
         task.add_done_callback(self._batch_tasks.discard)
 
-    def _complete_row(self, slot: int, row: _LiveRow, now: float) -> None:
-        if not row.fut.done():
-            row.fut.set_result(Completion(
-                tokens=[int(t) for t in row.tokens[:row.request.max_new]],
-                latency_ms=(now - row.t_arrival) * 1000.0,
-                ttft_ms=row.ttft_ms, cost_gb_s=row.cost_gb_s))
-        self.stats.requests += 1
-
     async def _engine_loop(self, index: int) -> None:
-        """One worker-resident arena, driven step-chunk by step-chunk:
+        """One worker-resident arena, driven step-chunk by step-chunk by a
+        unified-role :class:`EngineLoop` over the batcher's shared queue:
         admit into free rows, decode ``k`` steps, evict finished rows,
         repeat.  Admission and eviction both happen at chunk boundaries —
         the iteration-level quantum."""
-        from ..runtime.engine import EngineClient, is_state_lost
-        loop = asyncio.get_running_loop()
-        try:
-            # affinity = loop index, deterministically: a warmup pass and
-            # the run it warms land on the SAME workers (a global counter
-            # would re-home every fresh batcher onto cold slots)
-            engine = EngineClient(
-                self._server, rows=self._max_batch,
-                prompt_cap=self._prompt_cap, quantum=self._quantum,
-                prefix_tokens=self._prefix_tokens, ttl_s=self._lease_ttl_s,
-                cap=self._arena_cap, affinity=index)
-        except BaseException as e:
-            # a loop that dies before serving must not leave submitters
-            # parked forever: fail whatever is queued and surface the error
-            while self._queue:
-                _, fut = self._queue.popleft()
-                if not fut.done():
-                    fut.set_exception(
-                        e if isinstance(e, Exception)
-                        else RuntimeError(f"engine init failed: {e!r}"))
-            raise
-        live: dict[int, _LiveRow] = {}
-        free: deque[int] = deque(range(engine.rows))
-        hits_seen = misses_seen = 0
-
-        def lose_state(err: BaseException) -> None:
-            for slot, row in live.items():
-                if not row.fut.done():
-                    row.fut.set_exception(
-                        err if isinstance(err, Exception)
-                        else RuntimeError(f"engine failed: {err!r}"))
-                self.stats.requests += 1
-                free.append(slot)
-            live.clear()
-            engine.reset()
-            self.stats.state_resets += 1
-
-        try:
-            while True:
-                self._prune()
-                # ---------------------------------- admission (every chunk)
-                take: list[tuple[int, Request, asyncio.Future]] = []
-                while free and self._queue:
-                    r, fut = self._queue.popleft()
-                    if fut.done():
-                        continue
-                    if not engine.fits(len(r.prompt), r.max_new):
-                        self._fallback_wave((r, fut))
-                        continue
-                    take.append((free.popleft(), r, fut))
-                if take:
-                    t_sent = loop.time()
-                    try:
-                        inv_fut, order = await loop.run_in_executor(
-                            self._cpu, engine.submit_admit,
-                            [(slot, r.prompt) for slot, r, _ in take],
-                            # an arena holding live rows must already
-                            # exist: never silently recreate an expired
-                            # lease under them
-                            not live)
-                        reply = engine.observe(await await_invocation(inv_fut))
-                    except BaseException as e:
-                        for slot, _, fut in take:
-                            free.append(slot)
-                            if not fut.done():
-                                fut.set_exception(
-                                    e if isinstance(e, Exception) else
-                                    RuntimeError(f"admission failed: {e!r}"))
-                            self.stats.requests += 1
-                        if is_state_lost(e):
-                            lose_state(e)
-                        if isinstance(e, asyncio.CancelledError):
-                            raise
-                        continue
-                    now = loop.time()
-                    rec = inv_fut.record
-                    share = (rec.billed_gb_s / len(take)) if rec else 0.0
-                    by_slot = {slot: (r, fut) for slot, r, fut in take}
-                    for slot, t0 in zip(order, reply["first"]):
-                        r, fut = by_slot[slot]
-                        row = _LiveRow(request=r, fut=fut, t_arrival=t_sent,
-                                       tokens=[int(t0)],
-                                       ttft_ms=(now - t_sent) * 1000.0,
-                                       cost_gb_s=share)
-                        live[slot] = row
-                    self.stats.admission_groups += 1
-                # fold this engine's prefix-mirror counters into the shared
-                # stats as deltas (several engine loops share one stats)
-                self.stats.prefix_hits += engine.prefix_hits - hits_seen
-                self.stats.prefix_misses += engine.prefix_misses - misses_seen
-                hits_seen = engine.prefix_hits
-                misses_seen = engine.prefix_misses
-
-                # -------------------------------------- completion sweep
-                now = loop.time()
-                for slot in list(live):
-                    row = live[slot]
-                    if row.fut.done() or row.remaining <= 0:
-                        self._complete_row(slot, row, now)
-                        del live[slot]
-                        free.append(slot)
-
-                # ------------------------------------------ idle / close
-                if not live:
-                    if self._queue:
-                        continue            # free slots exist: admit again
-                    if self._closed:
-                        return
-                    self._arrived.clear()
-                    if self._queue or self._closed:
-                        continue
-                    await self._arrived.wait()
-                    continue
-
-                # -------------------------------------------- decode chunk
-                k = engine.choose_k(max(row.remaining
-                                        for row in live.values()))
-                # free every non-live slot, not just freshly-evicted ones:
-                # an idle freed slot whose start stayed at its freeze-time
-                # value would pin arena compaction forever
-                idle = tuple(s for s in range(engine.rows) if s not in live)
-                try:
-                    inv_fut = await loop.run_in_executor(
-                        self._cpu, engine.submit_step, k, idle)
-                    reply = engine.observe(await await_invocation(inv_fut))
-                except BaseException as e:
-                    lose_state(e)
-                    if isinstance(e, asyncio.CancelledError):
-                        raise
-                    continue
-                toks = reply["tokens"]
-                rec = inv_fut.record
-                share = (rec.billed_gb_s / len(live)) if rec else 0.0
-                for slot, row in live.items():
-                    need = row.remaining
-                    if need > 0:
-                        row.tokens.extend(int(t) for t in toks[slot][:need])
-                    row.cost_gb_s += share
-                self.stats.decode_chunks += 1
-                self.stats.decode_steps += k
-                self.stats.occupancy_sum += len(live)
-        finally:
-            await loop.run_in_executor(self._cpu, engine.close)
+        await EngineLoop(
+            self._server, index=index, queue=self._queue,
+            arrived=self._arrived, stats=self.stats, cpu=self._cpu,
+            is_closed=lambda: self._closed, fallback=self._fallback_wave,
+            max_batch=self._max_batch, quantum=self._quantum,
+            prompt_cap=self._prompt_cap, prefix_tokens=self._prefix_tokens,
+            arena_cap=self._arena_cap,
+            lease_ttl_s=self._lease_ttl_s).run()
 
 
 def run_continuous(server: LMServer, requests: Sequence[Request], *,

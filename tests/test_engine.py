@@ -316,6 +316,78 @@ def test_iteration_long_prompt_falls_back_to_wave(lm_setup):
         server.close(prune=False)
 
 
+# ----------------------------------------- fleet invariance (ISSUE 6) ----
+# The routing layer must be invisible in the tokens: prefix-routed
+# placement, prefill→decode row migration over real CONTROL frames, and a
+# mid-serve scale-up all decode bit-identically to the solo wave, on real
+# worker processes, for an attention family and an ssm family (the two
+# arena layouts: windowed seq keys vs whole-row recurrent state).
+
+FLEET_FAMILIES = ("dense", "ssm")
+
+
+@pytest.fixture(scope="module", params=FLEET_FAMILIES, ids=FLEET_FAMILIES)
+def fleet_family(request):
+    from conftest import FAMILY_ARCHS
+    from repro.configs import get_smoke
+    from repro.models import build_model
+
+    cfg = get_smoke(FAMILY_ARCHS[request.param]).replace(
+        param_dtype="float32", compute_dtype="float32")
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    return request.param, cfg, params
+
+
+def test_fleet_serving_is_composition_invariant_on_processes(fleet_family):
+    from repro.fleet import FleetRouter, run_fleet
+
+    fam, cfg, params = fleet_family
+    with Session("processes", os_threads=1) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        base = make_ragged_requests(cfg)
+        reqs = base + [Request(prompt=list(base[0].prompt), max_new=6),
+                       Request(prompt=list(base[2].prompt), max_new=3)]
+        solo = solo_reference(server, reqs)
+
+        # (a) prefix-routed unified fleet: the duplicates pin to the
+        # member whose worker-resident prefix store already holds them
+        comps, s = run_fleet(server, reqs, n_members=2, policy="prefix",
+                             max_batch=3, quantum=4, prompt_cap=16,
+                             return_stats=True)
+        assert [c.tokens for c in comps] == solo
+        assert s["routing"]["prefix"] >= 1
+
+        # (b) disaggregated: prefilled rows cross process boundaries
+        # through cache_extract_rows/cache_insert_rows CONTROL frames
+        comps, s = run_fleet(server, reqs, n_members=2, policy="p2c",
+                             disaggregate=True, prefill_members=1,
+                             max_batch=3, quantum=4, prompt_cap=16,
+                             return_stats=True)
+        assert [c.tokens for c in comps] == solo
+        assert s["handoffs"] >= 1 and s["batcher"]["migrated_rows"] >= 1
+
+        # (c) mid-serve scale-up: a member (and its worker) appears while
+        # requests are in flight; placement changes, tokens must not
+        async def go():
+            async with FleetRouter(server, n_members=1, policy="p2c",
+                                   max_batch=2, quantum=4,
+                                   prompt_cap=16) as fleet:
+                first = [asyncio.ensure_future(fleet.submit(r))
+                         for r in reqs[:3]]
+                await asyncio.sleep(0.05)    # decode under way on member 0
+                fleet.grow(reason="mid-serve scale-up")
+                rest = [asyncio.ensure_future(fleet.submit(r))
+                        for r in reqs[3:]]
+                comps = await asyncio.gather(*first, *rest)
+                return comps, fleet.summary()
+
+        comps, s = asyncio.run(go())
+        assert [c.tokens for c in comps] == solo
+        assert [e["action"] for e in s["scale_events"]] == ["grow"]
+        assert s["n_members"] == 2
+        server.close(prune=False)
+
+
 def test_iteration_arena_compaction_under_sustained_load(lm_setup):
     """More sequential decode steps than the arena capacity: compaction
     must rebase live rows transparently (tokens stay solo-identical)."""

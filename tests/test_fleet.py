@@ -1,0 +1,371 @@
+"""Fleet serving (ISSUE 6): prefix-aware routing, disaggregated
+prefill/decode hand-off, elastic grow/drain, sandbox cold/warm + busy-time
+accounting, and the scale-in × affinity safety contract — scale-down must
+refuse to strand a pinned worker's live state leases."""
+import asyncio
+import random
+import time
+import types
+
+import jax
+import pytest
+
+from conftest import make_ragged_requests, solo_reference
+from repro.cloud import Session
+from repro.fleet import FleetController, FleetRouter, FleetStats, run_fleet
+from repro.runtime.engine import prefix_key
+from repro.runtime.sandbox import SandboxHost
+from repro.runtime.server import LMServer, Request
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+
+    cfg = get_smoke("smollm-360m")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ------------------------------------- sandbox cold/warm accounting ----
+
+def test_sandbox_host_counts_cold_warm_and_busy_time():
+    host = SandboxHost()
+
+    def entry(payload):
+        time.sleep(0.002)
+        return payload, types.SimpleNamespace()
+
+    host.invoke(entry, "f", b"a")            # cold
+    host.invoke(entry, "f", b"b")            # warm reuse
+    host.invoke(entry, "g", b"c")            # second function: its own cold
+    st = host.stats()
+    assert st["cold_starts"] == 2 and st["warm_hits"] == 1
+    assert st["busy_s"] >= 0.006
+    assert st["functions"]["f"]["cold_starts"] == 1
+    assert st["functions"]["f"]["warm_hits"] == 1
+    assert st["functions"]["f"]["busy_s"] >= 0.004
+    assert st["functions"]["g"]["cold_starts"] == 1
+    assert st["functions"]["g"]["warm_hits"] == 0
+
+
+def test_sandbox_host_busy_time_counted_even_when_entry_raises():
+    host = SandboxHost()
+
+    def entry(payload):
+        time.sleep(0.002)
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError):
+        host.invoke(entry, "f", b"x")
+    st = host.stats()
+    assert st["busy_s"] >= 0.002 and st["cold_starts"] == 1
+
+
+def task_square(x):
+    return x * x
+
+
+def test_session_stats_surfaces_fleet_accounting():
+    with Session("threads", os_threads=2) as sess:
+        f = sess.function(task_square, jax_traceable=False)
+        assert [f.submit(i).result(timeout=300) for i in (2, 3, 4)] == \
+            [4, 9, 16]
+        st = sess.stats()
+        assert st["inflight"] == 0 and st["queue_depth"] == 0
+        assert st["cold_starts"] >= 1
+        assert st["cold_starts"] + st["warm_hits"] >= 3
+        assert st["busy_s"] > 0
+
+
+# --------------------------------- scale-in × affinity (the regression) ----
+
+def task_state_note(handle, value):
+    from repro.runtime import state
+    state.lease(handle, ttl_s=60.0, make=dict)["value"] = value
+    return value
+
+
+def test_scale_in_refuses_to_strand_pinned_state_leases():
+    """scale_to below a pinned worker's slot must refuse while that worker
+    holds live state leases (re-homing the frozen affinity would hand the
+    engine a blank arena mid-serve), and succeed after release."""
+    with Session("processes", os_threads=1) as sess:
+        sess.backend.scale_to(2)
+        note = sess.function(task_state_note, jax_traceable=False,
+                             affinity=1)
+        assert note.submit("h-fleet", 5).result(timeout=300) == 5
+        assert sess.backend._affinity_slots[1] == 1    # frozen on worker 1
+        with pytest.raises(RuntimeError, match="strand live state leases"):
+            sess.backend.scale_to(1)
+        assert sess.stats()["n_workers"] == 2          # nothing was re-homed
+        sess.backend.state_control(1, "state_release", handle="h-fleet")
+        sess.backend.scale_to(1)                       # lease gone: allowed
+        assert sess.stats()["n_workers"] == 1
+
+
+# -------------------------------------------------- routing policy unit ----
+
+def _stub_member(index, load, rows=4, draining=False):
+    loop = types.SimpleNamespace(load=load, rows=rows, draining=draining,
+                                 free_rows=max(0, rows - load))
+    return types.SimpleNamespace(index=index, loop=loop, role="unified")
+
+
+def _stub_router(policy="prefix", spill_factor=2.0, prefix_len=None,
+                 seed=0):
+    r = FleetRouter.__new__(FleetRouter)
+    r.policy = policy
+    r.prefix_len = prefix_len
+    r.spill_factor = spill_factor
+    r._rng = random.Random(seed)
+    r._owners = {}
+    r.stats = FleetStats()
+    return r
+
+
+def test_prefix_policy_pins_repeats_to_the_owner():
+    r = _stub_router()
+    a, b = _stub_member(0, 0), _stub_member(1, 0)
+    owner, how = r._choose([1, 2, 3], [a, b])
+    assert how == "p2c"                      # first sight claims ownership
+    for _ in range(5):
+        m, how = r._choose([1, 2, 3], [a, b])
+        assert m is owner and how == "prefix"
+    # a different prompt may claim the other member; it never steals
+    r._choose([9, 9, 9], [a, b])
+    assert r._owners[prefix_key([1, 2, 3])] is owner
+
+
+def test_prefix_len_truncates_the_routing_key():
+    r = _stub_router(prefix_len=2)
+    a, b = _stub_member(0, 0), _stub_member(1, 0)
+    owner, _ = r._choose([5, 6, 1, 2], [a, b])
+    m, how = r._choose([5, 6, 9, 9], [a, b])  # same first-2 prefix
+    assert m is owner and how == "prefix"
+    assert prefix_key([5, 6]) in r._owners
+
+
+def test_overloaded_owner_spills_without_losing_ownership():
+    r = _stub_router(spill_factor=2.0)
+    a, b = _stub_member(0, 0, rows=4), _stub_member(1, 0, rows=4)
+    owner, _ = r._choose([1, 2], [a, b])
+    other = b if owner is a else a
+    owner.loop.load = 8                      # at spill_factor × rows
+    m, how = r._choose([1, 2], [a, b])
+    assert m is other and how == "p2c"
+    assert r.stats.spills == 1
+    owner.loop.load = 1                      # overload passed: pin returns
+    m, how = r._choose([1, 2], [a, b])
+    assert m is owner and how == "prefix"
+
+
+def test_unroutable_owner_is_reassigned():
+    """A draining/dead owner falls out of the target set: the key is
+    re-claimed by a live member instead of routing into a drain."""
+    r = _stub_router()
+    a, b = _stub_member(0, 0), _stub_member(1, 0)
+    owner, _ = r._choose([4, 4], [a, b])
+    survivor = b if owner is a else a
+    m, _ = r._choose([4, 4], [survivor])     # owner no longer routable
+    assert m is survivor
+    assert r._owners[prefix_key([4, 4])] is survivor
+
+
+def test_p2c_picks_less_loaded_of_two():
+    r = _stub_router(policy="p2c")
+    members = [_stub_member(0, 9), _stub_member(1, 0)]
+    picks = {r._p2c(members).index for _ in range(20)}
+    assert picks == {1}
+
+
+# ---------------------------------------------------- controller policy ----
+
+class _StubFleet:
+    def __init__(self, members, backlog=0):
+        self.members = members
+        self.backlog = backlog
+        self.events = []
+        self._closed = False
+
+    @property
+    def active_members(self):
+        return self.members
+
+    def grow(self, reason=""):
+        self.events.append("grow")
+        return self.members[0]
+
+    def drain(self, reason=""):
+        self.events.append("drain")
+        return self.members[0]
+
+
+def test_controller_grows_on_backlog_and_respects_cooldown():
+    fleet = _StubFleet([_stub_member(0, 4, rows=4)], backlog=6)
+    ctl = FleetController(fleet, max_members=3, grow_cooldown_s=10.0)
+    assert ctl.step(now=0.0) == "grow"
+    assert ctl.step(now=1.0) is None         # cooling down
+    assert ctl.step(now=11.0) == "grow"
+    assert fleet.events == ["grow", "grow"]
+
+
+def test_controller_grow_capped_at_max_members():
+    fleet = _StubFleet([_stub_member(i, 4, rows=4) for i in range(2)],
+                       backlog=9)
+    ctl = FleetController(fleet, max_members=2, grow_cooldown_s=0.0)
+    assert ctl.step(now=0.0) is None
+    assert fleet.events == []
+
+
+def test_controller_drains_only_after_sustained_low_occupancy():
+    fleet = _StubFleet([_stub_member(0, 0), _stub_member(1, 0)], backlog=0)
+    ctl = FleetController(fleet, max_members=3, patience=3,
+                          shrink_occupancy=0.25)
+    assert [ctl.step(now=float(i)) for i in range(3)] == \
+        [None, None, "drain"]
+    # a busy sample resets the patience window
+    fleet.events.clear()
+    fleet.members[0].loop.load = 4
+    fleet.members[0].loop.free_rows = 0
+    assert ctl.step(now=10.0) is None
+    fleet.members[0].loop.load = 0
+    fleet.members[0].loop.free_rows = 4
+    assert [ctl.step(now=11.0 + i) for i in range(3)] == \
+        [None, None, "drain"]
+
+
+def test_controller_never_drains_below_min_members():
+    fleet = _StubFleet([_stub_member(0, 0)], backlog=0)
+    ctl = FleetController(fleet, max_members=3, min_members=1, patience=1)
+    assert all(ctl.step(now=float(i)) is None for i in range(5))
+    assert fleet.events == []
+
+
+# ------------------------------------------------- router end to end ----
+
+def _dup_requests(cfg):
+    base = make_ragged_requests(cfg)
+    return base + [Request(prompt=list(base[0].prompt), max_new=6),
+                   Request(prompt=list(base[2].prompt), max_new=3)]
+
+
+def test_fleet_rejects_non_resident_backends_and_bad_policy(lm_setup):
+    cfg, params = lm_setup
+    with Session("sim-aws", os_threads=2) as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        with pytest.raises(ValueError, match="resident-state backend"):
+            FleetRouter(server)
+        server.close(prune=False)
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        with pytest.raises(ValueError, match="routing policy"):
+            FleetRouter(server, policy="round-robin")
+        server.close(prune=False)
+
+
+def test_fleet_prefix_routing_is_solo_identical(lm_setup):
+    cfg, params = lm_setup
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = _dup_requests(cfg)
+        solo = solo_reference(server, reqs)
+        comps, s = run_fleet(server, reqs, n_members=3, policy="prefix",
+                             max_batch=3, quantum=4, prompt_cap=16,
+                             return_stats=True)
+        assert [c.tokens for c in comps] == solo
+        assert s["routing"]["prefix"] >= 1   # the duplicates were pinned
+        assert s["n_members"] == 3
+        server.close(prune=False)
+
+
+def test_fleet_disaggregated_handoff_is_solo_identical(lm_setup):
+    cfg, params = lm_setup
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = _dup_requests(cfg)
+        solo = solo_reference(server, reqs)
+        comps, s = run_fleet(server, reqs, n_members=3, policy="p2c",
+                             disaggregate=True, prefill_members=1,
+                             max_batch=3, quantum=4, prompt_cap=16,
+                             return_stats=True)
+        assert [c.tokens for c in comps] == solo
+        assert s["handoffs"] >= 1
+        assert s["batcher"]["migrated_rows"] >= 1
+        roles = {m["role"] for m in s["members"]}
+        assert roles == {"prefill", "decode"}
+        # migration must not cost TTFT observability
+        assert all(c.ttft_ms is not None for c in comps)
+        server.close(prune=False)
+
+
+def test_fleet_elastic_grows_under_backlog_and_stays_identical(lm_setup):
+    cfg, params = lm_setup
+    import numpy as np
+    rng = np.random.default_rng(11)
+    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, 4 + i % 3)),
+                    max_new=4 + i % 3) for i in range(24)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        solo = solo_reference(server, reqs)
+        comps, s = run_fleet(
+            server, reqs, concurrency=24, n_members=3, policy="prefix",
+            elastic=True, min_members=1,
+            controller=dict(interval_s=0.002, grow_cooldown_s=0.0),
+            max_batch=2, quantum=4, prompt_cap=16, return_stats=True)
+        assert [c.tokens for c in comps] == solo
+        grows = [e for e in s["scale_events"] if e["action"] == "grow"]
+        assert grows, s["scale_events"]      # backlog forced a scale-up
+        assert s["n_members"] > 1
+        server.close(prune=False)
+
+
+def test_fleet_drain_loses_no_inflight_requests(lm_setup):
+    """Cooperative scale-down: the drained member leaves the routing set,
+    serves out everything it owns, and every request still completes with
+    solo-identical tokens — zero loss."""
+    cfg, params = lm_setup
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=8)
+        reqs = _dup_requests(cfg)
+        solo = solo_reference(server, reqs)
+
+        async def go():
+            async with FleetRouter(server, n_members=2, policy="p2c",
+                                   max_batch=2, quantum=4,
+                                   prompt_cap=16) as fleet:
+                tasks = [asyncio.ensure_future(fleet.submit(r))
+                         for r in reqs]
+                await asyncio.sleep(0)       # queues populated, decode live
+                drained = fleet.drain(fleet.members[0], reason="test")
+                assert drained is fleet.members[0]
+                assert not fleet.members[0].active
+                comps = await asyncio.gather(*tasks)
+                return comps, fleet.summary()
+
+        comps, s = asyncio.run(go())
+        assert [c.tokens for c in comps] == solo
+        assert [e["action"] for e in s["scale_events"]] == ["drain"]
+        served = sum(m["served"] for m in s["members"])
+        assert served + s["batcher"]["wave_fallbacks"] == len(reqs)
+        server.close(prune=False)
+
+
+def test_fleet_long_prompt_falls_back_to_solo_wave(lm_setup):
+    cfg, params = lm_setup
+    import numpy as np
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=[1, 2, 3], max_new=3),
+            Request(prompt=list(rng.integers(1, cfg.vocab_size, 40)),
+                    max_new=3)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        solo = solo_reference(server, reqs)
+        comps, s = run_fleet(server, reqs, n_members=2, policy="prefix",
+                             max_batch=2, quantum=4, prompt_cap=8,
+                             return_stats=True)
+        assert [c.tokens for c in comps] == solo
+        assert s["batcher"]["wave_fallbacks"] == 1
+        server.close(prune=False)
