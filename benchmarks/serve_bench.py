@@ -26,6 +26,17 @@ Three schedulers over the *same* model entry points:
                          ``max_new`` without batch-tail wait, and a
                          worker-resident prompt-prefix cache that lets
                          repeated prompts skip prefill entirely.
+* ``continuous-paged`` — the ISSUE 7 paged twin of ``continuous``
+                         (``--paged on`` adds it): each arena is a
+                         refcounted block pool with per-row block tables,
+                         prompts sharing a prefix share physical blocks
+                         through a worker-resident radix index (partial
+                         hits skip prefill for the matched head), and
+                         long prompts chunk-prefill instead of falling
+                         back to solo waves.  The scheduler summary
+                         reports pool occupancy peaks (live tokens,
+                         allocated blocks, radix-shared blocks) and the
+                         JSON gains paged-vs-slot A/B numbers.
 
 Requests are *long-tail mixed* on both axes (decode ~3/4 short at
 ``max_new/8``; prompts ~3/4 short at ``prompt_len/4``), and
@@ -140,11 +151,28 @@ def warmup_iteration(server, cfg, max_new: int, prompt_len: int, wave: int,
     the timed run will use — the engine analogue of ``warmup``."""
     from repro.runtime.server import Request, shape_bucket
     from repro.serving import run_continuous
+    plens = sorted({shape_bucket(max(1, prompt_len // 4)),
+                    shape_bucket(prompt_len)})
+    prompt_of = {plen: list(range(1, plen + 1)) for plen in plens}
+    if batcher_kwargs.get("paged"):
+        # chunked prefill splits a prompt wherever the per-call budget
+        # lands, so ANY pow2 chunk-width bucket up to the longest prompt
+        # can occur mid-run — compile them all here, or a budget split
+        # would pay a fresh jit inside the measured window.  Widest
+        # first (the first admission of a call always gets its full
+        # width) and with a distinct token head per width, so neither a
+        # budget split nor a radix prefix hit shrinks the first chunk of
+        # a group below its bucket
+        plens, w = [], 1
+        while w <= shape_bucket(prompt_len):
+            plens.append(w)
+            w *= 2
+        plens.reverse()
+        prompt_of = {plen: list(range(plen, 2 * plen)) for plen in plens}
     reqs = []
-    for plen in sorted({shape_bucket(max(1, prompt_len // 4)),
-                        shape_bucket(prompt_len)}):
+    for plen in plens:
         for new in sorted({max(1, max_new // 8), max_new}):
-            reqs.extend([Request(prompt=list(range(1, plen + 1)),
+            reqs.extend([Request(prompt=list(prompt_of[plen]),
                                  max_new=new)] * wave)
     run_continuous(server, reqs, concurrency=wave * slots, max_batch=wave,
                    slots=slots, iteration_level=True, **batcher_kwargs)
@@ -371,7 +399,8 @@ def bench_fleet(server, requests, *, concurrency: int, open_rate: float = 0.0,
 
 # ------------------------------------------------------------------ run ----
 
-MODES = ("waves", "continuous-batch", "continuous", "fleet")
+MODES = ("waves", "continuous-batch", "continuous", "continuous-paged",
+         "fleet")
 
 
 def make_result(config: dict, results: dict) -> dict:
@@ -394,6 +423,19 @@ def make_result(config: dict, results: dict) -> dict:
             c["throughput_rps"] / max(cb["throughput_rps"], 1e-9), 3)
         doc["ttft_p50_iteration_vs_batch_ms"] = [
             c.get("ttft_p50_ms"), cb.get("ttft_p50_ms")]
+    cp = results.get("continuous-paged")
+    if cp and c:
+        # the ISSUE 7 acceptance pair: paged block-pool arena vs the slot
+        # arena, same workload, same backend — plus the occupancy evidence
+        # that shared prefixes really shared physical blocks
+        doc["speedup_paged_vs_slot"] = round(
+            cp["throughput_rps"] / max(c["throughput_rps"], 1e-9), 3)
+        doc["ttft_p50_paged_vs_slot_ms"] = [
+            cp.get("ttft_p50_ms"), c.get("ttft_p50_ms")]
+        sched = cp.get("scheduler", {})
+        doc["paged_occupancy_peaks"] = {
+            k: sched.get(f"{k}_peak") for k in
+            ("live_tokens", "allocated_blocks", "shared_blocks")}
     fl = results.get("fleet")
     fr = results.get("fleet-random")
     sg = results.get("single")
@@ -416,7 +458,8 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
         max_wait_ms: float = 10.0, open_rate: float = 0.0,
         prefix_shared: float = 0.0, prefix_suffixes: int = 0,
         quantum: int = 8, prefix_tokens: int = 1 << 16,
-        os_threads: int = 8, modes=("waves", "continuous"),
+        block_size: int = 16, os_threads: int = 8,
+        modes=("waves", "continuous"),
         fleet: dict | None = None, seed: int = 0) -> dict:
     results: dict = {}
     config = {"backend": backend, "arch": arch, "requests": requests,
@@ -424,7 +467,8 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
               "max_new": max_new, "wave_size": wave, "slots": slots,
               "max_wait_ms": max_wait_ms, "open_rate": open_rate,
               "prefix_shared": prefix_shared,
-              "prefix_suffixes": prefix_suffixes, "quantum": quantum}
+              "prefix_suffixes": prefix_suffixes, "quantum": quantum,
+              "block_size": block_size}
     if "fleet" in modes:
         fleet = dict(fleet or {})
         fleet.setdefault("n", 3)
@@ -433,6 +477,7 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
         fleet.setdefault("min", 1)
         fleet.setdefault("disaggregate", False)
         fleet.setdefault("prefill", 1)
+        fleet.setdefault("paged", False)
         fleet.setdefault(
             "prefix_len",
             shared_prefix_len(prompt_len) if prefix_suffixes else None)
@@ -451,7 +496,7 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
             server.close()
             session.close()
 
-    for mode in ("continuous-batch", "continuous"):
+    for mode in ("continuous-batch", "continuous", "continuous-paged"):
         if mode not in modes:
             continue
         # the async stack's client half: on the plain http backend swap in
@@ -464,11 +509,15 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
             reqs = make_requests(cfg, requests, prompt_len, max_new, seed,
                                  prefix_shared, prefix_suffixes)
             warmup(server, cfg, max_new, prompt_len, wave)
-            kwargs = ({"iteration_level": False} if mode == "continuous-batch"
-                      else {"quantum": quantum,
-                            "prompt_cap": max(prompt_len, 8),
-                            "prefix_tokens": prefix_tokens})
-            if mode == "continuous":
+            if mode == "continuous-batch":
+                kwargs = {"iteration_level": False}
+            else:
+                kwargs = {"quantum": quantum,
+                          "prompt_cap": max(prompt_len, 8),
+                          "prefix_tokens": prefix_tokens}
+                if mode == "continuous-paged":
+                    kwargs.update(paged=True, block_size=block_size)
+            if mode != "continuous-batch":
                 warmup_iteration(server, cfg, max_new, prompt_len, wave,
                                  slots, **{k: v for k, v in kwargs.items()
                                            if k != "iteration_level"})
@@ -488,7 +537,8 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
                       disaggregate=fleet["disaggregate"],
                       prefill_members=fleet["prefill"], max_batch=wave,
                       quantum=quantum, prompt_cap=max(prompt_len, 8),
-                      prefix_tokens=prefix_tokens)
+                      prefix_tokens=prefix_tokens,
+                      paged=fleet["paged"], block_size=block_size)
         # the A/B pair: the configured policy vs uniform-random placement
         # on an identical fleet — isolates what routing (not parallelism)
         # buys.  The elastic run is the one that records scale events.
@@ -567,7 +617,7 @@ def main(argv=None):
                     help="run fleet mode with N members (adds the fleet / "
                          "fleet-random / single results and A/B numbers)")
     ap.add_argument("--fleet-policy", default="prefix",
-                    choices=("prefix", "p2c", "random"))
+                    choices=("prefix", "p2c", "random", "radix"))
     ap.add_argument("--fleet-elastic", default="on", choices=("on", "off"),
                     help="elastic pool: start at --fleet-min, grow under "
                          "backlog, drain on low occupancy")
@@ -582,7 +632,13 @@ def main(argv=None):
                     help="iteration mode: decode steps per chunk")
     ap.add_argument("--prefix-tokens", type=int, default=1 << 16,
                     help="iteration mode: prefix-cache budget (0 disables)")
+    ap.add_argument("--paged", default="off", choices=("on", "off"),
+                    help="add the continuous-paged mode (block-pool KV "
+                         "arena with radix prefix sharing, ISSUE 7)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged mode: KV block granularity (pow2-rounded)")
     ap.add_argument("--os-threads", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--modes", default="waves,continuous",
                     help=f"comma list from {MODES}")
     ap.add_argument("--json", dest="json_path", default=None,
@@ -590,6 +646,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     modes = tuple(m for m in args.modes.split(",") if m)
+    if args.paged == "on" and "continuous-paged" not in modes:
+        modes = modes + ("continuous-paged",)
     fleet = None
     if args.fleet > 0:
         if "fleet" not in modes:
@@ -598,15 +656,17 @@ def main(argv=None):
                  "elastic": args.fleet_elastic == "on",
                  "min": args.fleet_min,
                  "disaggregate": args.fleet_disaggregate == "on",
-                 "prefill": args.fleet_prefill}
+                 "prefill": args.fleet_prefill,
+                 "paged": args.paged == "on"}
     doc = run(args.backend, args.arch, requests=args.requests,
               concurrency=args.concurrency, prompt_len=args.prompt_len,
               max_new=args.max_new, wave=args.wave, slots=args.slots,
               max_wait_ms=args.max_wait_ms, open_rate=args.open_rate,
               prefix_shared=args.prefix_shared,
               prefix_suffixes=args.prefix_suffixes, quantum=args.quantum,
-              prefix_tokens=args.prefix_tokens,
-              os_threads=args.os_threads, modes=modes, fleet=fleet)
+              prefix_tokens=args.prefix_tokens, block_size=args.block_size,
+              os_threads=args.os_threads, modes=modes, fleet=fleet,
+              seed=args.seed)
     text = json.dumps(doc, indent=1)
     print(text)
     if args.json_path:

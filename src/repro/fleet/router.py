@@ -16,6 +16,12 @@ placement:
 * ``policy="p2c"`` — least-loaded of two random members (the classic
   balanced-allocations bound on max load).
 * ``policy="random"`` — uniform; the A/B baseline for prefix routing.
+* ``policy="radix"`` — a client-side radix index over block-aligned
+  token runs (the router's mirror of the workers' paged radix stores,
+  ISSUE 7): a prompt routes to the member owning its *longest shared
+  prefix*, so partial overlaps — not just exact repeats — land where the
+  shared blocks already live.  Spill semantics match ``prefix``; both
+  count as prefix-routed in the stats.
 
 ``disaggregate=True`` splits roles: prompts route only to prefill
 members, whose freshly-prefilled rows migrate through ``handoff`` into
@@ -109,7 +115,7 @@ class FleetRouter:
     arenas is just N copies of the wave scheduler.
     """
 
-    POLICIES = ("prefix", "p2c", "random")
+    POLICIES = ("prefix", "p2c", "random", "radix")
 
     def __init__(self, server: LMServer, *, n_members: int = 3,
                  policy: str = "prefix", prefix_len: int | None = None,
@@ -118,9 +124,15 @@ class FleetRouter:
                  min_members: int = 1, controller: dict | None = None,
                  max_batch: int = 8, quantum: int = 8, prompt_cap: int = 64,
                  prefix_tokens: int = 1 << 16, arena_cap: int | None = None,
-                 lease_ttl_s: float = 60.0, seed: int = 0):
+                 lease_ttl_s: float = 60.0, seed: int = 0,
+                 paged: bool = False, block_size: int = 16,
+                 prefill_budget: int | None = None,
+                 pool_blocks: int | None = None):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown routing policy {policy!r}")
+        if paged and disaggregate:
+            raise ValueError("paged arenas cannot disaggregate: block "
+                             "tables do not migrate between pools")
         from ..models.api import arena_supported
         caps = server.session.backend.capabilities
         if not getattr(caps, "resident_state", False):
@@ -144,12 +156,23 @@ class FleetRouter:
         self._loop_kw = dict(max_batch=max_batch, quantum=quantum,
                              prompt_cap=prompt_cap,
                              prefix_tokens=prefix_tokens,
-                             arena_cap=arena_cap, lease_ttl_s=lease_ttl_s)
+                             arena_cap=arena_cap, lease_ttl_s=lease_ttl_s,
+                             paged=paged, block_size=block_size,
+                             prefill_budget=prefill_budget,
+                             pool_blocks=pool_blocks)
         self._rng = random.Random(seed)
         self.members: list[FleetMember] = []
         self._next_index = 0
         self._capacity = 0              # backend workers provisioned so far
         self._owners: dict[str, FleetMember] = {}   # prefix key -> member
+        if policy == "radix":
+            # the router's longest-shared-prefix mirror; payloads are
+            # member indices, one per block-aligned run — same geometry as
+            # the workers' radix stores so claims stay block-aligned
+            from ..runtime.radix import RadixIndex
+            from ..runtime.server import shape_bucket
+            self._radix = RadixIndex(shape_bucket(max(1, block_size)),
+                                     budget_tokens=max(1, prefix_tokens))
         self._arrived: asyncio.Event | None = None
         self._controller_task: asyncio.Task | None = None
         self._solo_tasks: set[asyncio.Task] = set()
@@ -335,12 +358,43 @@ class FleetRouter:
         a, b = self._rng.sample(targets, 2)
         return min((a, b), key=lambda m: (m.loop.load, m.index))
 
+    def _radix_choose(self, prompt: Sequence[int],
+                      targets: list[FleetMember]) -> tuple[FleetMember, str]:
+        toks = [int(t) for t in prompt]
+        h, owners = self._radix.match(toks)
+        owner = None
+        if h and owners:
+            # deepest matched run names the member holding the most
+            # shared blocks
+            owner = next((m for m in targets if m.index == owners[-1]),
+                         None)
+        if owner is not None:
+            if owner.loop.load < self.spill_factor * owner.loop.rows:
+                return owner, "prefix"
+            # transient overload spills to p2c WITHOUT reclaiming the
+            # runs — same no-thrash rule as the "prefix" policy
+            self.stats.spills += 1
+            return self._p2c(targets), "p2c"
+        member = self._p2c(targets)
+        bs = self._radix.bs
+        nb = (len(toks) // bs) * bs
+        if nb:
+            # claim this prompt's block-aligned head for the chosen member
+            # (overwrite: traffic follows the freshest placement, and a
+            # drained member's runs are reclaimed by the next claimant)
+            self._radix.insert(toks[:nb], [member.index] * (nb // bs),
+                               overwrite=True)
+            self._radix.evict()
+        return member, "p2c"
+
     def _choose(self, prompt: Sequence[int],
                 targets: list[FleetMember]) -> tuple[FleetMember, str]:
         if self.policy == "random":
             return self._rng.choice(targets), "random"
         if self.policy == "p2c":
             return self._p2c(targets), "p2c"
+        if self.policy == "radix":
+            return self._radix_choose(prompt, targets)
         key = prefix_key(prompt[:self.prefix_len]
                          if self.prefix_len else prompt)
         owner = self._owners.get(key)

@@ -1,2 +1,2 @@
-from .ops import decode_attention
+from .ops import decode_attention, decode_attention_paged
 from .ref import decode_attention_ref

@@ -85,7 +85,15 @@ def flash_decode_bhgd(q, k, v, kv_len, kv_start=None, *, window=0, scale=None,
     (B,Hkv,G,D).  kv_start masks left-pad cache slots (None = 0)."""
     b, hkv, g, d = q.shape
     _, _, skv, _ = k.shape
-    assert skv % block_k == 0
+    # Ragged tail: pad K/V with zeros up to a block_k multiple instead of
+    # asserting divisibility.  The kv_len column mask already excludes the
+    # pad columns from the softmax; zero-padding (not garbage) keeps the
+    # masked p·v products finite on hardware.
+    tail = (-skv) % block_k
+    if tail:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, tail), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, tail), (0, 0)))
+        skv += tail
     scale = scale if scale is not None else d ** -0.5
     kv_blocks = skv // block_k
     if kv_start is None:
@@ -114,3 +122,116 @@ def flash_decode_bhgd(q, k, v, kv_len, kv_start=None, *, window=0, scale=None,
         ],
         interpret=interpret,
     )(bounds, q, k, v)
+
+
+def _dec_paged_kernel(table_ref, bounds_ref, q_ref, k_ref, v_ref, o_ref,
+                      acc_ref, m_ref, l_ref, *, scale, window, block_size,
+                      table_width):
+    """Block-table flash-decode body: grid dim 2 walks the row's table.
+
+    Identical running-softmax math to `_dec_kernel`; the only change is
+    that tile j holds *logical* columns [j·bs, (j+1)·bs) gathered from
+    physical pool block `table[b, j]` by the BlockSpec index_map — dead
+    table entries point at block 0 and are masked out by kv_len anyway."""
+    b_ = pl.program_id(0)
+    ik = pl.program_id(2)
+    kv_start = bounds_ref[b_, 0]
+    kv_len = bounds_ref[b_, 1]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    col0 = ik * block_size
+    live = col0 < kv_len
+    live &= col0 + block_size > kv_start
+    if window:
+        live &= col0 + block_size > kv_len - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (cols < kv_len) & (cols >= kv_start)
+        if window:
+            mask &= cols >= kv_len - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where((m_new > 0.5 * NEG_INF)[:, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ik == table_width - 1)
+    def _fin():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret"))
+def flash_decode_paged_bhgd(q, k_pool, v_pool, table, kv_len, kv_start=None,
+                            *, window=0, scale=None, interpret=False):
+    """Paged flash-decode: q (B,Hkv,G,D); k_pool/v_pool (NB,Hkv,BS,D);
+    table (B,T) int32 of pool block ids -> (B,Hkv,G,D).
+
+    Row b's logical cache column c lives at pool[table[b, c // BS], :,
+    c % BS].  The table rides in as a scalar-prefetch operand so the K/V
+    BlockSpec index_maps can gather physical blocks per grid step; the
+    tile size IS the block size, so masking is byte-for-byte the
+    contiguous kernel's.  Unused table entries should be 0 (the reserved
+    trash block) — they are masked by kv_len but must still be valid ids."""
+    b, hkv, g, d = q.shape
+    nb, _, bs, _ = k_pool.shape
+    t = table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    if kv_start is None:
+        kv_start = jnp.zeros((b,), jnp.int32)
+    bounds = jnp.stack([kv_start.astype(jnp.int32),
+                        kv_len.astype(jnp.int32)], axis=1)    # (B, 2)
+
+    kernel = functools.partial(_dec_paged_kernel, scale=scale, window=window,
+                               block_size=bs, table_width=t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # table, bounds — SMEM, index_map-visible
+        grid=(b, hkv, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h, j, table_ref, bounds_ref:
+                         (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, j, table_ref, bounds_ref:
+                         (table_ref[b_, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, j, table_ref, bounds_ref:
+                         (table_ref[b_, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, h, j, table_ref, bounds_ref:
+                               (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), bounds, q, k_pool, v_pool)

@@ -36,14 +36,19 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
     impl: "ref" (jnp oracle) | "pallas" (TPU) | "pallas_interpret" (CPU
     execution of the kernel body, used by the allclose test sweeps).
     """
-    if impl == "ref" or kv_len is not None:
-        # variable kv_len masking is handled by the decode kernel / ref path
+    if impl == "ref":
         return attention_ref(q, k, v, causal=causal, window=window,
                              q_offset=q_offset, scale=scale, kv_len=kv_len,
                              kv_start=kv_start)
     if impl == "xla":
         return attention_xla(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, scale=scale,
+                             q_offset=q_offset, scale=scale, kv_len=kv_len,
+                             kv_start=kv_start)
+    if kv_len is not None:
+        # the Pallas prefill kernel has no kv_len operand (chunked prefill
+        # runs on the xla path today); fall back to the oracle
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, scale=scale, kv_len=kv_len,
                              kv_start=kv_start)
 
     interpret = impl == "pallas_interpret"

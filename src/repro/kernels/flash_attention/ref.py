@@ -56,7 +56,7 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
 
 def attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
                   q_offset: int = 0, scale: float | None = None,
-                  kv_start=None, block_q: int = 512):
+                  kv_len=None, kv_start=None, block_q: int = 512):
     """Query-chunked attention in pure XLA — the production fallback path.
 
     Same math as the oracle, but scores are materialized one q-block at a
@@ -94,6 +94,9 @@ def attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
         if window:
             mask &= cols > rows - window
         mask = mask[None, None, None]                   # (1,1,1,bq,Skv)
+        if kv_len is not None:                          # (B,) valid cache len
+            mask = mask & (cols < kv_len[:, None]
+                           )[:, None, None, None, :]
         if kv_start is not None:                        # (B,) left-pad count
             mask = mask & (cols >= kv_start[:, None]
                            )[:, None, None, None, :]

@@ -63,11 +63,17 @@ def main():
     ap.add_argument("--prefix-tokens", type=int, default=1 << 16,
                     help="iteration mode: prompt-prefix cache budget "
                          "(tokens; 0 disables)")
+    ap.add_argument("--paged", default="off", choices=("on", "off"),
+                    help="iteration mode: paged KV arena (block-table "
+                         "attention, radix prefix sharing, chunked "
+                         "prefill)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged mode: tokens per KV block")
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="serve through a FleetRouter with N members "
                          "(overrides --mode)")
     ap.add_argument("--fleet-policy", default="prefix",
-                    choices=("prefix", "p2c", "random"))
+                    choices=("prefix", "p2c", "random", "radix"))
     ap.add_argument("--fleet-elastic", default="off", choices=("on", "off"),
                     help="start at --fleet-min members, grow under backlog, "
                          "drain on sustained low occupancy")
@@ -103,7 +109,9 @@ def main():
             prefill_members=args.fleet_prefill,
             max_batch=args.wave, quantum=args.quantum,
             prompt_cap=max(8, args.prompt_len),
-            prefix_tokens=args.prefix_tokens, return_stats=True)
+            prefix_tokens=args.prefix_tokens,
+            paged=args.paged == "on", block_size=args.block_size,
+            return_stats=True)
     elif args.mode == "continuous":
         from ..serving import run_continuous
         iteration = {"auto": None, "on": True, "off": False}[args.iteration]
@@ -113,7 +121,9 @@ def main():
                                iteration_level=iteration,
                                quantum=args.quantum,
                                prompt_cap=max(8, args.prompt_len),
-                               prefix_tokens=args.prefix_tokens)
+                               prefix_tokens=args.prefix_tokens,
+                               paged=args.paged == "on",
+                               block_size=args.block_size)
     else:
         comps = server.serve(reqs, wave_size=args.wave)
     wall = time.perf_counter() - t0

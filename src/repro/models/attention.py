@@ -12,7 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..kernels.decode_attention import decode_attention
+from ..kernels.decode_attention import decode_attention, decode_attention_paged
 from ..kernels.flash_attention import attention
 from ..sharding import shard
 from .layers import apply_mrope, apply_rope, dense_init
@@ -147,3 +147,77 @@ def attn_decode(p, x, cache_k, cache_v, idx, *, window=0, rope_theta=0.0,
     if quant:
         return out, cache_k, cache_v, cache_ks, cache_vs
     return out, cache_k, cache_v
+
+
+# -------------------------------------------------- paged (block-table) ----
+# Paged rows are RIGHT-dense: row content occupies logical columns
+# [0, len), kv_start is always 0, and RoPE position == logical column —
+# the per-row block table maps logical columns to physical pool blocks.
+# Both facts together are what make paged decode bit-identical to the
+# left-padded solo path: the per-token q/k values are equal (same RoPE
+# positions), and the masked-softmax reductions are placement/width
+# invariant as long as every gathered width stays a power of two.
+
+def attn_decode_paged(p, x, pool_k, pool_v, table, lens, live, *, window=0,
+                      rope_theta=0.0, impl="ref"):
+    """One-token attention against a block pool.
+
+    x (B,1,d); pool_k/pool_v (NB,BS,Hkv,D); table (B,T) int32;
+    lens (B,) tokens already resident per row; live (B,) bool.
+
+    The new token is written at logical column ``lens`` — physically
+    ``pool[table[b, lens // BS], lens % BS]``.  Dead rows write to the
+    reserved trash block 0 (never read unmasked: their kv_len is 0, so
+    the kernel's l == 0 guard zeroes the whole row).
+    Returns (out, pool_k, pool_v)."""
+    b = x.shape[0]
+    bs = pool_k.shape[1]
+    lens = lens.astype(jnp.int32)
+    positions = lens[:, None]                       # right-dense: pos == len
+    q, k, v = _project(p, x, positions, rope_theta=rope_theta,
+                       mrope_sections=(), pos3d=None)
+    rows = jnp.arange(b)
+    blk = jnp.where(live, table[rows, lens // bs], 0)
+    off = lens % bs
+    pool_k = pool_k.at[blk, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[blk, off].set(v[:, 0].astype(pool_v.dtype))
+    kv_len = jnp.where(live, lens + 1, 0).astype(jnp.int32)
+    o = decode_attention_paged(q[:, 0], pool_k, pool_v, table, kv_len,
+                               window=window, impl=impl)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    return out, pool_k, pool_v
+
+
+def attn_prefill_paged(p, x, pool_k, pool_v, table, m, n_real, *, window=0,
+                       rope_theta=0.0, impl="ref"):
+    """One chunk of continued prefill against a block pool (B == 1).
+
+    x (1,C,d) — the chunk's embeddings, real tokens in [0, n_real), the
+    rest right-pad; ``m`` is how many tokens of this row the pool already
+    holds, so chunk token j is logical column m + j.  K/V for real chunk
+    positions scatter into the row's table-mapped blocks (pad positions
+    go to the trash block); attention runs q_offset = m against the full
+    gathered table view, masked to kv_len = m + n_real.  Chaining calls
+    with growing ``m`` reproduces a monolithic prefill bit-for-bit.
+    Returns (out (1,C,d-model), pool_k, pool_v)."""
+    _, c, _ = x.shape
+    bs = pool_k.shape[1]
+    t = table.shape[1]
+    j = jnp.arange(c)
+    positions = (m + j)[None, :]
+    q, k, v = _project(p, x, positions, rope_theta=rope_theta,
+                       mrope_sections=(), pos3d=None)
+    real = j < n_real
+    ti = jnp.where(real, (m + j) // bs, 0)          # clamp pad lookups
+    blk = jnp.where(real, table[0, ti], 0)
+    off = (m + j) % bs
+    pool_k = pool_k.at[blk, off].set(k[0].astype(pool_k.dtype))
+    pool_v = pool_v.at[blk, off].set(v[0].astype(pool_v.dtype))
+    kview = pool_k[table[0]].reshape(1, t * bs, *pool_k.shape[2:])
+    vview = pool_v[table[0]].reshape(1, t * bs, *pool_v.shape[2:])
+    kv_len = jnp.full((1,), m + n_real, jnp.int32)
+    o = attention(q, kview.astype(q.dtype), vview.astype(q.dtype),
+                  causal=True, window=window, q_offset=m, kv_len=kv_len,
+                  impl=impl)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, pool_k, pool_v

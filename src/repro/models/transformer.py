@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..sharding import shard
-from .attention import attn_decode, attn_full, attn_init
+from .attention import (attn_decode, attn_decode_paged, attn_full, attn_init,
+                        attn_prefill_paged)
 from .layers import (embed_apply, embed_init, mlp_apply, mlp_init,
                      ragged_positions, rms_norm)
 from .moe import moe_apply, moe_init
@@ -250,3 +251,67 @@ def lm_decode(p, cfg: ModelConfig, cache, tokens, pos3d=None,
                               use_scan=cfg.scan_layers)
     logits = _logits(p, cfg, x[:, -1])
     return logits, {"k": ck, "v": cv, "idx": idx + 1, **carry}
+
+
+# -------------------------------------------------- paged (block-table) ----
+
+def lm_decode_paged(p, cfg: ModelConfig, pool_k, pool_v, table, lens, live,
+                    tokens, attn_impl: str = "ref"):
+    """One decode step against a shared block pool.
+
+    tokens (B,1); pool_k/pool_v (L,NB,BS,Hkv,D); table (B,T) int32;
+    lens (B,) resident tokens per row; live (B,) bool.  Each row's new K/V
+    lands at logical column ``lens[b]`` through its table (dead rows write
+    the trash block).  Returns (logits (B,V), pool_k, pool_v) — per-row
+    lens/table bookkeeping is the host's job (block refcounts live there).
+    """
+    x = _embed_in(p, cfg, tokens, None)
+
+    def body(x, xs):
+        lp, pk, pv = xs
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        h, pk, pv = attn_decode_paged(lp["attn"], h, pk, pv, table, lens,
+                                      live, window=cfg.window,
+                                      rope_theta=cfg.rope_theta,
+                                      impl=attn_impl)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        h, _ = _ffn(lp, cfg, h, dropless=True)
+        return x + h, (pk, pv)
+
+    x, (pk, pv) = scan_layers(body, x, (p["layers"], pool_k, pool_v),
+                              use_scan=cfg.scan_layers)
+    logits = _logits(p, cfg, x[:, -1])
+    return logits, pk, pv
+
+
+def lm_prefill_paged_chunk(p, cfg: ModelConfig, tokens, pool_k, pool_v,
+                           table, m, n_real, attn_impl: str = "ref"):
+    """One chunk of continued prefill for a single row (B == 1).
+
+    tokens (1,C) right-padded, n_real real; ``m`` tokens of the row are
+    already resident in the pool, so this chunk covers logical columns
+    [m, m + n_real).  Returns (last-real-token logits (1,V), pools).
+    Chaining chunks with growing m reproduces a monolithic prefill's
+    logits and cache bit-for-bit — that is the chunked-prefill contract
+    the invariance matrix pins.
+    """
+    x = _embed_in(p, cfg, tokens, None)
+
+    def body(x, xs):
+        lp, pk, pv = xs
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        h, pk, pv = attn_prefill_paged(lp["attn"], h, pk, pv, table, m,
+                                       n_real, window=cfg.window,
+                                       rope_theta=cfg.rope_theta,
+                                       impl=attn_impl)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        h, _ = _ffn(lp, cfg, h, dropless=True)
+        return x + h, (pk, pv)
+
+    x, (pk, pv) = scan_layers(body, x, (p["layers"], pool_k, pool_v),
+                              use_scan=cfg.scan_layers)
+    last = jax.lax.dynamic_slice(x, (0, n_real - 1, 0), (1, 1, x.shape[-1]))
+    logits = _logits(p, cfg, last[:, 0])
+    return logits, pk, pv

@@ -39,13 +39,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..models import build_model
-from ..models.api import (SEQ_CACHE_KEYS, arena_init_cache, arena_supported,
+from ..models import build_model, transformer
+from ..models.api import (PagedArena, SEQ_CACHE_KEYS, _attn_impl,
+                          arena_init_cache, arena_supported,
                           cache_extract_rows, cache_free_rows,
                           cache_insert_rows, cache_insert_rows_masked,
-                          cache_shift_left)
+                          cache_shift_left, paged_init_pool, paged_supported)
 from ..serialization import decode_binary, encode_binary
 from . import state
+from .radix import RadixIndex
 from .server import pack_prompts, shape_bucket
 
 DEFAULT_QUANTUM = 8
@@ -277,6 +279,224 @@ def engine_decode(params, *, cfg, handle, k, free_slots=(),
     return {"tokens": np.asarray(toks), "idx": int(cache["idx"])}
 
 
+# ------------------------------------------------- paged-arena entry fns --
+# ISSUE 7: the paged twin of the slot entry points above.  The worker
+# keeps a refcounted pool of fixed-size KV blocks plus per-row block
+# tables (host accounting in models.api.PagedArena, device pools updated
+# by the jitted fns below); prefill is CHUNKED — each call advances
+# pending rows by at most ``budget`` real tokens, so a long prompt never
+# stalls live decode rows for more than one chunk — and the prompt-prefix
+# store is a radix index over block-aligned token runs: rows sharing a
+# prefix share physical blocks copy-free, and a partial hit skips prefill
+# for the matched head only.
+
+@lru_cache(maxsize=256)
+def _paged_chunk_fn(cfg: ModelConfig, c: int):
+    """One chunk of continued prefill for one row (B == 1, width c)."""
+    impl = _attn_impl(cfg)
+
+    def run(params, pool_k, pool_v, tokens, table, m, n_real):
+        logits, pk, pv = transformer.lm_prefill_paged_chunk(
+            params, cfg, tokens, pool_k, pool_v, table, m, n_real,
+            attn_impl=impl)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        return first, pk, pv
+
+    return jax.jit(run)
+
+
+@lru_cache(maxsize=256)
+def _paged_decode_fn(cfg: ModelConfig, k: int):
+    impl = _attn_impl(cfg)
+
+    def run(params, pool_k, pool_v, table, lens, live, last):
+        tok = jnp.where(live, last, jnp.int32(cfg.pad_id))[:, None]
+
+        def step(carry, _):
+            pk, pv, lens, tok = carry
+            logits, pk, pv = transformer.lm_decode_paged(
+                params, cfg, pk, pv, table, lens, live, tok, attn_impl=impl)
+            nxt = jnp.where(live, jnp.argmax(logits, -1).astype(jnp.int32),
+                            jnp.int32(cfg.pad_id))
+            lens = lens + live.astype(jnp.int32)
+            return (pk, pv, lens, nxt[:, None]), nxt
+
+        (pk, pv, lens, tok), toks = jax.lax.scan(
+            step, (pool_k, pool_v, lens, tok), None, length=k)
+        return pk, pv, tok[:, 0], jnp.moveaxis(toks, 0, 1)       # (B, k)
+
+    return jax.jit(run)
+
+
+def _paged_reserve(pa: PagedArena, radix: RadixIndex, slot: int,
+                   n_tokens: int, handle) -> None:
+    """Allocate blocks so row ``slot`` can hold ``n_tokens``; on pool
+    exhaustion, evict LRU radix runs (refcount drop — blocks free only if
+    no live row shares them) and retry before giving up."""
+    while True:
+        try:
+            pa.ensure(slot, n_tokens)
+            return
+        except IndexError:
+            dropped = radix.evict_blocks(1)
+            if not dropped:
+                raise RuntimeError(
+                    f"paged arena {handle!r} out of blocks: "
+                    f"{pa.occupancy()} and nothing evictable") from None
+            pa.ref_dec(dropped)
+
+
+def _paged_match(pa: PagedArena, radix: RadixIndex, slot: int,
+                 toks: list, done: int) -> int:
+    """Adopt any radix-shared prefix blocks beyond ``done`` (refcount++,
+    copy-free).  The match is capped one block short of the full prompt so
+    at least one token always re-prefills — the chunk path needs a real
+    last-token forward for the first output logits."""
+    bs = pa.bs
+    if done % bs:
+        return done
+    h, payloads = radix.match(toks)
+    h = min(h, ((len(toks) - 1) // bs) * bs)
+    if h <= done:
+        return done
+    ids = payloads[done // bs:h // bs]
+    if any(pa.table[slot, done // bs:h // bs]):
+        return done                      # row already allocated past here
+    pa.ref_inc(ids)
+    pa.table[slot, done // bs:h // bs] = ids
+    pa.owned[slot].extend(int(i) for i in ids)
+    return h
+
+
+def engine_paged_prefill(params, *, cfg, handle, batch, blocks, table_width,
+                         block_size, admit=(), free=(), budget=0,
+                         radix_tokens=1 << 16, create=True,
+                         ttl_s=state.DEFAULT_TTL_S):
+    """Paged prefill entry point: admit rows, advance chunked prefill.
+
+    ``free``: slots evicted since the last call — released FIRST (refcount
+    drops), because a slot must give its blocks back before the same slot
+    id is re-admitted: an un-released table row would alias the new row's
+    writes onto blocks the radix index may still share with live rows.
+    ``admit``: ``[(slot, prompt_tokens), ...]`` new rows (the worker is
+    authoritative for prefix matching — no client mirror).  Each call then
+    advances pending rows FIFO by at most ``budget`` real tokens total
+    (``budget <= 0`` = finish everything), so one call's prefill stall is
+    bounded no matter how long the prompt.  Completed rows land live with
+    their first decoded token; their full blocks are inserted into the
+    radix index (refcount++) and the index is LRU-evicted back under
+    ``radix_tokens``.  Returns per-slot progress + pool occupancy.
+    """
+    def make():
+        pool = paged_init_pool(cfg, blocks, block_size)
+        return {"paged": True, "cfg": cfg,
+                "pool_k": pool["k"], "pool_v": pool["v"],
+                "pa": PagedArena(batch, blocks, table_width, block_size),
+                "radix": RadixIndex(block_size, radix_tokens),
+                "pending": {}, "order": [],
+                "last": np.full((batch,), cfg.pad_id, np.int32),
+                "prefix_tokens": 0}
+
+    a = state.lease(handle, ttl_s=float(ttl_s),
+                    make=make if create else None)
+    pa, radix = a["pa"], a["radix"]
+    pending, order = a["pending"], a["order"]
+
+    for slot in free:
+        slot = int(slot)
+        pa.ref_dec(radix.evict())
+        pa.release(slot)
+        pending.pop(slot, None)
+
+    for slot, toks in admit:
+        slot = int(slot)
+        toks = [int(t) for t in toks]
+        matched = _paged_match(pa, radix, slot, toks, 0)
+        pending[slot] = {"tokens": toks, "done": matched, "matched": matched}
+        order.append(slot)
+
+    spent = 0
+    out: dict[int, dict] = {}
+    while order:
+        slot = order[0]
+        ent = pending.get(slot)
+        if ent is None:                       # freed mid-prefill
+            order.pop(0)
+            continue
+        toks, done = ent["tokens"], ent["done"]
+        done = _paged_match(pa, radix, slot, toks, done)
+        need = len(toks) - done
+        room = (len(toks) if budget <= 0
+                else budget - spent)
+        c_real = min(need, room)
+        if c_real <= 0:
+            break                             # budget exhausted this call
+        _paged_reserve(pa, radix, slot, done + c_real, handle)
+        c_b = shape_bucket(c_real)
+        chunk = np.full((1, c_b), cfg.pad_id, np.int32)
+        chunk[0, :c_real] = toks[done:done + c_real]
+        first, pk, pv = _paged_chunk_fn(cfg, c_b)(
+            params, a["pool_k"], a["pool_v"], jnp.asarray(chunk),
+            jnp.asarray(pa.table[slot:slot + 1]),
+            jnp.int32(done), jnp.int32(c_real))
+        a["pool_k"], a["pool_v"] = pk, pv
+        done += c_real
+        spent += c_real
+        ent["done"] = done
+        if done == len(toks):
+            order.pop(0)
+            pending.pop(slot)
+            pa.len[slot] = done
+            pa.live[slot] = True
+            t0 = int(np.asarray(first)[0])
+            a["last"][slot] = t0
+            nb_full = (done // pa.bs) * pa.bs
+            if nb_full and radix_tokens > 0:
+                new = radix.insert(toks[:nb_full],
+                                   list(pa.table[slot, :nb_full // pa.bs]))
+                pa.ref_inc(new)
+                pa.ref_dec(radix.evict())
+            out[slot] = {"live": True, "first": t0, "done": done,
+                         "matched": ent["matched"], "total": done}
+        else:
+            out[slot] = {"live": False, "first": None, "done": done,
+                         "matched": ent["matched"], "total": len(toks)}
+    a["prefix_tokens"] = radix.tokens
+    occ = pa.occupancy()
+    occ["radix_tokens"] = radix.tokens
+    a["occupancy"] = occ
+    # str slot keys: the wire serializer only carries str-keyed dicts
+    return {"slots": {str(s): v for s, v in out.items()},
+            "pending": len(pending), "occupancy": occ}
+
+
+def engine_paged_decode(params, *, cfg, handle, k, free_slots=(),
+                        ttl_s=state.DEFAULT_TTL_S):
+    """Paged decode-step entry point: release evicted rows (refcount drops
+    — the paged analogue of compaction), reserve blocks for ``k`` new
+    tokens per live row, advance every live row ``k`` greedy steps."""
+    a = state.get(handle, ttl_s=float(ttl_s))
+    pa, radix = a["pa"], a["radix"]
+    k = int(k)
+    for slot in free_slots:
+        slot = int(slot)
+        pa.ref_dec(radix.evict())            # keep index inside its budget
+        pa.release(slot)
+        a["pending"].pop(slot, None)
+    for slot in np.nonzero(pa.live)[0]:
+        _paged_reserve(pa, radix, int(slot), int(pa.len[slot]) + k, handle)
+    pk, pv, last, toks = _paged_decode_fn(cfg, k)(
+        params, a["pool_k"], a["pool_v"], jnp.asarray(pa.table),
+        jnp.asarray(pa.len), jnp.asarray(pa.live), jnp.asarray(a["last"]))
+    a["pool_k"], a["pool_v"] = pk, pv
+    a["last"] = np.asarray(last).astype(np.int32)
+    pa.len[pa.live] += k
+    occ = pa.occupancy()
+    occ["radix_tokens"] = radix.tokens
+    a["occupancy"] = occ
+    return {"tokens": np.asarray(toks), "occupancy": occ}
+
+
 # ------------------------------------------------------- row migration ------
 
 def migration_control(op: str, data: dict, body: bytes = b""):
@@ -406,7 +626,9 @@ class EngineClient:
     def __init__(self, server, *, rows: int, prompt_cap: int = 64,
                  quantum: int = DEFAULT_QUANTUM, prefix_tokens: int = 1 << 16,
                  ttl_s: float = state.DEFAULT_TTL_S, cap: int | None = None,
-                 affinity: int | None = None):
+                 affinity: int | None = None, paged: bool = False,
+                 block_size: int = 16, prefill_budget: int | None = None,
+                 pool_blocks: int | None = None):
         cfg = server.cfg
         if not arena_supported(cfg):
             raise ValueError(f"family {cfg.family!r} does not support "
@@ -416,8 +638,29 @@ class EngineClient:
         self.rows = int(rows)
         self.quantum = shape_bucket(max(1, quantum))
         self.cursor0 = shape_bucket(max(1, prompt_cap))
-        self.cap = int(cap) if cap is not None else shape_bucket(
-            self.cursor0 + max(4 * self.quantum, 2 * server.max_new))
+        # Paged serving needs the block-pool KV layout; ssm state is O(1)
+        # per row (no KV to page) and already admits arbitrary prompt
+        # lengths from the slot path, so a paged request degrades to the
+        # slot arena there — same contract, nothing to page.
+        self.paged = bool(paged) and cfg.family != "ssm" \
+            and paged_supported(cfg)
+        if self.paged:
+            self.block_size = shape_bucket(max(1, block_size))
+            # per-row token capacity; MUST stay a power of two — the
+            # gathered table view's reduction width is what keeps paged
+            # decode bit-identical to the contiguous solo path
+            self.cap = shape_bucket(cap) if cap is not None else \
+                shape_bucket(4 * max(self.cursor0,
+                                     server.max_new + self.quantum))
+            self.table_width = self.cap // self.block_size
+            self.pool_blocks = (int(pool_blocks) if pool_blocks is not None
+                                else 1 + self.rows * self.table_width)
+            self.prefill_budget = (int(prefill_budget)
+                                   if prefill_budget is not None
+                                   else max(4 * self.quantum, 16))
+        else:
+            self.cap = int(cap) if cap is not None else shape_bucket(
+                self.cursor0 + max(4 * self.quantum, 2 * server.max_new))
         self.ttl_s = float(ttl_s)
         self.affinity = (next(_affinity_counter) if affinity is None
                          else int(affinity))
@@ -425,6 +668,7 @@ class EngineClient:
         self.prefix_budget = int(prefix_tokens)
         self.prefix_hits = 0
         self.prefix_misses = 0
+        self.occupancy: dict = {}
         self._cursor = self.cursor0
         self._prefix: dict[str, int] = {}       # key -> token count, LRU order
         self._prefix_total = 0
@@ -433,20 +677,32 @@ class EngineClient:
         self._local_state = not sess.backend.capabilities.cross_process
         common = dict(memory_mb=server._memory_mb, serializer="binary",
                       affinity=self.affinity)
-        self._f_prefill = sess.function(
-            engine_prefill, name=f"engine_prefill_{cfg.name}",
-            jax_traceable=False, **common)
-        self._f_decode = sess.function(
-            engine_decode, name=f"engine_decode_{cfg.name}",
-            jax_traceable=False, **common)
+        if self.paged:
+            self._f_prefill = sess.function(
+                engine_paged_prefill, name=f"engine_paged_prefill_{cfg.name}",
+                jax_traceable=False, **common)
+            self._f_decode = sess.function(
+                engine_paged_decode, name=f"engine_paged_decode_{cfg.name}",
+                jax_traceable=False, **common)
+        else:
+            self._f_prefill = sess.function(
+                engine_prefill, name=f"engine_prefill_{cfg.name}",
+                jax_traceable=False, **common)
+            self._f_decode = sess.function(
+                engine_decode, name=f"engine_decode_{cfg.name}",
+                jax_traceable=False, **common)
 
     # ------------------------------------------------------------ sizing --
     def fits(self, prompt_len: int, max_new: int) -> bool:
         """Whether a request can ever live in this arena: its prompt must
         fit below the initial cursor and its whole span (prompt + decode +
-        one quantum of slack) below capacity after compaction."""
+        one quantum of slack) below capacity after compaction.  Paged
+        arenas have no prompt-cap bound — long prompts chunk-prefill —
+        only the per-row table capacity."""
         if self.cfg.family == "ssm":
             return True                      # O(1) state: no capacity bound
+        if self.paged:
+            return prompt_len + max_new + 2 * self.quantum <= self.cap
         return prompt_len <= self.cursor0 and \
             self.cursor0 + max_new + 2 * self.quantum <= self.cap
 
@@ -502,7 +758,7 @@ class EngineClient:
                                "the params artifact)")
         return ref
 
-    def submit_admit(self, items, create: bool = True):
+    def submit_admit(self, items, create: bool = True, free_slots=()):
         """Pack and dispatch one admission group.
 
         ``items``: ``[(slot, prompt), ...]``.  Returns ``(future,
@@ -511,8 +767,28 @@ class EngineClient:
         ``create=False`` asserts the arena already exists (the scheduler
         has live rows in it): an expired lease then surfaces as state
         lost instead of being silently rebuilt under those rows.
+
+        Paged mode sends the raw prompts (the worker's radix index is
+        authoritative for prefix matching — no client mirror) plus the
+        slots freed since the last call (``free_slots``, released
+        worker-side before any slot is re-admitted); the reply is
+        per-slot chunked-prefill progress, folded via
+        :meth:`observe_paged_prefill`.  ``free_slots`` is ignored on the
+        slot path (idle slots are masked by the decode step instead).
         """
         params = self._params()
+        if self.paged:
+            admit = tuple((int(s), tuple(int(t) for t in p))
+                          for s, p in items)
+            fut = self._f_prefill.submit(
+                params, cfg=self.cfg, handle=self.handle, batch=self.rows,
+                blocks=self.pool_blocks, table_width=self.table_width,
+                block_size=self.block_size, admit=admit,
+                free=tuple(int(s) for s in free_slots),
+                budget=self.prefill_budget,
+                radix_tokens=self.prefix_budget, create=bool(create),
+                ttl_s=self.ttl_s)
+            return fut, [s for s, _ in items]
         slots = [s for s, _ in items]
         prompts = [p for _, p in items]
         hits, misses, store, evict = self._prefix_plan(prompts)
@@ -539,6 +815,17 @@ class EngineClient:
             evict_keys=tuple(evict), create=bool(create), ttl_s=self.ttl_s)
         return fut, list(miss_slots) + list(hit_slots)
 
+    def submit_prefill_step(self, free_slots=()):
+        """Paged only: advance pending chunked prefills by one budget's
+        worth of tokens (no new admissions).  Returns the future."""
+        return self._f_prefill.submit(
+            self._params(), cfg=self.cfg, handle=self.handle,
+            batch=self.rows, blocks=self.pool_blocks,
+            table_width=self.table_width, block_size=self.block_size,
+            admit=(), free=tuple(int(s) for s in free_slots),
+            budget=self.prefill_budget,
+            radix_tokens=self.prefix_budget, create=False, ttl_s=self.ttl_s)
+
     def submit_step(self, k: int, free_slots=()):
         """Dispatch one ``k``-step decode chunk (optionally freeing evicted
         slots first); returns the invocation future."""
@@ -547,8 +834,26 @@ class EngineClient:
             free_slots=tuple(free_slots), ttl_s=self.ttl_s)
 
     def observe(self, reply: dict) -> dict:
-        """Fold a worker reply into the client mirrors (cursor)."""
+        """Fold a worker reply into the client mirrors (cursor /
+        occupancy)."""
+        if self.paged:
+            if "occupancy" in reply:
+                self.occupancy = dict(reply["occupancy"])
+            return reply
         self._cursor = int(reply["idx"])
+        return reply
+
+    def observe_paged_prefill(self, reply: dict) -> dict:
+        """Fold a paged prefill reply: occupancy mirror + prefix counters
+        (a slot whose matched head is non-empty counts as a prefix hit —
+        the paged analogue of the exact-match store hit)."""
+        self.observe(reply)
+        for info in reply.get("slots", {}).values():
+            if info.get("live"):
+                if info.get("matched", 0) > 0:
+                    self.prefix_hits += 1
+                else:
+                    self.prefix_misses += 1
         return reply
 
     # -------------------------------------------------------- migration --

@@ -119,18 +119,31 @@ def stats() -> dict[str, Any]:
     now = _now()
     with _LOCK:
         _sweep_locked(now)
+        detail = {}
+        # paged-arena occupancy rollup: live tokens / allocated blocks /
+        # shared (refcount > 1) blocks across every resident arena on this
+        # worker — block reuse is observable, not inferred (ISSUE 7)
+        arena = {"live_tokens": 0, "allocated_blocks": 0, "shared_blocks": 0}
+        for h, e in _ENTRIES.items():
+            d = {"age_s": round(now - e.created, 3),
+                 "ttl_s": e.ttl_s,
+                 "expires_in_s": round(e.deadline - now, 3),
+                 "touches": e.touches}
+            occ = e.data.get("occupancy")
+            if occ:
+                d["occupancy"] = dict(occ)
+                for key in arena:
+                    arena[key] += int(occ.get(key, 0))
+            detail[h] = d
         return {"handles": sorted(_ENTRIES),
                 "count": len(_ENTRIES),
                 "prefix_tokens": sum(
                     int(e.data.get("prefix_tokens", 0))
                     for e in _ENTRIES.values()),
+                "arena": arena,
                 # per-handle lease detail: what a scale-down refusal names
                 # and what fleet observability reports per worker
-                "detail": {h: {"age_s": round(now - e.created, 3),
-                               "ttl_s": e.ttl_s,
-                               "expires_in_s": round(e.deadline - now, 3),
-                               "touches": e.touches}
-                           for h, e in _ENTRIES.items()}}
+                "detail": detail}
 
 
 def control(op: str, data: dict[str, Any]) -> dict[str, Any]:

@@ -64,6 +64,10 @@ class BatcherStats:
     wave_fallbacks: int = 0          # requests too big for the arena
     state_resets: int = 0            # arenas rebuilt after state loss
     migrated_rows: int = 0           # prefill→decode row hand-offs (fleet)
+    # paged-arena occupancy peaks (ISSUE 7), folded from worker replies
+    live_tokens_peak: int = 0
+    allocated_blocks_peak: int = 0
+    shared_blocks_peak: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -85,7 +89,10 @@ class BatcherStats:
                         "prefix_misses": self.prefix_misses,
                         "wave_fallbacks": self.wave_fallbacks,
                         "state_resets": self.state_resets,
-                        "migrated_rows": self.migrated_rows})
+                        "migrated_rows": self.migrated_rows,
+                        "live_tokens_peak": self.live_tokens_peak,
+                        "allocated_blocks_peak": self.allocated_blocks_peak,
+                        "shared_blocks_peak": self.shared_blocks_peak})
         return out
 
 
@@ -136,11 +143,18 @@ class EngineLoop:
                  max_batch: int = 8, quantum: int = 8, prompt_cap: int = 64,
                  prefix_tokens: int = 1 << 16, arena_cap: int | None = None,
                  lease_ttl_s: float = 60.0, role: str = "unified",
-                 handoff=None, intake=None):
+                 handoff=None, intake=None, paged: bool = False,
+                 block_size: int = 16, prefill_budget: int | None = None,
+                 pool_blocks: int | None = None):
         if role not in ("unified", "prefill", "decode"):
             raise ValueError(f"unknown engine-loop role {role!r}")
         if role == "prefill" and handoff is None:
             raise ValueError("a prefill-role loop needs a handoff callback")
+        if paged and role != "unified":
+            # row migration moves contiguous cache rows; a paged row is a
+            # table of shared refcounted blocks with no standalone payload
+            raise ValueError("paged arenas serve role='unified' only "
+                             "(block tables cannot migrate between pools)")
         self.server = server
         self.index = index
         self.queue = queue
@@ -155,7 +169,12 @@ class EngineLoop:
         self.draining = False
         self.engine = None                     # set once run() starts
         self.live: dict[int, _LiveRow] = {}
+        self.pending: dict[int, _LiveRow] = {}  # paged: prefill in flight
         self._free: deque[int] = deque()
+        # paged: slots evicted locally but not yet released worker-side —
+        # shipped as ``free_slots`` on the next engine call so blocks are
+        # always given back BEFORE a slot id can be re-admitted
+        self._to_free: set[int] = set()
         # per-member accounting the fleet router/bench report
         self.served = 0
         self.chunks = 0
@@ -165,7 +184,9 @@ class EngineLoop:
         self._kwargs = dict(rows=max(1, max_batch),
                             prompt_cap=prompt_cap, quantum=quantum,
                             prefix_tokens=prefix_tokens, ttl_s=lease_ttl_s,
-                            cap=arena_cap)
+                            cap=arena_cap, paged=paged, block_size=block_size,
+                            prefill_budget=prefill_budget,
+                            pool_blocks=pool_blocks)
 
     # -------------------------------------------------------- router view --
     @property
@@ -174,14 +195,15 @@ class EngineLoop:
 
     @property
     def free_rows(self) -> int:
-        return self.rows - len(self.live)
+        return self.rows - len(self.live) - len(self.pending)
 
     @property
     def load(self) -> int:
-        """Row-units of work this member owns (queued + live + in-flight
-        hand-offs) — what the router's least-loaded policies compare."""
+        """Row-units of work this member owns (queued + live + pending +
+        in-flight hand-offs) — what the router's least-loaded policies
+        compare."""
         pend = sum(1 for _, f in self.queue if not f.done())
-        return pend + len(self.live) + len(self.intake)
+        return pend + len(self.live) + len(self.pending) + len(self.intake)
 
     @property
     def closing(self) -> bool:
@@ -211,10 +233,12 @@ class EngineLoop:
         self.served += 1
 
     def _lose_state(self, err: BaseException) -> None:
-        for slot, row in self.live.items():
-            self._fail(row.fut, err, "engine failed")
-            self._free.append(slot)
-        self.live.clear()
+        for rows in (self.live, self.pending):
+            for slot, row in rows.items():
+                self._fail(row.fut, err, "engine failed")
+                self._free.append(slot)
+            rows.clear()
+        self._to_free.clear()      # the new handle starts with a fresh pool
         self.engine.reset()
         self.stats.state_resets += 1
 
@@ -252,6 +276,11 @@ class EngineLoop:
                     await self._admit_migrated(loop, is_state_lost)
                 else:
                     await self._admit_prompts(loop, is_state_lost)
+                # paged: advance in-flight chunked prefills by one budget's
+                # worth of tokens, so long prompts interleave with the
+                # decode chunk below instead of stalling it
+                if self.pending:
+                    await self._advance_prefill(loop, is_state_lost)
                 # fold this engine's prefix-mirror counters into the shared
                 # stats as deltas (several engine loops share one stats)
                 self.stats.prefix_hits += engine.prefix_hits - hits_seen
@@ -267,17 +296,24 @@ class EngineLoop:
                         self._complete_row(row, now)
                         del live[slot]
                         free.append(slot)
+                        if engine.paged:
+                            self._to_free.add(slot)
+                for slot in list(self.pending):   # cancelled mid-prefill
+                    if self.pending[slot].fut.done():
+                        self._complete_row(self.pending.pop(slot), now)
+                        free.append(slot)
+                        self._to_free.add(slot)
 
                 # ------------------------------------------ idle / close
                 if not live:
-                    pending = (self.intake if self.role == "decode"
+                    waiting = (self.intake if self.role == "decode"
                                else self.queue)
-                    if pending:
-                        continue        # free slots exist: admit again
+                    if waiting or self.pending:
+                        continue        # free slots / prefill work remain
                     if self.closing:
                         return
                     self.arrived.clear()
-                    if pending or self.closing:
+                    if waiting or self.closing:
                         continue
                     await self.arrived.wait()
                     continue
@@ -285,11 +321,16 @@ class EngineLoop:
                 # -------------------------------------------- decode chunk
                 k = engine.choose_k(max(row.remaining
                                         for row in live.values()))
-                # free every non-live slot, not just freshly-evicted ones:
-                # an idle freed slot whose start stayed at its freeze-time
-                # value would pin arena compaction forever
-                idle = tuple(s for s in range(engine.rows)
-                             if s not in live)
+                if engine.paged:
+                    # paged slots release by refcount drop, exactly once
+                    # per eviction (a pending slot's blocks must survive)
+                    idle = tuple(self._to_free)
+                else:
+                    # free every non-live slot, not just freshly-evicted
+                    # ones: an idle freed slot whose start stayed at its
+                    # freeze-time value would pin arena compaction forever
+                    idle = tuple(s for s in range(engine.rows)
+                                 if s not in live)
                 try:
                     inv_fut = await loop.run_in_executor(
                         self.cpu, engine.submit_step, k, idle)
@@ -299,6 +340,8 @@ class EngineLoop:
                     if isinstance(e, asyncio.CancelledError):
                         raise
                     continue
+                self._to_free.difference_update(idle)
+                self._note_occupancy()
                 toks = reply["tokens"]
                 rec = inv_fut.record
                 share = (rec.billed_gb_s / len(live)) if rec else 0.0
@@ -335,6 +378,9 @@ class EngineLoop:
                         "arena and no fallback is configured"), "admission")
                 continue
             take.append((free.popleft(), r, fut))
+        if engine.paged:
+            await self._admit_paged(loop, is_state_lost, take)
+            return
         if not take:
             return
         t_sent = loop.time()
@@ -368,6 +414,95 @@ class EngineLoop:
         self.stats.admission_groups += 1
         if self.role == "prefill":
             await self._handoff_rows(loop, list(live), is_state_lost)
+
+    # ------------------------------------------------- paged admission --
+    def _promote(self, reply: dict, now: float, share: float = 0.0) -> None:
+        """Move pending rows whose chunked prefill just completed into the
+        live set, stamping TTFT at the reply that produced their first
+        token (not at admission — a long prompt's TTFT includes every
+        chunk it waited through)."""
+        for slot, info in reply.get("slots", {}).items():
+            row = self.pending.get(int(slot))
+            if row is None:
+                continue
+            row.cost_gb_s += share
+            if info.get("live"):
+                del self.pending[int(slot)]
+                row.tokens.append(int(info["first"]))
+                row.ttft_ms = (now - row.t_arrival) * 1000.0
+                self.live[int(slot)] = row
+
+    def _note_occupancy(self) -> None:
+        occ = self.engine.occupancy
+        if not occ:
+            return
+        st = self.stats
+        st.live_tokens_peak = max(st.live_tokens_peak,
+                                  int(occ.get("live_tokens", 0)))
+        st.allocated_blocks_peak = max(st.allocated_blocks_peak,
+                                       int(occ.get("allocated_blocks", 0)))
+        st.shared_blocks_peak = max(st.shared_blocks_peak,
+                                    int(occ.get("shared_blocks", 0)))
+
+    async def _admit_paged(self, loop, is_state_lost, take) -> None:
+        """Paged admission: one prefill round-trip admits the new rows and
+        advances them up to the chunk budget.  Rows that finish inside the
+        call go live with their first token; the rest stay pending and
+        advance via :meth:`_advance_prefill` on later iterations."""
+        engine, live, free = self.engine, self.live, self._free
+        if not take:
+            return
+        t_sent = loop.time()
+        try:
+            inv_fut, _ = await loop.run_in_executor(
+                self.cpu, engine.submit_admit,
+                [(slot, r.prompt) for slot, r, _ in take],
+                not (live or self.pending), tuple(self._to_free))
+            reply = engine.observe_paged_prefill(
+                await await_invocation(inv_fut))
+        except BaseException as e:
+            for slot, _, fut in take:
+                free.append(slot)
+                self._fail(fut, e, "admission failed")
+            if is_state_lost(e):
+                self._lose_state(e)
+            if isinstance(e, asyncio.CancelledError):
+                raise
+            return
+        self._to_free.clear()
+        now = loop.time()
+        rec = inv_fut.record
+        share = (rec.billed_gb_s / len(take)) if rec else 0.0
+        for slot, r, fut in take:
+            self.pending[slot] = _LiveRow(request=r, fut=fut,
+                                          t_arrival=t_sent)
+        self._promote(reply, now, share)
+        self.stats.admission_groups += 1
+        self._note_occupancy()
+
+    async def _advance_prefill(self, loop, is_state_lost) -> None:
+        """One budget's worth of chunked-prefill progress for the pending
+        rows (no new admissions).  Any failure here is arena-fatal — the
+        pool's block accounting is mid-flight — so it resets like a failed
+        decode chunk."""
+        engine = self.engine
+        try:
+            inv_fut = await loop.run_in_executor(
+                self.cpu, engine.submit_prefill_step, tuple(self._to_free))
+            reply = engine.observe_paged_prefill(
+                await await_invocation(inv_fut))
+        except BaseException as e:
+            self._lose_state(e)
+            if isinstance(e, asyncio.CancelledError):
+                raise
+            return
+        self._to_free.clear()
+        rec = inv_fut.record
+        n = max(1, len(self.pending))
+        share = (rec.billed_gb_s / n) if rec else 0.0
+        self._promote(reply, loop.time(), share)
+        self.stats.admission_groups += 1
+        self._note_occupancy()
 
     async def _handoff_rows(self, loop, slots, is_state_lost) -> None:
         """Prefill role: pull the freshly-prefilled rows out of the arena
@@ -459,13 +594,26 @@ class ContinuousBatcher:
     ``prefix_tokens`` budget of the worker-resident prompt-prefix cache
     (LRU by token count; 0 disables), ``arena_cap`` cache capacity
     override, ``lease_ttl_s`` the worker-side state lease.
+
+    Paged knobs (ISSUE 7): ``paged=True`` swaps each slot arena for a
+    refcounted block-pool KV arena — prompts above ``prompt_cap`` no
+    longer fall back to solo waves (prefill is chunked under
+    ``prefill_budget`` tokens per engine call), and the prefix store
+    becomes a radix index whose shared prefixes share physical blocks.
+    ``block_size`` is the KV block granularity (rounded to a power of
+    two), ``pool_blocks`` overrides the pool size.  Ignored on families
+    without a paged layout (ssm serves from the slot arena, which already
+    admits any prompt length) and on the batch-level path.
     """
 
     def __init__(self, server: LMServer, *, max_batch: int = 8,
                  slots: int = 2, max_wait_ms: float = 10.0,
                  iteration_level: bool | None = None, quantum: int = 8,
                  prompt_cap: int = 64, prefix_tokens: int = 1 << 16,
-                 arena_cap: int | None = None, lease_ttl_s: float = 60.0):
+                 arena_cap: int | None = None, lease_ttl_s: float = 60.0,
+                 paged: bool = False, block_size: int = 16,
+                 prefill_budget: int | None = None,
+                 pool_blocks: int | None = None):
         self._server = server
         self._max_batch = max(1, max_batch)
         self._n_slots = max(1, slots)
@@ -476,6 +624,10 @@ class ContinuousBatcher:
         self._prefix_tokens = max(0, prefix_tokens)
         self._arena_cap = arena_cap
         self._lease_ttl_s = lease_ttl_s
+        self._paged = bool(paged)
+        self._block_size = max(1, block_size)
+        self._prefill_budget = prefill_budget
+        self._pool_blocks = pool_blocks
         self._queue: deque[tuple[Request, asyncio.Future]] = deque()
         self._slots: asyncio.Semaphore | None = None
         self._arrived: asyncio.Event | None = None
@@ -719,8 +871,10 @@ class ContinuousBatcher:
             is_closed=lambda: self._closed, fallback=self._fallback_wave,
             max_batch=self._max_batch, quantum=self._quantum,
             prompt_cap=self._prompt_cap, prefix_tokens=self._prefix_tokens,
-            arena_cap=self._arena_cap,
-            lease_ttl_s=self._lease_ttl_s).run()
+            arena_cap=self._arena_cap, lease_ttl_s=self._lease_ttl_s,
+            paged=self._paged, block_size=self._block_size,
+            prefill_budget=self._prefill_budget,
+            pool_blocks=self._pool_blocks).run()
 
 
 def run_continuous(server: LMServer, requests: Sequence[Request], *,

@@ -316,6 +316,35 @@ def test_iteration_long_prompt_falls_back_to_wave(lm_setup):
         server.close(prune=False)
 
 
+def test_paged_retires_the_prompt_cap_fallback(lm_setup):
+    """The same over-cap prompt served from a paged arena (ISSUE 7):
+    chunked prefill admits it iteration-level — no solo-wave fallback —
+    and the tokens stay bit-identical to the solo run.  (The full paged
+    matrix lives in tests/test_paged.py.)"""
+    cfg, params = lm_setup
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=[1, 2, 3], max_new=3),
+            Request(prompt=list(rng.integers(1, cfg.vocab_size, 40)),
+                    max_new=3)]
+    with Session("inline") as sess:
+        server = LMServer(cfg, params, session=sess, max_new=4)
+        solo = solo_reference(server, reqs)
+
+        async def go():
+            async with ContinuousBatcher(server, max_batch=2, slots=1,
+                                         prompt_cap=8, paged=True,
+                                         block_size=4,
+                                         prefill_budget=8) as b:
+                comps = await asyncio.gather(*[b.submit(r) for r in reqs])
+                return comps, b.stats
+
+        comps, stats = asyncio.run(go())
+        assert [c.tokens for c in comps] == solo
+        assert stats.wave_fallbacks == 0
+        assert stats.live_tokens_peak > 0        # served from the block pool
+        server.close(prune=False)
+
+
 # ----------------------------------------- fleet invariance (ISSUE 6) ----
 # The routing layer must be invisible in the tokens: prefix-routed
 # placement, prefill→decode row migration over real CONTROL frames, and a

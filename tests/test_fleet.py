@@ -181,6 +181,37 @@ def test_p2c_picks_less_loaded_of_two():
     assert picks == {1}
 
 
+def test_radix_policy_routes_longest_shared_prefix_to_owner():
+    """ISSUE 7: unlike ``prefix`` (whole-prompt hash), the radix policy
+    routes any prompt *sharing a block-aligned head* with a claimed run
+    to that run's owner — extensions and partial overlaps included."""
+    from repro.runtime.radix import RadixIndex
+
+    r = _stub_router(policy="radix")
+    r._radix = RadixIndex(4, budget_tokens=1 << 16)
+    a, b = _stub_member(0, 0), _stub_member(1, 0)
+    head = [3, 1, 4, 1, 5, 9, 2, 6]
+    owner, how = r._choose(list(head), [a, b])
+    assert how == "p2c"                      # first sight claims the head
+    # an extension (NOT an exact repeat) still routes to the owner
+    m, how = r._choose(head + [99, 98, 97], [a, b])
+    assert m is owner and how == "prefix"
+    # a partial overlap (first block only) routes there too
+    m, how = r._choose(head[:4] + [7, 7, 7, 7], [a, b])
+    assert m is owner and how == "prefix"
+    # overload spills via p2c without reclaiming the runs
+    owner.loop.load = 8
+    m, how = r._choose(list(head), [a, b])
+    assert m is not owner and how == "p2c"
+    assert r.stats.spills == 1
+    owner.loop.load = 0
+    m, how = r._choose(list(head), [a, b])
+    assert m is owner and how == "prefix"
+    # a prompt shorter than one block can never be claimed or matched
+    m, how = r._choose([5, 5], [a, b])
+    assert how == "p2c" and r._radix.match([5, 5]) == (0, [])
+
+
 # ---------------------------------------------------- controller policy ----
 
 class _StubFleet:
