@@ -68,6 +68,7 @@ import argparse
 import asyncio
 import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -243,12 +244,31 @@ def summarize(lats_ms: list[float], wall_s: float, n_requests: int,
 
 
 def _token_metrics(comps, lats_ms):
-    """Client-side TTFT/TPOT: completions carry ttft_ms where the
-    scheduler streams (iteration-level); batch-level completions fall back
-    to their completion latency — the honest number for a scheduler whose
-    whole batch joins at once."""
+    """Client-side TTFT/TPOT from the scheduler's per-token stamps.
+
+    Iteration-level completions carry ``token_times_ms`` — stamped ONCE at
+    each decode-chunk reply by the batcher — so TTFT is ``times[0]``
+    (equal to ``ttft_ms`` by construction; asserted) and TPOT is the
+    measured inter-token spread ``(times[-1] - times[0]) / (n - 1)``
+    instead of being re-derived from the completion latency.  The derived
+    TPOT can only over-estimate (latency includes the post-decode join),
+    which the assert pins down.  Batch-level completions have no token
+    stream: TTFT falls back to the completion latency and TPOT to the old
+    derivation — the honest numbers for a scheduler whose whole batch
+    joins at once."""
     ttfts, tpots = [], []
     for comp, lat in zip(comps, lats_ms):
+        times = comp.token_times_ms
+        if times:
+            assert comp.ttft_ms is None or times[0] == comp.ttft_ms, \
+                (times[0], comp.ttft_ms)
+            ttfts.append(times[0])
+            if len(times) > 1:
+                tpot = (times[-1] - times[0]) / (len(times) - 1)
+                derived = max(0.0, lat - times[0]) / (len(times) - 1)
+                assert tpot <= derived + 1e-6, (tpot, derived)
+                tpots.append(tpot)
+            continue
         ttft = comp.ttft_ms if comp.ttft_ms is not None else lat
         ttfts.append(ttft)
         n = len(comp.tokens)
@@ -643,7 +663,19 @@ def main(argv=None):
                     help=f"comma list from {MODES}")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write the repro.serve_bench/v2 document here")
+    ap.add_argument("--trace", dest="trace_path", default=None,
+                    help="record request spans and write Chrome-trace JSON "
+                         "here (open in chrome://tracing or Perfetto)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    help="fraction of requests to trace (default 1.0 when "
+                         "--trace is given, else 0 = off)")
     args = ap.parse_args(argv)
+
+    if args.trace_path or args.trace_sample is not None:
+        from repro.obs import trace as obs_trace
+        obs_trace.configure(sample=(args.trace_sample
+                                    if args.trace_sample is not None
+                                    else 1.0))
 
     modes = tuple(m for m in args.modes.split(",") if m)
     if args.paged == "on" and "continuous-paged" not in modes:
@@ -672,6 +704,11 @@ def main(argv=None):
     if args.json_path:
         with open(args.json_path, "w") as f:
             f.write(text + "\n")
+    if args.trace_path:
+        from repro.obs import trace as obs_trace
+        n = obs_trace.TRACER.dump(args.trace_path)
+        print(f"trace: {n} span events -> {args.trace_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

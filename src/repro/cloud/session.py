@@ -40,6 +40,8 @@ from ..dispatch.dispatcher import Dispatcher, DispatcherInstance
 from ..dispatch.futures import InvocationFuture, as_completed
 from ..dispatch.latency_model import DEFAULT_LATENCY, LatencyModel
 from ..dispatch.workers import FaultPlan
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 _CONFIG_FIELDS = frozenset(f.name for f in dataclasses.fields(FunctionConfig))
 
@@ -148,7 +150,21 @@ class Session:
                  fault_plan: FaultPlan | None = None,
                  manifest_path: str | None = None,
                  shed: bool = False,
-                 dispatcher: Dispatcher | None = None):
+                 dispatcher: Dispatcher | None = None,
+                 trace_sample: float | None = None,
+                 obs_enabled: bool | None = None):
+        # observability knobs land on the PROCESS tracer (one trace plane
+        # per process, like the metrics registry) — last session to set
+        # them wins.  trace_sample=1.0 records every request's span tree;
+        # the default (sample 0, disabled) keeps every instrumentation
+        # site on its few-ns attribute-check path.
+        if trace_sample is not None or obs_enabled is not None:
+            kw: dict = {}
+            if trace_sample is not None:
+                kw["sample"] = trace_sample
+            if obs_enabled is not None:
+                kw["enabled"] = obs_enabled
+            obs_trace.configure(**kw)
         self._shed = shed
         self._admission_lock = threading.Lock()
         self._admitted = 0            # shed-mode reservations not yet resolved
@@ -314,7 +330,25 @@ class Session:
                 out.update(bstats())
             except Exception as e:     # a dead fleet still reports the rest
                 out["error"] = str(e) or type(e).__name__
+        if "metrics" not in out:
+            # in-process backends have no worker fleet to aggregate from:
+            # the process-default registry plus the pool's sandbox registry
+            # IS the whole metrics plane
+            merged = obs_metrics.Registry()
+            merged.merge(obs_metrics.REGISTRY.snapshot())
+            sb = getattr(self.backend, "sandboxes", None)
+            if sb is not None:
+                merged.merge(sb.metrics.snapshot())
+            out["metrics"] = merged.snapshot()
         return out
+
+    def dump_trace(self, path: str) -> int:
+        """Write every span recorded this process (client-side plus the
+        worker-side spans shipped back on reply envelopes) as Chrome-trace
+        JSON — open in ``chrome://tracing`` / Perfetto.  Returns the event
+        count.  Needs ``trace_sample > 0`` (or ``obs.configure``) to have
+        recorded anything."""
+        return obs_trace.TRACER.dump(path)
 
     def modeled_latencies_ms(self) -> list[float]:
         return self._inst.modeled_latencies_ms()

@@ -37,6 +37,7 @@ from typing import Any, Callable, Sequence
 from ..core.config import DEFAULT_CONFIG, FunctionConfig
 from ..core.deploy import DeployedFunction, Deployment
 from ..core.function import RemoteFunction, data_captures
+from ..obs import trace as obs_trace
 from .backends import Backend, resolve_backend
 from .cost import CostReport
 from .futures import Invocation, InvocationFuture, InvocationRecord
@@ -117,8 +118,45 @@ class DispatcherInstance:
         inv = Invocation(task_id=task_id, deployed=deployed, payload=payload,
                          future=fut, config=self._resolve_config(fn, config),
                          on_complete=self._on_complete)
+        if obs_trace.TRACER.enabled:
+            self._trace_dispatch(inv, deployed)
         self.d.backend.submit(inv)
         return fut
+
+    def _trace_dispatch(self, inv: Invocation, deployed) -> None:
+        """Mint the root ``client.submit`` span for a sampled request.
+
+        The span parents under the thread's current context when one is
+        bound (the engine loop binds its chunk span around dispatches, so
+        worker round-trips nest inside engine spans); otherwise it starts
+        a fresh trace, subject to the sampler.  It finishes when the
+        future settles — error details (including the worker's traceback,
+        the error-context satellite) land as span attributes.
+        """
+        tracer = obs_trace.TRACER
+        parent = tracer.current()
+        span = (tracer.span("client.submit", parent) if parent is not None
+                else tracer.start_trace("client.submit"))
+        if not span:
+            return
+        span.set("function", deployed.bridge.name)
+        span.set("task_id", inv.task_id)
+        span.set("payload_bytes", len(inv.payload))
+        inv.trace = span.ctx
+
+        def _finish(fut: InvocationFuture) -> None:
+            err = fut.exception(timeout=0)
+            if err is None:
+                span.finish()
+                return
+            span.set("error.type", type(err).__name__)
+            span.set("error.message", str(err))
+            rtb = getattr(err, "remote_traceback", "")
+            if rtb:
+                span.set("error.remote_traceback", rtb)
+            span.finish("error")
+
+        inv.future.add_done_callback(_finish)
 
     def map_futures(self, fn: Callable | RemoteFunction,
                     arglists: Sequence[tuple],
@@ -195,7 +233,8 @@ class DispatcherInstance:
             retry = Invocation(task_id=inv.task_id, deployed=inv.deployed,
                                payload=inv.payload, future=inv.future,
                                attempt=inv.attempt + 1, is_hedge=inv.is_hedge,
-                               config=inv.config, on_complete=self._on_complete)
+                               config=inv.config, on_complete=self._on_complete,
+                               trace=inv.trace)
             self.d.backend.submit(retry)
             return
         # claim → record → resolve: exactly one of a hedge pair wins the

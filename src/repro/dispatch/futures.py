@@ -252,3 +252,7 @@ class Invocation:
     # set by the dispatcher: (inv, ok, value_or_error, record) -> None.
     # Lets retry/hedging policy live in the dispatcher, not the pool.
     on_complete: Callable[["Invocation", bool, Any, InvocationRecord], None] | None = None
+    # obs.trace.SpanContext of the root client.submit span, when this
+    # request was sampled; transports parent their spans under it and put
+    # its wire form on the INVOKE envelope.
+    trace: Any = None

@@ -36,10 +36,23 @@ import queue as queue_mod
 from typing import Any
 
 from ..core.deploy import Deployment
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..runtime.sandbox import WorkerCrash
 from ..serialization import wire
 from .futures import Invocation, InvocationRecord
 from .workers import BackendCapabilities, fill_record
+
+# client-side transport metrics (process-default registry; the worker-side
+# twins ride back through host_stats and merge in ``stats()``)
+_M_REQS = obs_metrics.REGISTRY.counter(
+    "client_requests_total", "invocations sent over a real transport")
+_M_CRASH = obs_metrics.REGISTRY.counter(
+    "client_worker_crashes_total", "transport-level worker losses")
+_M_RTT = obs_metrics.REGISTRY.histogram(
+    "client_roundtrip_ms", "measured client-observed round-trip (ms)")
+_M_QDEPTH = obs_metrics.REGISTRY.gauge(
+    "client_queue_depth", "invocations waiting for a dispatch thread")
 
 
 def _deliver(inv: Invocation, ok: bool, value: Any,
@@ -189,6 +202,9 @@ class _TransportBackend:
         workers: dict[int, dict] = {}
         totals = {"cold_starts": 0, "warm_hits": 0, "busy_s": 0.0,
                   "state_handles": 0}
+        _M_QDEPTH.set(self.queue_depth)
+        merged = obs_metrics.Registry()
+        merged.merge(obs_metrics.REGISTRY.snapshot())
         for idx, slot in sorted(slots.items()):
             if slot is None:
                 continue
@@ -198,13 +214,15 @@ class _TransportBackend:
                 workers[idx] = {"error": str(e) or type(e).__name__}
                 continue
             workers[idx] = d
+            merged.merge(d.get("metrics"))
             sb = d.get("sandboxes", {})
             totals["cold_starts"] += int(sb.get("cold_starts", 0))
             totals["warm_hits"] += int(sb.get("warm_hits", 0))
             totals["busy_s"] += float(sb.get("busy_s", 0.0))
             totals["state_handles"] += int(d.get("state", {}).get("count", 0))
         return {"n_workers": n, "spawned": len(workers),
-                "affinity_slots": pinned, "workers": workers, **totals}
+                "affinity_slots": pinned, "workers": workers,
+                "metrics": merged.snapshot(), **totals}
 
     def scale_to(self, os_threads: int) -> None:
         n = max(1, int(os_threads))
@@ -354,8 +372,23 @@ class _TransportBackend:
             attempts=inv.attempt, hedged=inv.is_hedge,
             payload_bytes=len(inv.payload),
             memory_gb=bridge.config.memory_gb)
-        request = wire.encode_invoke(bridge.name, inv.payload,
-                                     task_id=inv.task_id, attempt=inv.attempt)
+        label = type(self).__name__
+        _M_REQS.inc(backend=label)
+        ctx = inv.trace
+        request = wire.encode_invoke(
+            bridge.name, inv.payload, task_id=inv.task_id,
+            attempt=inv.attempt,
+            trace=ctx.to_wire() if ctx is not None else None)
+        tracer = obs_trace.TRACER
+        if ctx is not None and ctx.t_start:
+            # queue wait = context mint (dispatch) → this thread picking
+            # the invocation up; derived, not measured, so it costs nothing
+            # on the submit path
+            tracer.span_at("client.queue", ctx, ctx.t_start,
+                           max(0.0, time.time() - ctx.t_start), slot=idx)
+        tspan = (tracer.span("client.transport", ctx, slot=idx,
+                             backend=label)
+                 if ctx is not None else obs_trace.NOOP)
         try:
             slot = self._slot_for(idx)
             t0 = time.perf_counter()
@@ -365,12 +398,20 @@ class _TransportBackend:
         except Exception as e:
             # transport loss: burn the slot, surface a retryable crash
             detail = self._discard_slot(idx, e)
+            _M_CRASH.inc(backend=label)
+            tspan.set("error.type", type(e).__name__)
+            tspan.set("error.detail", detail[:2000])
+            tspan.finish("error")
             _deliver(inv, False,
                      _worker_crash(f"worker {idx} died mid-request "
                                    f"(task {inv.task_id}): {detail}"), rec)
             return
         rec.modeled_latency_ms = measured_ms
         rec.latency_measured = True
+        _M_RTT.observe(measured_ms, backend=label)
+        tspan.set("bytes_out", len(request))
+        tspan.set("bytes_in", len(reply))
+        tspan.finish()
         self._complete(inv, reply, rec)
 
     def _serve_missing_artifacts(self, slot, request: bytes,
@@ -410,6 +451,11 @@ class _TransportBackend:
             _deliver(inv, False,
                      _worker_crash(f"undecodable worker reply: {e}"), rec)
             return
+        # worker-side spans ride the reply envelope (RESULT and ERROR both):
+        # adopt them into the client collector so the tree stitches
+        spans = getattr(msg, "spans", None)
+        if spans:
+            obs_trace.TRACER.ingest(spans)
         if isinstance(msg, wire.ErrorReply):
             if msg.retryable:
                 _deliver(inv, False, _worker_crash(

@@ -170,6 +170,14 @@ class WorkerPool:
             else:
                 inv.future.set_error(value, record)
 
+        # the in-process analogue of the worker-side entry span: same name
+        # ("worker.entry"), same parent (the request's submit span), so a
+        # trace looks the same whether the entry ran in a thread or a child
+        # process
+        from ..obs import trace as obs_trace
+        espan = (obs_trace.TRACER.span("worker.entry", inv.trace,
+                                       function=bridge.name)
+                 if inv.trace is not None else obs_trace.NOOP)
         try:
             done = self.sandboxes.invoke(
                 bridge.entry, bridge.name, inv.payload,
@@ -177,13 +185,21 @@ class WorkerPool:
             fill_record(rec, stats=done.stats, server_s=done.server_s,
                         worker_id=done.worker_id, cold_start=done.cold_start,
                         result_bytes=len(done.blob))
+            espan.set("cold_start", done.cold_start)
+            espan.set("worker_id", done.worker_id)
+            espan.finish()
             finish(True, bridge.unpack_result(done.blob), rec)
         except WorkerCrash as e:
             self._stamp_failure(rec, e)
+            espan.set("error.type", type(e).__name__)
+            espan.finish("error")
             finish(False, e, rec)          # dispatcher decides on retry
         except BaseException as e:         # user-code error: no retry
             self._stamp_failure(rec, e)
             rec.server_s = 0.0
+            espan.set("error.type", type(e).__name__)
+            espan.set("error.message", str(e))
+            espan.finish("error")
             finish(False, e, rec)
 
     @staticmethod

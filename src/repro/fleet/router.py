@@ -36,17 +36,29 @@ from __future__ import annotations
 
 import asyncio
 import random
+import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..runtime.engine import prefix_key
 from ..runtime.server import Completion, LMServer, Request
 from ..serving.aio import await_invocation
 from ..serving.batcher import BatcherStats, EngineLoop
 
 __all__ = ["FleetMember", "FleetRouter", "FleetStats", "run_fleet"]
+
+# registry mirrors of the FleetStats fields — same numbers, uniform
+# names/labels next to the client transport and engine-loop metrics
+_M_ROUTED = obs_metrics.REGISTRY.counter(
+    "fleet_routed_total", "requests placed on a fleet member")
+_M_SCALE = obs_metrics.REGISTRY.counter(
+    "fleet_scale_events_total", "elastic grow/drain decisions")
+_M_HANDOFF = obs_metrics.REGISTRY.counter(
+    "fleet_handoffs_total", "prefill→decode migration groups")
 
 
 @dataclass
@@ -185,6 +197,15 @@ class FleetRouter:
                                        thread_name_prefix="repro-fleet")
         self.batcher_stats = BatcherStats(mode="iteration")
         self.stats = FleetStats()
+        self._root_span = obs_trace.NOOP
+
+    def _event_span(self, name: str, **attrs) -> None:
+        """Instant marker under the fleet root trace (grow/drain/handoff
+        are routing-set *moments*, not intervals)."""
+        root = self._root_span
+        if root:
+            obs_trace.TRACER.span_at(name, root.ctx, time.time(), 0.0,
+                                     **attrs)
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -194,6 +215,10 @@ class FleetRouter:
             raise RuntimeError("fleet router is closed")
         self._started = True
         self._arrived = asyncio.Event()
+        if obs_trace.TRACER.enabled:
+            self._root_span = obs_trace.TRACER.start_trace(
+                "fleet.serve", policy=self.policy,
+                disaggregate=self.disaggregate, elastic=self.elastic)
         initial = self.min_members if self.elastic else self.n_members
         if self.disaggregate:
             initial = max(initial, 2)   # never fewer than one of each role
@@ -236,6 +261,12 @@ class FleetRouter:
             await asyncio.gather(*tasks, return_exceptions=True)
         if self._solo_tasks:
             await asyncio.gather(*self._solo_tasks, return_exceptions=True)
+        if self._root_span:
+            self._root_span.set("routed", self.stats.routed_total)
+            self._root_span.set("scale_events",
+                                len(self.stats.scale_events))
+            self._root_span.finish()
+            self._root_span = obs_trace.NOOP
         for m in self.members:
             for q in (m.loop.queue, m.loop.intake):
                 while q:
@@ -304,6 +335,9 @@ class FleetRouter:
             "member": member.index, "role": member.role, "reason": reason,
             "active": len(self.active_members),
             "queued": self.backlog})
+        _M_SCALE.inc(action=action, role=member.role)
+        self._event_span(f"fleet.{action}", member=member.index,
+                         role=member.role, reason=reason)
 
     def grow(self, role: str | None = None,
              reason: str = "manual") -> FleetMember:
@@ -416,6 +450,7 @@ class FleetRouter:
         member, how = self._choose(request.prompt, targets)
         setattr(self.stats, f"routed_{how}",
                 getattr(self.stats, f"routed_{how}") + 1)
+        _M_ROUTED.inc(how=how, role=member.role)
         member.loop.queue.append((request, fut))
         self._arrived.set()
         return member
@@ -446,6 +481,9 @@ class FleetRouter:
         member = min(decs, key=lambda m: (m.loop.load, m.index))
         member.loop.intake.extend(items)
         self.stats.handoffs += 1
+        _M_HANDOFF.inc()
+        self._event_span("fleet.handoff", rows=len(items),
+                         to_member=member.index)
         self._arrived.set()
 
     # ------------------------------------------------------- solo fallback

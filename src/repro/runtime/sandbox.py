@@ -23,6 +23,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Tuple
 
+from ..obs import metrics as obs_metrics
+
 
 class WorkerCrash(RuntimeError):
     """Sandbox failure (node loss / worker death) — retried by the dispatcher."""
@@ -82,30 +84,39 @@ class SandboxHost:
         self._next_worker_id = worker_id_base
         self._live_instances = 0
         self._lock = threading.Lock()
-        # fleet observability (ISSUE 6): cold/warm and busy-time accounting,
-        # total and per function, surfaced through stats() -> Session.stats()
-        self._cold_starts = 0
-        self._warm_hits = 0
-        self._busy_s = 0.0
-        self._per_fn: dict[str, dict[str, float]] = {}
-
-    def _fn_counters(self, function_name: str) -> dict[str, float]:
-        return self._per_fn.setdefault(
-            function_name, {"cold_starts": 0, "warm_hits": 0, "busy_s": 0.0})
+        # fleet observability: cold/warm and busy-time accounting lives in
+        # a PRIVATE metrics registry (several hosts per process in tests),
+        # labeled by function — this registry replaced the ad-hoc
+        # _cold_starts/_warm_hits/_busy_s/_per_fn dicts that used to live
+        # here.  stats() keeps the legacy shape; the worker host's
+        # /metrics and host_stats serve the registry directly.
+        self.metrics = obs_metrics.Registry()
+        self._m_cold = self.metrics.counter(
+            "sandbox_cold_starts_total", "sandboxes provisioned cold")
+        self._m_warm = self.metrics.counter(
+            "sandbox_warm_hits_total", "invocations served by a warm sandbox")
+        self._m_busy = self.metrics.counter(
+            "entry_busy_seconds_total", "wall time inside entry callables")
+        self._m_live = self.metrics.gauge(
+            "sandbox_live_instances", "currently provisioned sandboxes")
+        self._m_entry = self.metrics.histogram(
+            "entry_seconds", "per-invocation entry wall time (s)",
+            buckets=obs_metrics.DEFAULT_BUCKETS_S)
+        self._fn_names: set[str] = set()
 
     # ----------------------------------------------------------- lifecycle
     def acquire(self, function_name: str) -> Tuple[WorkerInstance, bool]:
         """A sandbox for one invocation: warm if available, else cold."""
         with self._lock:
+            self._fn_names.add(function_name)
             warm = self._warm.setdefault(function_name, [])
             if warm:
-                self._warm_hits += 1
-                self._fn_counters(function_name)["warm_hits"] += 1
+                self._m_warm.inc(function=function_name)
                 return warm.pop(), False
             self._next_worker_id += 1
             self._live_instances += 1
-            self._cold_starts += 1
-            self._fn_counters(function_name)["cold_starts"] += 1
+            self._m_cold.inc(function=function_name)
+            self._m_live.set(self._live_instances)
             return WorkerInstance(self._next_worker_id, function_name), True
 
     def release(self, inst: WorkerInstance) -> None:
@@ -116,6 +127,7 @@ class SandboxHost:
         """A crashed sandbox is never reused."""
         with self._lock:
             self._live_instances -= 1
+            self._m_live.set(self._live_instances)
 
     def drain(self, function_name: str | None = None) -> int:
         """Scale-in: drop warm sandboxes (next invocations pay cold starts)."""
@@ -126,6 +138,7 @@ class SandboxHost:
             else:
                 n = len(self._warm.pop(function_name, []))
             self._live_instances -= n
+            self._m_live.set(self._live_instances)
             return n
 
     @property
@@ -142,15 +155,22 @@ class SandboxHost:
     def stats(self) -> dict:
         """Cold/warm and busy-time accounting, totals plus a per-function
         breakdown — what the fleet controller and ``Session.stats()`` read
-        instead of scraping logs."""
+        instead of scraping logs.  The shape predates the metrics registry
+        and is preserved exactly; the numbers now come FROM the registry."""
         with self._lock:
-            return {"cold_starts": self._cold_starts,
-                    "warm_hits": self._warm_hits,
-                    "busy_s": self._busy_s,
-                    "live_instances": self._live_instances,
-                    "warm_count": sum(len(v) for v in self._warm.values()),
-                    "functions": {name: dict(c)
-                                  for name, c in self._per_fn.items()}}
+            names = sorted(self._fn_names)
+            live = self._live_instances
+            warm = sum(len(v) for v in self._warm.values())
+        return {"cold_starts": int(self._m_cold.total),
+                "warm_hits": int(self._m_warm.total),
+                "busy_s": self._m_busy.total,
+                "live_instances": live,
+                "warm_count": warm,
+                "functions": {
+                    name: {"cold_starts": int(self._m_cold.value(function=name)),
+                           "warm_hits": int(self._m_warm.value(function=name)),
+                           "busy_s": self._m_busy.value(function=name)}
+                    for name in names}}
 
     # ------------------------------------------------------------- invoke
     def invoke(self, entry: Callable[[bytes], tuple], function_name: str,
@@ -188,9 +208,8 @@ class SandboxHost:
             # inflation is billing, not occupancy), per slot and per host
             elapsed = time.perf_counter() - t0
             inst.busy_s += elapsed
-            with self._lock:
-                self._busy_s += elapsed
-                self._fn_counters(function_name)["busy_s"] += elapsed
+            self._m_busy.inc(elapsed, function=function_name)
+            self._m_entry.observe(elapsed, function=function_name)
         if straggle:
             if self.fault_plan.straggler_sleep_s:
                 time.sleep(self.fault_plan.straggler_sleep_s)

@@ -61,6 +61,12 @@ class Completion:
     # completion latency; the iteration-level scheduler fills in the real
     # prefill-done time (ISSUE 5).  None = "same as latency_ms".
     ttft_ms: float | None = None
+    # per-token arrival times (ms since request arrival), stamped ONCE by
+    # the iteration-level scheduler at each decode-chunk reply —
+    # token_times_ms[0] == ttft_ms by construction.  Tokens landing in the
+    # same chunk share a timestamp (they genuinely arrived together).
+    # None on batch-level paths, where there is no token stream to stamp.
+    token_times_ms: list[float] | None = None
 
     @property
     def ttft(self) -> float:

@@ -29,14 +29,35 @@ import argparse
 import os
 import sys
 import threading
+import time
 import traceback
 
 from ..core.codeship import thaw_function
 from ..core.function import RemoteFunction
 from ..core.manifest import Manifest, ManifestEntry
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..serialization import (ArtifactMissingError, deserialize,
                              import_artifact_blob, wire)
 from .sandbox import SandboxHost
+
+# worker-side request metrics (process-default registry; per-function
+# entry accounting lives in the sandbox host's private registry — both are
+# merged into the host_stats reply and the /metrics exposition)
+_M_REQS = obs_metrics.REGISTRY.counter(
+    "worker_requests_total", "INVOKE frames handled")
+_M_CTRL = obs_metrics.REGISTRY.counter(
+    "worker_control_total", "CONTROL frames handled")
+_M_INFLIGHT = obs_metrics.REGISTRY.gauge(
+    "worker_inflight", "INVOKE frames currently executing")
+# eagerly registered so every /metrics exposition carries the serving
+# histograms' bucket layout even before (or without) the batcher running
+# in this process — the client-side batcher observes into the same names,
+# and the fleet merge requires exact bucket agreement
+obs_metrics.REGISTRY.histogram(
+    "serve_ttft_ms", "time to first token (ms)")
+obs_metrics.REGISTRY.histogram(
+    "serve_tpot_ms", "per-token decode latency (ms)")
 
 
 class WorkerHost:
@@ -116,33 +137,57 @@ class WorkerHost:
         or protocol errors — those become ``ERROR`` envelopes; only a host
         bug escapes (and the transport loops turn it into a retryable
         error before dying)."""
+        t_recv = time.time()
+        t0 = time.perf_counter()
         try:
             msg = wire.decode(data)
         except wire.WireProtocolError as e:
             return wire.encode_error(e, retryable=False)
         if isinstance(msg, wire.ControlRequest):
+            _M_CTRL.inc(op=msg.op)
             return self._handle_control(msg)
         if not isinstance(msg, wire.InvokeRequest):
             return wire.encode_error(
                 etype="WireProtocolError", retryable=False,
                 message=f"unexpected frame {type(msg).__name__} on a worker")
+        # worker-side spans exist only when the client sampled this request
+        # (the trace header field IS the sampling decision crossing the
+        # wire); they ship back on the reply envelope — the worker keeps
+        # nothing and needs no tracing config of its own
+        spans = obs_trace.RemoteSpans(msg.trace)
+        if spans:
+            spans.span_at("worker.decode", t_recv,
+                          time.perf_counter() - t0, bytes=len(data))
+        _M_REQS.inc(function=msg.function)
+        _M_INFLIGHT.inc()
         try:
-            bridge = self.get_bridge(msg.function, msg.payload)
-            done = self.sandboxes.invoke(
-                bridge.entry, msg.function, msg.payload,
-                task_id=msg.task_id, attempt=msg.attempt)
+            with self._lock:
+                first_use = msg.function not in self._bridges
+            cspan = (spans.span("worker.compile", function=msg.function)
+                     if first_use else obs_trace.NOOP)
+            with cspan:
+                bridge = self.get_bridge(msg.function, msg.payload)
+            with spans.span("worker.entry", function=msg.function) as espan:
+                done = self.sandboxes.invoke(
+                    bridge.entry, msg.function, msg.payload,
+                    task_id=msg.task_id, attempt=msg.attempt)
+                espan.set("cold_start", done.cold_start)
+                espan.set("worker_id", done.worker_id)
         except ArtifactMissingError as e:  # no shared fs: ask for a push
             return wire.encode_artifact_missing(e.sha, e.path)
         except Exception as e:             # user code / lookup / deserialize
             return wire.encode_error(
-                e, traceback_text=traceback.format_exc(), retryable=False)
+                e, traceback_text=traceback.format_exc(), retryable=False,
+                spans=spans.dicts() or None)
+        finally:
+            _M_INFLIGHT.dec()
         s = done.stats
         return wire.encode_result(
             done.blob,
             stats={"deserialize_s": s.deserialize_s, "compute_s": s.compute_s,
                    "serialize_s": s.serialize_s},
             server_s=done.server_s, cold_start=done.cold_start,
-            worker_id=done.worker_id)
+            worker_id=done.worker_id, spans=spans.dicts() or None)
 
     def _handle_control(self, msg: wire.ControlRequest) -> bytes:
         if msg.op == "ping":
@@ -182,11 +227,14 @@ class WorkerHost:
         if msg.op == "host_stats":
             # fleet observability (ISSUE 6): this worker's cold/warm and
             # busy-time accounting plus its resident-state leases, one
-            # round-trip — what Session.stats() aggregates across slots
+            # round-trip — what Session.stats() aggregates across slots.
+            # ``metrics`` (ISSUE 8) is the uniform registry snapshot the
+            # client merges fleet-wide.
             from . import state
             return wire.encode_control(
                 "host_stats", pid=os.getpid(), functions=len(self._bridges),
-                sandboxes=self.sandboxes.stats(), state=state.stats())
+                sandboxes=self.sandboxes.stats(), state=state.stats(),
+                metrics=self.metrics_snapshot())
         if msg.op == "artifact_put":
             # remote artifact fetch: the client pushes a blob this worker
             # reported missing; deposit it in the local store and ack
@@ -198,6 +246,16 @@ class WorkerHost:
                 return wire.encode_error(e, retryable=False)
         return wire.encode_error(etype="WireProtocolError", retryable=False,
                                  message=f"unknown control op {msg.op!r}")
+
+    def metrics_snapshot(self) -> dict:
+        """This worker's full metrics view: the process-default registry
+        (request/control counters) merged with the sandbox host's private
+        registry (per-function cold/warm/busy) — what rides ``host_stats``
+        and backs the http front-end's ``GET /metrics``."""
+        merged = obs_metrics.Registry()
+        merged.merge(obs_metrics.REGISTRY.snapshot())
+        merged.merge(self.sandboxes.metrics.snapshot())
+        return merged.snapshot()
 
 
 # ------------------------------------------------------ processes front-end
@@ -286,6 +344,24 @@ def serve_http(manifest_path: str, *, host: str = "127.0.0.1", port: int = 0,
             self.send_header("Content-Length", str(len(reply)))
             self.end_headers()
             self.wfile.write(reply)
+
+        def do_GET(self):                  # noqa: N802 (stdlib casing)
+            # Prometheus scrape endpoint — text exposition of this worker's
+            # merged metrics (request counters + per-function sandbox
+            # accounting).  Anything else is 404.
+            if self.path.split("?", 1)[0] != "/metrics":
+                self.send_response(404)
+                self.send_header("Content-Length", "0")
+                self.end_headers()
+                return
+            text = obs_metrics.render_snapshot(
+                worker.metrics_snapshot()).encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(text)))
+            self.end_headers()
+            self.wfile.write(text)
 
         def log_message(self, *a):         # quiet: latency is measured, not logged
             pass

@@ -15,10 +15,16 @@ Frame layout::
 
 Kinds:
 
-* ``INVOKE``  — header {function, task_id, attempt}; body = payload blob.
+* ``INVOKE``  — header {function, task_id, attempt, trace?}; body =
+                payload blob.  ``trace`` (additive, absent unless the
+                client sampled this request) is a span context dict —
+                workers that predate it ignore the field.
 * ``RESULT``  — header {stats{deserialize_s,compute_s,serialize_s},
-                server_s, cold_start, worker_id}; body = result blob.
-* ``ERROR``   — header {etype, message, traceback, retryable}; empty body.
+                server_s, cold_start, worker_id, spans?}; body = result
+                blob.  ``spans`` (additive) carries the worker-side span
+                dicts for a traced request back to the client collector.
+* ``ERROR``   — header {etype, message, traceback, retryable, spans?};
+                empty body.
                 ``retryable=True`` marks infrastructure loss (the sandbox
                 died) — the dispatcher's retry policy treats it as a
                 ``WorkerCrash``; ``False`` marks a user-code error, which
@@ -66,6 +72,7 @@ class InvokeRequest:
     payload: bytes
     task_id: int = 0
     attempt: int = 1
+    trace: dict[str, Any] | None = None   # span context when client sampled
 
 
 @dataclass
@@ -75,6 +82,7 @@ class ResultReply:
     server_s: float = 0.0
     cold_start: bool = False
     worker_id: int = -1
+    spans: list[dict[str, Any]] = field(default_factory=list)
 
 
 @dataclass
@@ -83,6 +91,7 @@ class ErrorReply:
     message: str
     traceback: str = ""
     retryable: bool = False
+    spans: list[dict[str, Any]] = field(default_factory=list)
 
 
 @dataclass
@@ -126,29 +135,41 @@ def _frame(kind: int, header: dict, body: bytes = b"") -> bytes:
 
 
 def encode_invoke(function: str, payload: bytes, *, task_id: int = 0,
-                  attempt: int = 1) -> bytes:
-    return _frame(INVOKE, {"function": function, "task_id": task_id,
-                           "attempt": attempt}, payload)
+                  attempt: int = 1,
+                  trace: dict[str, Any] | None = None) -> bytes:
+    header: dict[str, Any] = {"function": function, "task_id": task_id,
+                              "attempt": attempt}
+    if trace:
+        header["trace"] = trace
+    return _frame(INVOKE, header, payload)
 
 
 def encode_result(blob: bytes, *, stats: dict[str, float] | None = None,
                   server_s: float = 0.0, cold_start: bool = False,
-                  worker_id: int = -1) -> bytes:
-    return _frame(RESULT, {"stats": stats or {}, "server_s": server_s,
-                           "cold_start": cold_start,
-                           "worker_id": worker_id}, blob)
+                  worker_id: int = -1,
+                  spans: list[dict[str, Any]] | None = None) -> bytes:
+    header: dict[str, Any] = {"stats": stats or {}, "server_s": server_s,
+                              "cold_start": cold_start,
+                              "worker_id": worker_id}
+    if spans:
+        header["spans"] = spans
+    return _frame(RESULT, header, blob)
 
 
 def encode_error(err: BaseException | None = None, *, etype: str | None = None,
                  message: str | None = None, traceback_text: str = "",
-                 retryable: bool = False) -> bytes:
+                 retryable: bool = False,
+                 spans: list[dict[str, Any]] | None = None) -> bytes:
     if err is not None:
         etype = etype or type(err).__name__
         message = message if message is not None else str(err)
-    return _frame(ERROR, {"etype": etype or "RuntimeError",
-                          "message": message or "",
-                          "traceback": traceback_text,
-                          "retryable": retryable})
+    header: dict[str, Any] = {"etype": etype or "RuntimeError",
+                              "message": message or "",
+                              "traceback": traceback_text,
+                              "retryable": retryable}
+    if spans:
+        header["spans"] = spans
+    return _frame(ERROR, header)
 
 
 def encode_control(op: str, body: bytes = b"", **data: Any) -> bytes:
@@ -177,17 +198,20 @@ def decode(data: bytes) -> InvokeRequest | ResultReply | ErrorReply | ControlReq
         if kind == INVOKE:
             return InvokeRequest(function=header["function"], payload=body,
                                  task_id=header.get("task_id", 0),
-                                 attempt=header.get("attempt", 1))
+                                 attempt=header.get("attempt", 1),
+                                 trace=header.get("trace"))
         if kind == RESULT:
             return ResultReply(blob=body, stats=header.get("stats", {}),
                                server_s=header.get("server_s", 0.0),
                                cold_start=header.get("cold_start", False),
-                               worker_id=header.get("worker_id", -1))
+                               worker_id=header.get("worker_id", -1),
+                               spans=header.get("spans", []))
         if kind == ERROR:
             return ErrorReply(etype=header.get("etype", "RuntimeError"),
                               message=header.get("message", ""),
                               traceback=header.get("traceback", ""),
-                              retryable=header.get("retryable", False))
+                              retryable=header.get("retryable", False),
+                              spans=header.get("spans", []))
         if kind == CONTROL:
             return ControlRequest(op=header["op"],
                                   data=header.get("data", {}), body=body)

@@ -41,8 +41,24 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..runtime.server import Completion, LMServer, Request, decode_bucket
 from .aio import await_invocation
+
+# serving metrics (process-default registry): the uniform mirrors of the
+# scheduler's BatcherStats, queryable through Session.stats()["metrics"]
+# and merged fleet-wide with the worker-side registries.  TTFT/TPOT are
+# stamped once here (see _LiveRow.token_times_ms) — serve_bench consumes
+# these stamps instead of re-deriving.
+_M_TTFT = obs_metrics.REGISTRY.histogram(
+    "serve_ttft_ms", "time to first token, client-observed (ms)")
+_M_TPOT = obs_metrics.REGISTRY.histogram(
+    "serve_tpot_ms", "mean inter-token time per request (ms)")
+_M_DONE = obs_metrics.REGISTRY.counter(
+    "serve_completions_total", "requests served to completion")
+_M_CHUNKS = obs_metrics.REGISTRY.counter(
+    "serve_decode_chunks_total", "iteration-level decode round-trips")
 
 
 @dataclass
@@ -105,6 +121,9 @@ class _LiveRow:
     tokens: list = field(default_factory=list)
     ttft_ms: float = 0.0
     cost_gb_s: float = 0.0
+    # one stamp per token, ms since t_arrival, appended at the chunk reply
+    # that delivered it (chunk-mates share a stamp); [0] == ttft_ms
+    token_times_ms: list = field(default_factory=list)
 
     @property
     def remaining(self) -> int:
@@ -181,6 +200,7 @@ class EngineLoop:
         self.chunk_occupancy = 0
         self.migrated_in = 0
         self.migrated_out = 0
+        self._root_span = obs_trace.NOOP       # set for real in run()
         self._kwargs = dict(rows=max(1, max_batch),
                             prompt_cap=prompt_cap, quantum=quantum,
                             prefix_tokens=prefix_tokens, ttl_s=lease_ttl_s,
@@ -224,13 +244,19 @@ class EngineLoop:
         self.stats.requests += 1
 
     def _complete_row(self, row: _LiveRow, now: float) -> None:
+        times = row.token_times_ms[:row.request.max_new]
         if not row.fut.done():
             row.fut.set_result(Completion(
                 tokens=[int(t) for t in row.tokens[:row.request.max_new]],
                 latency_ms=(now - row.t_arrival) * 1000.0,
-                ttft_ms=row.ttft_ms, cost_gb_s=row.cost_gb_s))
+                ttft_ms=row.ttft_ms, cost_gb_s=row.cost_gb_s,
+                token_times_ms=times or None))
         self.stats.requests += 1
         self.served += 1
+        _M_DONE.inc()
+        _M_TTFT.observe(row.ttft_ms)
+        if len(times) > 1:
+            _M_TPOT.observe((times[-1] - times[0]) / (len(times) - 1))
 
     def _lose_state(self, err: BaseException) -> None:
         for rows in (self.live, self.pending):
@@ -242,10 +268,27 @@ class EngineLoop:
         self.engine.reset()
         self.stats.state_resets += 1
 
+    def _span(self, name: str, **attrs):
+        """A child span under this loop's root trace (NOOP when tracing is
+        off or this loop's root was sampled out)."""
+        root = self._root_span
+        if not root:
+            return obs_trace.NOOP
+        return obs_trace.TRACER.span(name, root.ctx, **attrs)
+
+    def _bound(self, span, fn):
+        """Bind ``span`` as the dispatch parent for ``fn`` when it runs on
+        the pack executor thread: the client.submit span the engine call
+        mints over there nests under this chunk's span."""
+        return obs_trace.bound(span.ctx, fn) if span else fn
+
     # --------------------------------------------------------------- run --
     async def run(self) -> None:
         from ..runtime.engine import EngineClient, is_state_lost
         loop = asyncio.get_running_loop()
+        self._root_span = (obs_trace.TRACER.start_trace(
+            "engine.loop", member=self.index, role=self.role)
+            if obs_trace.TRACER.enabled else obs_trace.NOOP)
         try:
             # affinity = member/loop index, deterministically: a warmup
             # pass and the run it warms land on the SAME workers (a global
@@ -331,31 +374,49 @@ class EngineLoop:
                     # freeze-time value would pin arena compaction forever
                     idle = tuple(s for s in range(engine.rows)
                                  if s not in live)
+                cspan = self._span("engine.decode_quantum", k=k,
+                                   rows=len(live))
                 try:
                     inv_fut = await loop.run_in_executor(
-                        self.cpu, engine.submit_step, k, idle)
+                        self.cpu, self._bound(cspan, engine.submit_step),
+                        k, idle)
                     reply = engine.observe(await await_invocation(inv_fut))
                 except BaseException as e:
+                    cspan.set("error.type", type(e).__name__)
+                    cspan.finish("error")
                     self._lose_state(e)
                     if isinstance(e, asyncio.CancelledError):
                         raise
                     continue
+                cspan.finish()
                 self._to_free.difference_update(idle)
                 self._note_occupancy()
                 toks = reply["tokens"]
                 rec = inv_fut.record
                 share = (rec.billed_gb_s / len(live)) if rec else 0.0
+                # ONE stamping point for per-token times: every token this
+                # chunk delivered arrived, client-side, at this reply
+                # (serve_bench and the TPOT metrics consume these stamps
+                # instead of re-deriving from latency - ttft)
+                t_chunk = loop.time()
                 for slot, row in live.items():
                     need = row.remaining
                     if need > 0:
-                        row.tokens.extend(int(t) for t in toks[slot][:need])
+                        new = [int(t) for t in toks[slot][:need]]
+                        row.tokens.extend(new)
+                        t_ms = (t_chunk - row.t_arrival) * 1000.0
+                        row.token_times_ms.extend([t_ms] * len(new))
                     row.cost_gb_s += share
                 self.stats.decode_chunks += 1
                 self.stats.decode_steps += k
                 self.stats.occupancy_sum += len(live)
+                _M_CHUNKS.inc()
                 self.chunks += 1
                 self.chunk_occupancy += len(live)
         finally:
+            self._root_span.set("served", self.served)
+            self._root_span.set("chunks", self.chunks)
+            self._root_span.finish()
             await loop.run_in_executor(self.cpu, engine.close)
 
     # ---------------------------------------------------------- admission --
@@ -384,15 +445,19 @@ class EngineLoop:
         if not take:
             return
         t_sent = loop.time()
+        hits0, miss0 = engine.prefix_hits, engine.prefix_misses
+        pspan = self._span("engine.prefill", rows=len(take))
         try:
             inv_fut, order = await loop.run_in_executor(
-                self.cpu, engine.submit_admit,
+                self.cpu, self._bound(pspan, engine.submit_admit),
                 [(slot, r.prompt) for slot, r, _ in take],
                 # an arena holding live rows must already exist: never
                 # silently recreate an expired lease under them
                 not live)
             reply = engine.observe(await await_invocation(inv_fut))
         except BaseException as e:
+            pspan.set("error.type", type(e).__name__)
+            pspan.finish("error")
             for slot, _, fut in take:
                 free.append(slot)
                 self._fail(fut, e, "admission failed")
@@ -401,16 +466,20 @@ class EngineLoop:
             if isinstance(e, asyncio.CancelledError):
                 raise
             return
+        pspan.set("prefix_hits", engine.prefix_hits - hits0)
+        pspan.set("prefix_misses", engine.prefix_misses - miss0)
+        pspan.finish()
         now = loop.time()
         rec = inv_fut.record
         share = (rec.billed_gb_s / len(take)) if rec else 0.0
+        ttft = (now - t_sent) * 1000.0
         by_slot = {slot: (r, fut) for slot, r, fut in take}
         for slot, t0 in zip(order, reply["first"]):
             r, fut = by_slot[slot]
             live[slot] = _LiveRow(request=r, fut=fut, t_arrival=t_sent,
-                                  tokens=[int(t0)],
-                                  ttft_ms=(now - t_sent) * 1000.0,
-                                  cost_gb_s=share)
+                                  tokens=[int(t0)], ttft_ms=ttft,
+                                  cost_gb_s=share,
+                                  token_times_ms=[ttft])
         self.stats.admission_groups += 1
         if self.role == "prefill":
             await self._handoff_rows(loop, list(live), is_state_lost)
@@ -430,6 +499,7 @@ class EngineLoop:
                 del self.pending[int(slot)]
                 row.tokens.append(int(info["first"]))
                 row.ttft_ms = (now - row.t_arrival) * 1000.0
+                row.token_times_ms.append(row.ttft_ms)
                 self.live[int(slot)] = row
 
     def _note_occupancy(self) -> None:
@@ -453,14 +523,18 @@ class EngineLoop:
         if not take:
             return
         t_sent = loop.time()
+        hits0, miss0 = engine.prefix_hits, engine.prefix_misses
+        pspan = self._span("engine.prefill_chunk", rows=len(take))
         try:
             inv_fut, _ = await loop.run_in_executor(
-                self.cpu, engine.submit_admit,
+                self.cpu, self._bound(pspan, engine.submit_admit),
                 [(slot, r.prompt) for slot, r, _ in take],
                 not (live or self.pending), tuple(self._to_free))
             reply = engine.observe_paged_prefill(
                 await await_invocation(inv_fut))
         except BaseException as e:
+            pspan.set("error.type", type(e).__name__)
+            pspan.finish("error")
             for slot, _, fut in take:
                 free.append(slot)
                 self._fail(fut, e, "admission failed")
@@ -469,6 +543,9 @@ class EngineLoop:
             if isinstance(e, asyncio.CancelledError):
                 raise
             return
+        pspan.set("radix_hits", engine.prefix_hits - hits0)
+        pspan.set("radix_misses", engine.prefix_misses - miss0)
+        pspan.finish()
         self._to_free.clear()
         now = loop.time()
         rec = inv_fut.record
@@ -486,16 +563,21 @@ class EngineLoop:
         pool's block accounting is mid-flight — so it resets like a failed
         decode chunk."""
         engine = self.engine
+        pspan = self._span("engine.prefill_chunk", pending=len(self.pending))
         try:
             inv_fut = await loop.run_in_executor(
-                self.cpu, engine.submit_prefill_step, tuple(self._to_free))
+                self.cpu, self._bound(pspan, engine.submit_prefill_step),
+                tuple(self._to_free))
             reply = engine.observe_paged_prefill(
                 await await_invocation(inv_fut))
         except BaseException as e:
+            pspan.set("error.type", type(e).__name__)
+            pspan.finish("error")
             self._lose_state(e)
             if isinstance(e, asyncio.CancelledError):
                 raise
             return
+        pspan.finish()
         self._to_free.clear()
         rec = inv_fut.record
         n = max(1, len(self.pending))
@@ -511,10 +593,13 @@ class EngineLoop:
         was already stamped at the prefill reply — migration latency shows
         up in per-token time, not time-to-first-token."""
         engine, live, free = self.engine, self.live, self._free
+        mspan = self._span("engine.migrate_out", rows=len(slots))
         try:
             payloads = await loop.run_in_executor(
-                self.cpu, engine.extract_rows, slots)
+                self.cpu, self._bound(mspan, engine.extract_rows), slots)
         except BaseException as e:
+            mspan.set("error.type", type(e).__name__)
+            mspan.finish("error")
             for slot in slots:
                 row = live.pop(slot, None)
                 if row is not None:
@@ -526,6 +611,7 @@ class EngineLoop:
             if isinstance(e, asyncio.CancelledError):
                 raise
             return
+        mspan.finish()
         items = []
         for slot, payload in zip(slots, payloads):
             row = live.pop(slot)
@@ -550,15 +636,19 @@ class EngineLoop:
         if not take:
             return
         slots = [slot for slot, _ in take]
+        mspan = self._span("engine.migrate_in", rows=len(take))
         try:
             if not live:
                 inv_fut, _ = await loop.run_in_executor(
-                    self.cpu, engine.submit_admit, [], True)
+                    self.cpu, self._bound(mspan, engine.submit_admit),
+                    [], True)
                 engine.observe(await await_invocation(inv_fut))
             await loop.run_in_executor(
-                self.cpu, engine.insert_rows, slots,
+                self.cpu, self._bound(mspan, engine.insert_rows), slots,
                 [ent["entry"] for _, ent in take])
         except BaseException as e:
+            mspan.set("error.type", type(e).__name__)
+            mspan.finish("error")
             for slot, ent in take:
                 free.append(slot)
                 self._fail(ent["row"].fut, e, "row insert failed")
@@ -567,6 +657,7 @@ class EngineLoop:
             if isinstance(e, asyncio.CancelledError):
                 raise
             return
+        mspan.finish()
         for slot, ent in take:
             live[slot] = ent["row"]
         self.migrated_in += len(take)

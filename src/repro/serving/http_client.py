@@ -36,6 +36,7 @@ from typing import Any
 from ..dispatch.futures import Invocation, InvocationRecord
 from ..dispatch.transports import HttpBackend, _deliver, _worker_crash
 from ..dispatch.workers import BackendCapabilities
+from ..obs import trace as obs_trace
 from ..serialization import wire
 
 
@@ -241,9 +242,14 @@ class AioHttpBackend(HttpBackend):
                 attempts=inv.attempt, hedged=inv.is_hedge,
                 payload_bytes=len(inv.payload),
                 memory_gb=bridge.config.memory_gb)
+            ctx = inv.trace
             request = wire.encode_invoke(
                 bridge.name, inv.payload,
-                task_id=inv.task_id, attempt=inv.attempt)
+                task_id=inv.task_id, attempt=inv.attempt,
+                trace=ctx.to_wire() if ctx is not None else None)
+            tspan = (obs_trace.TRACER.span("client.transport", ctx,
+                                           backend="AioHttpBackend")
+                     if ctx is not None else obs_trace.NOOP)
             try:
                 client = await self._ensure_client()
                 t0 = time.perf_counter()
@@ -255,11 +261,17 @@ class AioHttpBackend(HttpBackend):
             except Exception as e:
                 detail = self._slot_epitaph(None) or \
                     (str(e) or type(e).__name__)
+                tspan.set("error.type", type(e).__name__)
+                tspan.set("error.detail", detail[:2000])
+                tspan.finish("error")
                 _deliver(inv, False,
                          _worker_crash(f"http-aio request failed "
                                        f"(task {inv.task_id}): {detail}"),
                          rec)
                 return
+            tspan.set("bytes_out", len(request))
+            tspan.set("bytes_in", len(reply))
+            tspan.finish()
             # reply decode + result deserialization are CPU-bound (payloads
             # can be params-sized): keep them off the event loop
             await asyncio.get_running_loop().run_in_executor(

@@ -1,0 +1,221 @@
+"""Observability plane (ISSUE 8): trace context on the wire, span
+stitching across the process boundary, metrics registry math, exporters,
+and the tracing-off overhead guard."""
+import json
+
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.serialization import wire
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    """The process tracer is shared state — every test starts and ends
+    hard-off with an empty ring."""
+    t = obs_trace.TRACER
+    t.configure(enabled=False, sample=0.0)
+    t.reset()
+    yield
+    t.configure(enabled=False, sample=0.0)
+    t.reset()
+
+
+# Module-level tasks: shippable to worker processes by reference.
+def task_double(x):
+    return x * 2
+
+
+def task_exit(x):
+    import os
+    os._exit(13)               # sandbox loss: no goodbye on the wire
+
+
+# ------------------------------------------------------------------ wire ----
+
+def test_wire_trace_roundtrip():
+    ctx = {"tid": "t1", "sid": "s1", "t0": 12.5}
+    frame = wire.encode_invoke("fn", b"p", task_id=1, attempt=1, trace=ctx)
+    msg = wire.decode(frame)
+    assert msg.trace == ctx
+
+    spans = [{"name": "worker.entry", "tid": "t1", "sid": "w1",
+              "parent": "s1", "t0": 12.5, "dur": 0.01, "proc": "worker"}]
+    reply = wire.decode(wire.encode_result(b"b", stats={}, server_s=0.1,
+                                           spans=spans))
+    assert reply.spans == spans
+    err = wire.decode(wire.encode_error(etype="ValueError", retryable=False,
+                                        message="boom", spans=spans))
+    assert err.spans == spans
+
+
+def test_wire_trace_is_additive():
+    """Untraced frames carry no trace/spans header fields at all (an old
+    worker never sees the key), and decoding an old-style frame without
+    them fills the defaults."""
+    frame = wire.encode_invoke("fn", b"p", task_id=1, attempt=1)
+    assert b'"trace"' not in frame
+    assert wire.decode(frame).trace is None
+    reply = wire.encode_result(b"b", stats={}, server_s=0.1)
+    assert b'"spans"' not in reply
+    assert wire.decode(reply).spans == []
+
+
+# ------------------------------------------------------------- stitching ----
+
+def test_span_stitching_across_processes():
+    """One traced request through the real ``processes`` backend: the
+    worker-side spans come back on the reply envelope and parent under the
+    client's submit span — one tree spanning two pids."""
+    from repro.cloud import Session
+    obs_trace.configure(sample=1.0)
+    with Session("processes", os_threads=1) as sess:
+        f = sess.function(task_double, jax_traceable=False)
+        assert f.submit(3).result() == 6
+    spans = obs_trace.TRACER.spans()
+    by_name = {s.name: s for s in spans}
+    root = by_name["client.submit"]
+    assert root.parent_id is None and root.proc == "client"
+    assert {"client.transport", "worker.decode", "worker.entry"} \
+        <= set(by_name)
+    for name in ("worker.decode", "worker.compile", "worker.entry"):
+        s = by_name[name]
+        assert s.proc == "worker"
+        assert s.trace_id == root.trace_id
+        assert s.parent_id == root.span_id
+        assert s.pid != root.pid          # genuinely crossed a process
+    assert by_name["client.transport"].parent_id == root.span_id
+    assert by_name["worker.entry"].attrs.get("cold_start") is True
+
+
+def test_worker_error_context_on_failing_span():
+    """A crashed worker's epitaph (exit detail) lands on the transport
+    span, and the submit span records the failure type."""
+    from repro.cloud import Session
+    obs_trace.configure(sample=1.0)
+    with Session("processes", os_threads=1) as sess:
+        f = sess.function(task_exit, jax_traceable=False)
+        with pytest.raises(Exception):
+            f.submit(1).result()
+    errs = [s for s in obs_trace.TRACER.spans() if s.status == "error"]
+    assert errs, "a failing request must produce error-status spans"
+    transport = [s for s in errs if s.name == "client.transport"]
+    assert transport and "error.type" in transport[0].attrs
+    assert "error.detail" in transport[0].attrs
+
+
+# --------------------------------------------------------------- metrics ----
+
+def test_histogram_bucket_math():
+    h = obs_metrics.Histogram("h", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 1.0, 5.0, 50.0, 500.0, 1000.0):
+        h.observe(v)
+    s = h.series()
+    # le semantics: a value equal to a bound counts in that bound's bucket
+    assert s["counts"] == [2, 1, 1, 2]
+    assert s["count"] == 6
+    assert s["sum"] == pytest.approx(1556.5)
+    assert h.cumulative() == [2, 3, 4, 6]
+
+
+def test_registry_merge_and_labels():
+    a, b = obs_metrics.Registry(), obs_metrics.Registry()
+    a.counter("c").inc(2, k="x")
+    b.counter("c").inc(3, k="x")
+    b.counter("c").inc(1, k="y")
+    a.gauge("g").set(4)
+    b.gauge("g").set(5)
+    a.histogram("h", buckets=(1.0, 2.0)).observe(1.5)
+    b.histogram("h", buckets=(1.0, 2.0)).observe(0.5)
+    b.histogram("other", buckets=(9.0,)).observe(1.0)
+    a.merge(b.snapshot())
+    assert a.counter("c").value(k="x") == 5
+    assert a.counter("c").value(k="y") == 1
+    assert a.gauge("g").value() == 9       # summed: fleet total of a gauge
+    assert a.histogram("h", buckets=(1.0, 2.0)).series()["counts"] \
+        == [1, 1, 0]
+    assert a.get("other") is not None      # unknown names are created
+
+
+def test_prometheus_exposition():
+    reg = obs_metrics.Registry()
+    reg.counter("reqs", "requests handled").inc(3, backend="x")
+    reg.histogram("lat_ms", buckets=(1.0, 10.0)).observe(0.5)
+    text = reg.render()
+    assert "# HELP reqs requests handled" in text
+    assert "# TYPE reqs counter" in text
+    assert 'reqs{backend="x"} 3' in text
+    assert "# TYPE lat_ms histogram" in text
+    assert 'lat_ms_bucket{le="1"} 1' in text
+    assert 'lat_ms_bucket{le="+Inf"} 1' in text
+    assert "lat_ms_sum 0.5" in text
+    assert "lat_ms_count 1" in text
+
+
+def test_session_stats_carries_metrics():
+    from repro.cloud import Session
+    with Session("threads", os_threads=2) as sess:
+        f = sess.function(task_double, jax_traceable=False)
+        assert f.submit(5).result() == 10
+        m = sess.stats()["metrics"]
+    assert m["sandbox_cold_starts_total"]["type"] == "counter"
+    assert sum(m["sandbox_cold_starts_total"]["values"].values()) >= 1
+    assert sum(m["entry_busy_seconds_total"]["values"].values()) > 0
+
+
+# --------------------------------------------------------------- sampler ----
+
+def test_sampler_seeded_determinism():
+    a = obs_trace.Sampler(0.5, seed=7)
+    b = obs_trace.Sampler(0.5, seed=7)
+    seq = [a.decide() for _ in range(64)]
+    assert seq == [b.decide() for _ in range(64)]
+    assert any(seq) and not all(seq)
+    assert all(obs_trace.Sampler(1.0, seed=1).decide() for _ in range(8))
+    assert not any(obs_trace.Sampler(0.0, seed=1).decide()
+                   for _ in range(8))
+
+
+# -------------------------------------------------------------- exporter ----
+
+def test_chrome_export_schema(tmp_path):
+    obs_trace.configure(sample=1.0)
+    root = obs_trace.TRACER.start_trace("client.submit", function="f")
+    child = obs_trace.TRACER.span("client.transport", root.ctx, slot=0)
+    child.finish()
+    root.finish()
+    path = tmp_path / "trace.json"
+    n = obs_trace.dump_trace(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert n == len(events) == 2
+    for ev in events:
+        assert ev["ph"] == "X"
+        assert {"name", "ts", "dur", "pid", "tid", "args"} <= set(ev)
+    sub = next(e for e in events if e["name"] == "client.submit")
+    tra = next(e for e in events if e["name"] == "client.transport")
+    assert tra["args"]["parent_span_id"] == sub["args"]["span_id"]
+    assert tra["args"]["trace_id"] == sub["args"]["trace_id"]
+    assert sub["args"]["parent_span_id"] is None
+
+
+# --------------------------------------------------------- overhead guard ----
+
+def test_disabled_tracing_makes_no_instrumentation_calls():
+    """The hard off-switch: with tracing off every site returns before
+    counting as an engagement — ``calls`` stays 0 end to end."""
+    from repro.cloud import Session
+    t = obs_trace.TRACER
+    assert not t.enabled and t.calls == 0
+    assert t.start_trace("x") is obs_trace.NOOP
+    assert t.span("x") is obs_trace.NOOP
+    t.span_at("x", obs_trace.SpanContext("t", "s"), 0.0, 0.0)
+    t.ingest([{"name": "x"}])
+    assert t.calls == 0 and t.spans() == []
+
+    with Session("threads", os_threads=2) as sess:
+        f = sess.function(task_double, jax_traceable=False)
+        assert f.submit(4).result() == 8
+    assert t.calls == 0 and t.spans() == []
