@@ -1,0 +1,41 @@
+"""Deploy-time shippability analysis (ISSUE 9).
+
+Cppless's LLVM extension validates remote function objects *at compile
+time*: a function that cannot ship is a compiler error, not a runtime
+surprise (paper §3).  This package is the Python analogue — a static pass
+that walks a function object exactly the way :mod:`repro.core.codeship`
+freezes it (bytecode + closure graph, recursing through callable
+captures) and emits compiler-style diagnostics with stable rule codes,
+severities, and ``file:line`` source locations.
+
+Every rule mirrors a *real* runtime failure mode of the existing stack:
+
+* **RF1xx shippability** — the function would raise ``NameError`` under
+  ``_thaw_globals``'s fresh-globals contract, or a capture cannot cross
+  the wire.
+* **RF2xx semantics** — writes to captures/globals that by-value shipping
+  silently turns into lost writes.
+* **RF3xx invariance** — nondeterminism (``random``/``uuid``/wall-clock)
+  that breaks the repo's batch-composition bit-identity contract.
+* **RF4xx async/serving** — coroutine entry points and blocking calls
+  inside coroutines submitted through ``AsyncSession``.
+
+Entry points:
+
+* :func:`analyze_function` — full-fidelity runtime analysis (capture
+  values available); run by ``Deployment`` at deploy time.
+* :func:`analyze_code` — static analysis of a bare code object (no
+  capture values); the CLI path, which never executes the linted file.
+* ``python -m repro.analysis <module-or-path> ...`` — offline linter over
+  ``@session.remote`` / ``session.function`` call sites.
+"""
+from .diagnostics import (AnalysisError, Diagnostic, RULES,
+                          ShippabilityWarning, SEVERITIES)
+from .analyzer import (analyze_code, analyze_function, attach_failure_hint,
+                       match_diagnostics)
+
+__all__ = [
+    "AnalysisError", "Diagnostic", "RULES", "SEVERITIES",
+    "ShippabilityWarning", "analyze_code", "analyze_function",
+    "attach_failure_hint", "match_diagnostics",
+]

@@ -1,0 +1,588 @@
+"""The static pass: bytecode + closure-graph walk behind every rule.
+
+``analyze_function`` walks a *live* function object the same way
+``freeze_function`` ships it — the same importability test, the same
+capture classification, the same recursion through callable captures — so
+a diagnostic here is a prediction about exactly the artifact that would
+cross the wire.  ``analyze_code`` is the value-free subset used by the CLI
+(which compiles source without executing it): bytecode rules only, no
+capture probes.
+
+Bytecode is scanned with :mod:`dis` in an opcode-version-tolerant way
+(3.10 ``LOAD_METHOD``/``CALL_FUNCTION`` and 3.11+ ``LOAD_ATTR``/``CALL``
+both match); source locations come from ``co_filename`` plus the
+instruction line, so diagnostics point at the offending *statement*, not
+just the ``def``.
+"""
+from __future__ import annotations
+
+import builtins
+import dis
+import re
+import types
+from typing import Any, Callable, Iterable
+
+from .diagnostics import Diagnostic, make
+
+__all__ = ["analyze_function", "analyze_code", "attach_failure_hint",
+           "match_diagnostics"]
+
+_BUILTINS = frozenset(dir(builtins)) | {"__build_class__", "__import__"}
+
+# Opcode-stream noise to skip when looking at neighbouring instructions.
+_TRANSPARENT = frozenset({"CACHE", "PRECALL", "EXTENDED_ARG", "NOP",
+                          "RESUME", "PUSH_NULL", "COPY_FREE_VARS"})
+_ATTR_OPS = frozenset({"LOAD_ATTR", "LOAD_METHOD"})
+_CALL_OPS = frozenset({"CALL", "CALL_FUNCTION", "CALL_METHOD",
+                       "CALL_FUNCTION_KW", "CALL_FUNCTION_EX", "CALL_KW"})
+
+# RF203: method names that mutate their receiver (best-effort, the
+# documented opcode-pattern subset).
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "clear", "sort",
+    "reverse", "add", "discard", "update", "setdefault", "popitem",
+    "appendleft", "extendleft", "popleft", "write", "writelines", "put",
+})
+
+# RF301: nondeterminism sources.  ``jax.random`` (explicit keys) and
+# ``np.random.default_rng(seed)`` are deterministic and deliberately NOT
+# matched: only *bare* loads of these module names, the ``os``/``time``
+# attributes below, and seedless legacy numpy samplers are flagged.
+_NONDET_MODULES = frozenset({"random", "uuid", "secrets"})
+_NONDET_ATTRS = {"os": frozenset({"urandom", "getrandom"}),
+                 "time": frozenset({"time", "time_ns"})}
+_NP_SAMPLERS = frozenset({
+    "random", "rand", "randn", "randint", "random_sample", "normal",
+    "uniform", "shuffle", "choice", "permutation", "standard_normal",
+    "bytes", "seed",
+})
+_NP_NAMES = frozenset({"np", "numpy"})
+
+_CO_COROUTINE = 0x0080 | 0x0200      # CO_COROUTINE | CO_ASYNC_GENERATOR
+
+
+def _line_of(instr) -> int | None:
+    line = getattr(instr, "starts_line", None)
+    if line is None:
+        pos = getattr(instr, "positions", None)
+        line = getattr(pos, "lineno", None) if pos is not None else None
+    return line
+
+
+def _significant(instrs: list, i: int, step: int) -> Any:
+    """Nearest non-noise instruction from ``i`` in direction ``step``."""
+    j = i + step
+    while 0 <= j < len(instrs):
+        if instrs[j].opname not in _TRANSPARENT:
+            return instrs[j]
+        j += step
+    return None
+
+
+def _importable_ref(obj: Any) -> bool:
+    """Mirror of ``codeship._importable`` — module:qualname round-trips."""
+    from ..core.codeship import _importable
+    return _importable(obj)
+
+
+def _scan_code(code: types.CodeType, *, main_like: bool,
+               captures: frozenset, func_name: str,
+               globals_map: dict | None, is_coro: bool,
+               out: list[Diagnostic], seen: set) -> None:
+    """One code object: RF101 / RF2xx / RF301 / RF402 + nested recursion."""
+    if id(code) in seen:
+        return
+    seen.add(id(code))
+    file = code.co_filename
+    instrs = list(dis.get_instructions(code))
+    coro = is_coro or bool(code.co_flags & _CO_COROUTINE)
+
+    stored_globals = {i.argval for i in instrs if i.opname == "STORE_GLOBAL"}
+    emitted: set[tuple] = set()
+
+    def emit(rule: str, msg: str, symbol: str, line: int, **kw) -> None:
+        key = (rule, symbol, func_name)
+        if key in emitted:
+            return
+        emitted.add(key)
+        out.append(make(rule, msg, symbol=symbol, function=func_name,
+                        file=file, line=line, **kw))
+
+    # local aliases bound by in-body imports: var -> module name, and
+    # var -> (module, attr) for ``from m import a [as b]``
+    local_modules: dict[str, str] = {}
+    local_attrs: dict[str, tuple[str, str]] = {}
+    pending_import: str | None = None
+    pending_from: tuple[str, str] | None = None
+
+    line = code.co_firstlineno
+    for i, instr in enumerate(instrs):
+        l = _line_of(instr)
+        if l is not None:
+            line = l
+        op, val = instr.opname, instr.argval
+
+        # ---- import-alias tracking -----------------------------------
+        if op == "IMPORT_NAME":
+            pending_import, pending_from = val, None
+            continue
+        if op == "IMPORT_FROM":
+            pending_from = (pending_import or "", val)
+            continue
+        if op in ("STORE_FAST", "STORE_NAME", "STORE_DEREF") and (
+                pending_import is not None or pending_from is not None):
+            if pending_from is not None:
+                local_attrs[val] = pending_from
+                pending_from = None        # next IMPORT_FROM re-arms
+            else:
+                local_modules[val] = pending_import or ""
+                pending_import = None
+            if op != "STORE_DEREF":
+                continue                   # fall through for capture check
+        elif op not in ("IMPORT_FROM",):
+            # any other instruction ends a bare ``import m`` sequence
+            if op not in ("STORE_FAST", "STORE_NAME"):
+                pending_import = pending_import if op == "POP_TOP" else None
+
+        nxt = _significant(instrs, i, +1)
+        prv = _significant(instrs, i, -1)
+
+        # ---- RF101: unresolvable global under fresh worker globals ----
+        if op == "LOAD_GLOBAL" and main_like:
+            if val not in _BUILTINS and val not in stored_globals:
+                emit("RF101",
+                     f"global {val!r} will not resolve on the worker: "
+                     f"'__main__'/script-defined functions are rebuilt with "
+                     f"fresh globals (import or define {val!r} inside the "
+                     f"function body, or move the function to an importable "
+                     f"module)", val, line)
+
+        # ---- RF202: global writes -------------------------------------
+        if op in ("STORE_GLOBAL", "DELETE_GLOBAL"):
+            emit("RF202",
+                 f"write to global {val!r} happens in the worker's copy of "
+                 f"the module and never reaches the client (return the "
+                 f"value instead)", val, line)
+
+        # ---- RF201: capture writes ------------------------------------
+        if op in ("STORE_DEREF", "DELETE_DEREF") and val in captures:
+            emit("RF201",
+                 f"write to captured variable {val!r} is a lost write: "
+                 f"captures ship by value, so the client's {val!r} never "
+                 f"sees it (return the new value instead)", val, line)
+
+        # ---- RF203: mutation of captured objects ----------------------
+        if op in _ATTR_OPS and val in _MUTATORS and prv is not None and \
+                prv.opname == "LOAD_DEREF" and prv.argval in captures:
+            emit("RF203",
+                 f"{prv.argval!r}.{val}() mutates a worker-side copy of "
+                 f"the capture; the client's object is unchanged",
+                 f"{prv.argval}.{val}", line)
+        if op == "STORE_ATTR" and prv is not None and \
+                prv.opname == "LOAD_DEREF" and prv.argval in captures:
+            emit("RF203",
+                 f"attribute assignment on captured {prv.argval!r} mutates "
+                 f"a worker-side copy; the client's object is unchanged",
+                 f"{prv.argval}.{val}", line)
+        if op in ("STORE_SUBSCR", "DELETE_SUBSCR"):
+            # value, obj, index on the stack: the receiver load sits a few
+            # instructions back — best-effort window scan
+            k, hops = i, 0
+            while hops < 4:
+                p = _significant(instrs, k, -1)
+                if p is None:
+                    break
+                k = instrs.index(p)
+                hops += 1
+                if p.opname == "LOAD_DEREF" and p.argval in captures:
+                    emit("RF203",
+                         f"item assignment on captured {p.argval!r} mutates "
+                         f"a worker-side copy; the client's object is "
+                         f"unchanged", f"{p.argval}[]", line)
+                    break
+                if p.opname in ("LOAD_FAST", "LOAD_GLOBAL", "LOAD_NAME"):
+                    break          # receiver is local/global, not a capture
+
+        # ---- RF301: nondeterminism ------------------------------------
+        if op == "LOAD_GLOBAL" and val in _NONDET_MODULES:
+            g = None if globals_map is None else globals_map.get(val)
+            genuine = (globals_map is None
+                       or (isinstance(g, types.ModuleType)
+                           and g.__name__ in _NONDET_MODULES))
+            if genuine:
+                emit("RF301",
+                     f"call into {val!r} is nondeterministic: repeated "
+                     f"invocations of the same payload return different "
+                     f"results, breaking the bit-identity invariance "
+                     f"contract (thread an explicit seed/key through the "
+                     f"payload instead)", val, line,
+                     )
+        if op == "LOAD_GLOBAL" and val in _NONDET_ATTRS and nxt is not None \
+                and nxt.opname in _ATTR_OPS \
+                and nxt.argval in _NONDET_ATTRS[val]:
+            emit("RF301",
+                 f"{val}.{nxt.argval}() is nondeterministic across "
+                 f"invocations, breaking the bit-identity invariance "
+                 f"contract", f"{val}.{nxt.argval}", line)
+        if op == "LOAD_GLOBAL" and val in _NP_NAMES and nxt is not None and \
+                nxt.opname in _ATTR_OPS and nxt.argval == "random":
+            n2 = _significant(instrs, instrs.index(nxt), +1)
+            if n2 is not None and n2.opname in _ATTR_OPS and \
+                    n2.argval in _NP_SAMPLERS:
+                emit("RF301",
+                     f"{val}.random.{n2.argval} uses numpy's seedless "
+                     f"global RNG; use np.random.default_rng(seed) or "
+                     f"jax.random with an explicit key",
+                     f"{val}.random.{n2.argval}", line)
+        if op == "LOAD_FAST" and val in local_modules and \
+                local_modules[val] in _NONDET_MODULES and \
+                nxt is not None and nxt.opname in _ATTR_OPS:
+            emit("RF301",
+                 f"{val}.{nxt.argval}() (from in-body 'import "
+                 f"{local_modules[val]}') is nondeterministic, breaking "
+                 f"the bit-identity invariance contract",
+                 f"{local_modules[val]}.{nxt.argval}", line)
+        if op == "LOAD_FAST" and val in local_attrs and \
+                local_attrs[val][0] in _NONDET_MODULES and \
+                nxt is not None and nxt.opname in _CALL_OPS:
+            mod, attr = local_attrs[val]
+            emit("RF301",
+                 f"{attr}() (from in-body 'from {mod} import {attr}') is "
+                 f"nondeterministic, breaking the bit-identity invariance "
+                 f"contract", f"{mod}.{attr}", line)
+
+        # ---- RF402: blocking calls inside coroutines ------------------
+        if coro:
+            if op == "LOAD_GLOBAL" and val == "time" and nxt is not None \
+                    and nxt.opname in _ATTR_OPS and nxt.argval == "sleep":
+                emit("RF402",
+                     "time.sleep() inside a coroutine blocks the event "
+                     "loop serving every other request (use 'await "
+                     "asyncio.sleep(...)')", "time.sleep", line)
+            if op == "LOAD_FAST" and local_modules.get(val) == "time" and \
+                    nxt is not None and nxt.opname in _ATTR_OPS and \
+                    nxt.argval == "sleep":
+                emit("RF402",
+                     "time.sleep() inside a coroutine blocks the event "
+                     "loop serving every other request (use 'await "
+                     "asyncio.sleep(...)')", "time.sleep", line)
+            if op == "LOAD_FAST" and local_attrs.get(val) == \
+                    ("time", "sleep") and nxt is not None and \
+                    nxt.opname in _CALL_OPS:
+                emit("RF402",
+                     "time.sleep() inside a coroutine blocks the event "
+                     "loop serving every other request (use 'await "
+                     "asyncio.sleep(...)')", "time.sleep", line)
+
+    # ---- nested code objects (comprehensions, inner defs) -------------
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            _scan_code(const, main_like=main_like,
+                       captures=captures & frozenset(const.co_freevars),
+                       func_name=f"{func_name}.{const.co_name}"
+                       if const.co_name != func_name else func_name,
+                       globals_map=globals_map, is_coro=False,
+                       out=out, seen=seen)
+
+
+# ---------------------------------------------------------------- host-only
+
+def _host_only_reason(v: Any) -> str | None:
+    """Why a capture can never leave this process, or ``None``."""
+    import io
+    import socket
+    import subprocess
+    import threading
+
+    t = type(v)
+    if t.__module__ == "_thread":
+        return "a thread lock"
+    if isinstance(v, (threading.Event, threading.Condition,
+                      threading.Semaphore, threading.Thread,
+                      threading.Barrier)):
+        return f"a threading.{t.__name__}"
+    if isinstance(v, io.IOBase):
+        return "an open file handle"
+    if isinstance(v, socket.socket):
+        return "a socket"
+    if isinstance(v, subprocess.Popen):
+        return "a subprocess handle"
+    if isinstance(v, (types.GeneratorType, types.CoroutineType,
+                      types.AsyncGeneratorType)):
+        return f"a live {t.__name__}"
+    if isinstance(v, memoryview):
+        return "a memoryview over host memory"
+    if t.__module__.startswith("repro.") and t.__name__ in (
+            "Session", "AsyncSession", "Dispatcher", "DispatcherInstance",
+            "Deployment", "BoundFunction", "AsyncBoundFunction",
+            "InvocationFuture", "AsyncInvocation", "ContinuousBatcher",
+            "FleetRouter", "LMServer", "EngineClient"):
+        return f"a client-side repro.{t.__name__} (backends, sessions and " \
+               f"futures never ship)"
+    return None
+
+
+def _probe_serialize(v: Any) -> str | None:
+    """Dry-run the wire serializer on one capture; error text on failure.
+
+    Known-leaf types short-circuit without encoding — a multi-GB params
+    array should not be serialized twice per deploy just to prove it can
+    be.  Only compound/unknown values pay for the real dry run.
+    """
+    if v is None or isinstance(v, (int, float, bool, str, bytes)):
+        return None
+    import numpy as np
+    if isinstance(v, (np.ndarray, np.generic)):
+        return None
+    try:
+        import jax
+        if isinstance(v, jax.Array):
+            return None
+    except Exception:
+        pass
+    try:
+        from ..serialization.artifacts import ArtifactRef
+        if isinstance(v, ArtifactRef):
+            return None
+    except Exception:
+        pass
+    from ..serialization import serialize
+    try:
+        serialize(v)
+        return None
+    except Exception as e:
+        return str(e) or type(e).__name__
+
+
+# ------------------------------------------------------------- entry points
+
+def _unwrap(fn: Any) -> Callable:
+    """Accept plain callables, ``RemoteFunction``s and bound handles."""
+    rf = getattr(fn, "_rf", None)          # cloud.BoundFunction
+    if rf is not None:
+        fn = rf
+    inner = getattr(fn, "fn", None)        # core.RemoteFunction
+    if inner is not None and callable(inner) and hasattr(inner, "__code__"):
+        return inner
+    return fn
+
+
+def _main_like(module: str | None) -> bool:
+    """Would ``_thaw_globals`` hand this code fresh globals?"""
+    if not module or module == "__main__":
+        return True
+    import importlib.util
+    try:
+        return importlib.util.find_spec(module) is None
+    except (ImportError, ValueError):
+        return True
+
+
+def analyze_code(code: types.CodeType, *, module: str | None = "__main__",
+                 qualname: str | None = None,
+                 is_coroutine: bool | None = None) -> list[Diagnostic]:
+    """Value-free analysis of a bare code object (the CLI path).
+
+    No capture values are available, so RF102/RF103/RF104 cannot fire —
+    the bytecode rules (RF101/RF2xx/RF301/RF4xx) still do.  ``module``
+    decides the fresh-globals question: ``"__main__"``/``None`` (scripts)
+    arms RF101, an importable module name disarms it.
+    """
+    out: list[Diagnostic] = []
+    name = qualname or code.co_name
+    coro = bool(code.co_flags & _CO_COROUTINE) if is_coroutine is None \
+        else is_coroutine
+    if coro:
+        out.append(make(
+            "RF401",
+            f"{name!r} is a coroutine function: invoking it remotely "
+            f"returns a coroutine object, which is not wire-serializable "
+            f"(make the remote function sync; drive it *through* "
+            f"AsyncSession instead)",
+            symbol=name, function=name, file=code.co_filename,
+            line=code.co_firstlineno))
+    _scan_code(code, main_like=_main_like(module),
+               captures=frozenset(code.co_freevars), func_name=name,
+               globals_map=None, is_coro=coro, out=out, seen=set())
+    return out
+
+
+def analyze_function(fn: Callable, *, name: str | None = None,
+                     cross_process: bool = True,
+                     _seen: set | None = None) -> list[Diagnostic]:
+    """Full-fidelity analysis of a live function object.
+
+    Walks exactly what ``freeze_function`` would ship: the importability
+    test, each capture cell (classified the same way: module / code /
+    importable ref / payload slot), and recursion through callable
+    captures that would be frozen into the artifact.  ``cross_process=
+    False`` (in-process backends execute the client's own function
+    object) downgrades RF101 to ``info`` — the finding only bites when
+    code actually ships.
+    """
+    fn = _unwrap(fn)
+    seen = _seen if _seen is not None else set()
+    out: list[Diagnostic] = []
+    code = getattr(fn, "__code__", None)
+    disp = name or getattr(fn, "__qualname__", None) \
+        or getattr(fn, "__name__", repr(fn))
+
+    if code is None:
+        # non-function callable as the entry itself: importable → fine;
+        # else analyze its __call__ if it has python code
+        if _importable_ref(fn):
+            return out
+        call = getattr(type(fn), "__call__", None)
+        if getattr(call, "__code__", None) is not None:
+            return analyze_function(call, name=f"{disp}.__call__",
+                                    cross_process=cross_process, _seen=seen)
+        return out
+    if id(code) in seen:
+        return out
+
+    module = getattr(fn, "__module__", None)
+    shipped_as_ref = _importable_ref(fn)
+    main_like = (not shipped_as_ref) and _main_like(module)
+
+    if code.co_flags & _CO_COROUTINE:
+        out.append(make(
+            "RF401",
+            f"{disp!r} is a coroutine function: invoking it remotely "
+            f"returns a coroutine object, which is not wire-serializable "
+            f"(make the remote function sync; drive it *through* "
+            f"AsyncSession instead)",
+            symbol=disp, function=disp, file=code.co_filename,
+            line=code.co_firstlineno))
+
+    _scan_code(code, main_like=main_like,
+               captures=frozenset(code.co_freevars), func_name=disp,
+               globals_map=getattr(fn, "__globals__", None),
+               is_coro=bool(code.co_flags & _CO_COROUTINE),
+               out=out, seen=seen)
+
+    # ---- capture graph, classified exactly like freeze_function --------
+    names = code.co_freevars
+    cells = fn.__closure__ or ()
+    file, line = code.co_filename, code.co_firstlineno
+    for cname, cell in zip(names, cells):
+        try:
+            v = cell.cell_contents
+        except ValueError:
+            continue                        # self-reference: payload slot
+        if isinstance(v, types.ModuleType):
+            if v.__name__ in _NONDET_MODULES:
+                out.append(make(
+                    "RF301",
+                    f"captured module {v.__name__!r} is a nondeterminism "
+                    f"source; thread explicit seeds through the payload",
+                    symbol=cname, function=disp, file=file, line=line))
+            continue
+        if callable(v) and getattr(v, "__code__", None) is not None:
+            if not _importable_ref(v):      # frozen into the artifact
+                out.extend(analyze_function(
+                    v, name=f"{disp} capture {cname!r}",
+                    cross_process=cross_process, _seen=seen))
+            continue
+        if callable(v) and _importable_ref(v):
+            continue                        # ships as module:qualname ref
+        reason = _host_only_reason(v)
+        if reason is not None:
+            out.append(make(
+                "RF102",
+                f"capture {cname!r} is {reason}: it exists only in this "
+                f"process and cannot ship to a worker (open/acquire the "
+                f"resource inside the function body instead)",
+                symbol=cname, function=disp, file=file, line=line))
+            continue
+        probe_err = _probe_serialize(v)
+        if probe_err is not None:
+            kind = "callable " if callable(v) else ""
+            out.append(make(
+                "RF103",
+                f"{kind}capture {cname!r} ({type(v).__name__}) failed the "
+                f"wire-serialization dry run: {probe_err}",
+                symbol=cname, function=disp, file=file, line=line))
+            continue
+        if callable(v):
+            out.append(make(
+                "RF104",
+                f"capture {cname!r} ({type(v).__name__}) is callable but "
+                f"has no __code__ and no importable ref: it ships by "
+                f"value in the payload, not as code",
+                symbol=cname, function=disp, file=file, line=line))
+
+    if not cross_process:
+        out = [d if d.code != "RF101"
+               else Diagnostic(**{**d.to_json(), "severity": "info"})
+               for d in out]
+    return out
+
+
+# -------------------------------------------------- runtime failure hints
+
+_NAME_RE = re.compile(r"name '([^']+)' is not defined")
+_SERIAL_HINTS = ("serializ", "register_custom", "wire-serializable",
+                 "not registered", "pickle", "marshal")
+
+
+def match_diagnostics(exc: BaseException,
+                      diags: Iterable[Diagnostic]) -> list[Diagnostic]:
+    """Diagnostics that plausibly explain a remote failure.
+
+    ``NameError`` matches RF101 on the missing symbol; serialization
+    failures match the capture rules (RF102/RF103/RF104); code-shipping
+    failures match all RF1xx.  Anything else gets no hint — a wrong hint
+    is worse than none.
+    """
+    diags = list(diags or ())
+    text = f"{type(exc).__name__}: {exc} " \
+           f"{getattr(exc, 'remote_traceback', '')}"
+    if "NameError" in text or isinstance(exc, NameError):
+        m = _NAME_RE.search(text)
+        if m:
+            hits = [d for d in diags
+                    if d.code == "RF101" and d.symbol == m.group(1)]
+            if hits:
+                return hits
+        return [d for d in diags if d.code == "RF101"]
+    low = text.lower()
+    if any(h in low for h in _SERIAL_HINTS):
+        hits = [d for d in diags
+                if d.code in ("RF102", "RF103", "RF104", "RF401")]
+        if hits:
+            return hits
+    if "code artifact" in low or "codeshiperror" in low or \
+            "cannot freeze" in low:
+        return [d for d in diags if d.code.startswith("RF1")]
+    return []
+
+
+def attach_failure_hint(exc: BaseException, deployed: Any) -> bool:
+    """Append a "likely cause" analysis hint to a remote failure.
+
+    Called from the transport completion path when a worker-side error
+    comes back: re-uses the deploy-time diagnostics when the deployment
+    recorded them (the common case), re-runs the analyzer on the client's
+    function object otherwise.  The hint lands in two places: an
+    ``analysis_hint`` attribute (picked up as the ``error.analysis`` span
+    attribute) and appended to ``remote_traceback`` so plain tracebacks
+    show it too.  Returns whether a hint was attached.
+    """
+    diags = getattr(deployed, "diagnostics", None)
+    if diags is None:
+        rf = getattr(deployed, "remote_fn", None)
+        fn = getattr(rf, "fn", None) or deployed
+        try:
+            diags = analyze_function(fn)
+        except Exception:
+            return False
+    hits = match_diagnostics(exc, diags)
+    if not hits:
+        return False
+    hint = "\n".join("likely cause: " + d.format() for d in hits)
+    exc.analysis_hint = hint                       # type: ignore[attr-defined]
+    rtb = getattr(exc, "remote_traceback", "") or ""
+    sep = "\n" if rtb and not rtb.endswith("\n") else ""
+    exc.remote_traceback = (                       # type: ignore[attr-defined]
+        f"{rtb}{sep}[repro.analysis] {hint}")
+    return True

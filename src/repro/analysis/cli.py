@@ -1,0 +1,215 @@
+"""Offline linter: ``python -m repro.analysis <module-or-path> ...``.
+
+Discovery is AST-based and the linted file is **never executed**: source
+is parsed to find remote call sites — ``@session.remote``-style decorators
+and ``session.function(...)`` / ``.remote(...)`` / ``.deploy(...)`` calls
+(including inline lambdas) — then ``compile()``d, and the code objects
+matching the discovered sites are fed to :func:`analyze_code`.
+
+Because no values exist at lint time, the capture-probe rules
+(RF102/RF103/RF104) cannot fire here; the bytecode rules do.  The module
+name is derived by walking up the ``__init__.py`` chain, so functions in
+importable packages are not RF101-flagged while bare scripts (the
+``__main__`` fresh-globals contract) are.
+
+Exit status: 1 if any ``error``-severity diagnostic (any diagnostic at
+all under ``--strict``), else 0 — the CI self-lint contract.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import importlib.util
+import json
+import sys
+import types
+from pathlib import Path
+from typing import Iterator
+
+from .analyzer import analyze_code
+from .diagnostics import Diagnostic
+
+__all__ = ["main", "lint_file", "discover_targets"]
+
+
+# ------------------------------------------------------------- discovery
+
+_REMOTE_ATTRS = frozenset({"remote", "function", "deploy"})
+
+
+def _decorator_is_remote(dec: ast.expr) -> bool:
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    if isinstance(dec, ast.Attribute):
+        return dec.attr == "remote"
+    if isinstance(dec, ast.Name):
+        return dec.id == "remote"
+    return False
+
+
+def discover_targets(tree: ast.Module) -> list[tuple[str, int]]:
+    """(name, lineno) pairs for every remote-function site in a module.
+
+    * ``def f`` decorated with ``@<anything>.remote`` / ``@remote(...)``
+    * ``<anything>.function(f, ...)`` / ``.remote(f)`` / ``.deploy(f)``
+      where ``f`` is a module-level def or an inline lambda
+    """
+    defs: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    targets: dict[tuple[str, int], None] = {}
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_decorator_is_remote(d) for d in node.decorator_list):
+                targets[(node.name, node.lineno)] = None
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _REMOTE_ATTRS:
+            for arg in node.args:
+                if isinstance(arg, ast.Lambda):
+                    targets[("<lambda>", arg.lineno)] = None
+                elif isinstance(arg, ast.Name) and arg.id in defs:
+                    d = defs[arg.id]
+                    targets[(d.name, d.lineno)] = None
+    return list(targets)
+
+
+def _iter_codes(code: types.CodeType) -> Iterator[types.CodeType]:
+    yield code
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            yield from _iter_codes(const)
+
+
+def _module_name_for(path: Path) -> str | None:
+    """Dotted module name if ``path`` sits inside a package, else None.
+
+    ``None`` means the file is a bare script: its functions live under
+    ``__main__`` when run, which arms the RF101 fresh-globals rule — the
+    same judgement ``freeze_function`` makes at runtime.
+    """
+    path = path.resolve()
+    parts = [] if path.name == "__init__.py" else [path.stem]
+    cur = path.parent
+    # regular packages: walk the __init__.py chain
+    while (cur / "__init__.py").exists():
+        parts.insert(0, cur.name)
+        cur = cur.parent
+    # namespace packages have no __init__.py, so keep prepending parent
+    # dirs; accept a candidate only if it resolves to exactly this file
+    # (guards against shadowing an unrelated installed module)
+    for _ in range(4):
+        if parts and len(parts) > (0 if path.name == "__init__.py" else 1):
+            name = ".".join(parts)
+            try:
+                spec = importlib.util.find_spec(name)
+            except (ImportError, ValueError):
+                spec = None
+            if spec is not None and spec.origin and \
+                    Path(spec.origin).resolve() == path:
+                return name
+        if cur == cur.parent:
+            break
+        parts.insert(0, cur.name)
+        cur = cur.parent
+    return None
+
+
+def lint_file(path: Path) -> tuple[int, list[Diagnostic]]:
+    """Lint one source file; returns (#target functions, diagnostics)."""
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    sites = discover_targets(tree)
+    if not sites:
+        return 0, []
+    code = compile(source, str(path), "exec", dont_inherit=True)
+    module = _module_name_for(path)
+    wanted = {(n, l) for n, l in sites}
+    out: list[Diagnostic] = []
+    hit = 0
+    for c in _iter_codes(code):
+        if (c.co_name, c.co_firstlineno) in wanted:
+            hit += 1
+            out.extend(analyze_code(c, module=module, qualname=c.co_name))
+    return hit, out
+
+
+def _resolve(spec: str) -> list[Path]:
+    p = Path(spec)
+    if p.is_dir():
+        return sorted(q for q in p.rglob("*.py") if q.is_file())
+    if p.is_file():
+        return [p]
+    # dotted module name
+    try:
+        found = importlib.util.find_spec(spec)
+    except (ImportError, ValueError):
+        found = None
+    if found is not None and found.origin and found.origin.endswith(".py"):
+        origin = Path(found.origin)
+        if found.submodule_search_locations:      # package: lint the tree
+            return sorted(q for q in origin.parent.rglob("*.py")
+                          if q.is_file())
+        return [origin]
+    raise FileNotFoundError(f"no such file, directory or module: {spec!r}")
+
+
+# ------------------------------------------------------------------ main
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Shippability linter for repro remote functions.")
+    ap.add_argument("targets", nargs="+",
+                    help="source file, directory, or dotted module name")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any diagnostic, not just errors")
+    args = ap.parse_args(argv)
+
+    files: list[Path] = []
+    for spec in args.targets:
+        try:
+            files.extend(_resolve(spec))
+        except FileNotFoundError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+
+    n_funcs = 0
+    diags: list[Diagnostic] = []
+    n_files = 0
+    for f in files:
+        try:
+            hit, out = lint_file(f)
+        except SyntaxError as e:
+            print(f"error: {f}: {e}", file=sys.stderr)
+            return 2
+        n_files += 1
+        n_funcs += hit
+        diags.extend(out)
+
+    errors = sum(d.severity == "error" for d in diags)
+    warnings = sum(d.severity == "warning" for d in diags)
+
+    if args.format == "json":
+        print(json.dumps({
+            "version": 1,
+            "files": n_files,
+            "functions": n_funcs,
+            "errors": errors,
+            "warnings": warnings,
+            "diagnostics": [d.to_json() for d in diags],
+        }, indent=2))
+    else:
+        for d in diags:
+            print(d.format())
+        print(f"[repro.analysis] {n_files} file(s), {n_funcs} remote "
+              f"function(s): {errors} error(s), {warnings} warning(s), "
+              f"{len(diags) - errors - warnings} info")
+
+    if errors or (args.strict and diags):
+        return 1
+    return 0

@@ -1,0 +1,109 @@
+"""Diagnostic objects, the rule table, and the strictness contract.
+
+A :class:`Diagnostic` is one compiler-style finding: stable rule code,
+severity, offending symbol, and a ``file:line`` source location taken from
+``co_filename``/``co_firstlineno`` plus the instruction line the pattern
+matched on.  Severities gate behavior:
+
+* ``error``   — the function **will** fail (or silently lose data) when
+  shipped; ``Session(strict_analysis=True)`` / ``FunctionConfig.strict``
+  turn these into :class:`AnalysisError` at deploy time.
+* ``warning`` — the function ships but its semantics diverge from the
+  local call (lost writes, broken bit-identity); surfaced via
+  :class:`ShippabilityWarning` on deploy and failed by the CLI only under
+  ``--strict``.
+* ``info``    — worth knowing (a capture ships by value, not as code);
+  shown by the CLI, silent at deploy time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+SEVERITIES = ("error", "warning", "info")
+
+# Stable rule registry: code -> (default severity, one-line title).  The
+# rule-code table in API.md mirrors this dict; tests assert membership so
+# codes never silently disappear.
+RULES: dict[str, tuple[str, str]] = {
+    "RF101": ("error",
+              "global name unresolvable on the worker (fresh-globals "
+              "contract for __main__/script functions)"),
+    "RF102": ("error",
+              "capture is a host-only resource (lock/file/socket/session) "
+              "that cannot cross a process boundary"),
+    "RF103": ("error",
+              "capture failed the wire-serialization probe"),
+    "RF104": ("info",
+              "callable capture without __code__ and without an importable "
+              "ref ships by value in the payload, not as code"),
+    "RF201": ("warning",
+              "write to a captured variable — by-value shipping makes it a "
+              "lost write"),
+    "RF202": ("warning",
+              "write to a global — worker-side module state never reaches "
+              "the client"),
+    "RF203": ("warning",
+              "mutating call/assignment on a captured object — the worker "
+              "mutates a copy"),
+    "RF301": ("warning",
+              "nondeterministic call (random/uuid/secrets/os.urandom/"
+              "wall-clock) breaks the bit-identity invariance contract"),
+    "RF401": ("error",
+              "coroutine (async def) cannot be a remote entry point — its "
+              "result is a coroutine object, not a wire-serializable value"),
+    "RF402": ("warning",
+              "blocking call inside a coroutine stalls the event loop "
+              "serving it"),
+}
+
+
+class ShippabilityWarning(UserWarning):
+    """Deploy-time analyzer finding on a function about to ship."""
+
+
+class AnalysisError(RuntimeError):
+    """Strict-mode deploy rejection; carries the full diagnostic list."""
+
+    def __init__(self, function: str, diagnostics: Iterable["Diagnostic"]):
+        self.function = function
+        self.diagnostics = tuple(diagnostics)
+        lines = "\n".join("  " + d.format() for d in self.diagnostics)
+        super().__init__(
+            f"function {function!r} rejected by shippability analysis "
+            f"({len(self.diagnostics)} diagnostic(s)):\n{lines}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    code: str                  # "RF101"
+    severity: str              # error | warning | info
+    message: str               # human sentence, names the offending symbol
+    symbol: str = ""           # offending name (global, capture, method)
+    function: str = ""         # qualname of the function the finding is in
+    file: str = ""             # co_filename
+    line: int = 0              # source line the pattern matched on
+
+    def format(self) -> str:
+        """``file:line: RFxxx severity: message [in function]`` — the
+        compiler-style one-liner."""
+        loc = f"{self.file}:{self.line}: " if self.file else ""
+        where = f" [in {self.function}]" if self.function else ""
+        return f"{loc}{self.code} {self.severity}: {self.message}{where}"
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Diagnostic":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def make(code: str, message: str, *, symbol: str = "", function: str = "",
+         file: str = "", line: int = 0,
+         severity: str | None = None) -> Diagnostic:
+    """Build a diagnostic with the rule's registered default severity."""
+    sev = severity or RULES[code][0]
+    return Diagnostic(code=code, severity=sev, message=message, symbol=symbol,
+                      function=function, file=file, line=line)

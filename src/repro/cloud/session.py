@@ -152,7 +152,8 @@ class Session:
                  shed: bool = False,
                  dispatcher: Dispatcher | None = None,
                  trace_sample: float | None = None,
-                 obs_enabled: bool | None = None):
+                 obs_enabled: bool | None = None,
+                 strict_analysis: bool = False):
         # observability knobs land on the PROCESS tracer (one trace plane
         # per process, like the metrics registry) — last session to set
         # them wins.  trace_sample=1.0 records every request's span tree;
@@ -171,12 +172,15 @@ class Session:
         if dispatcher is not None:
             self._dispatcher = dispatcher
             self._owns_dispatcher = False
+            if strict_analysis:   # opt-in is sticky on the shared deployment
+                dispatcher.deployment.strict_analysis = True
         else:
             self._dispatcher = Dispatcher(
                 backend=backend, deployment=deployment, client=client,
                 latency=latency, max_concurrency=max_concurrency,
                 os_threads=os_threads, fault_plan=fault_plan,
-                manifest_path=manifest_path)
+                manifest_path=manifest_path,
+                strict_analysis=strict_analysis)
             # a live Backend instance is caller-owned (it may be shared
             # across sessions); names/classes/factories produce one for us
             self._owns_dispatcher = (

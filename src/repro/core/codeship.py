@@ -71,10 +71,17 @@ def freeze_function(fn: Callable) -> dict[str, Any]:
             continue
         if isinstance(v, types.ModuleType):
             freevars[name] = {"kind": "module", "module": v.__name__}
-        elif callable(v):
+        elif callable(v) and (getattr(v, "__code__", None) is not None
+                              or _importable(v)):
             freevars[name] = freeze_function(v)
         else:
-            freevars[name] = None   # data capture: value travels in payloads
+            # Data capture: value travels in payloads.  Callables with no
+            # __code__ and no importable ref (callable instances, local
+            # classes) land here too — they ship by value like any other
+            # capture instead of exploding in recursive freezing; the
+            # analyzer's RF103/RF104 rules explain the residual cases
+            # where that value cannot serialize.
+            freevars[name] = None
     if fn.__defaults__:
         try:
             # the payload serializer, not marshal: default values may be

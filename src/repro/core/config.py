@@ -28,6 +28,10 @@ class FunctionConfig:
     # each Invocation and never salts the deployed name (same entry point,
     # different routing).  None = any worker (the stateless default).
     affinity: int | None = None
+    # Per-function strict shippability: error-severity analyzer findings
+    # reject the deploy with AnalysisError instead of warning.  Client
+    # policy like timeout/retries — never salts the deployed name.
+    strict: bool = False
 
     def with_memory(self, mb: int) -> "FunctionConfig":
         return dataclasses.replace(self, memory_mb=mb)
@@ -43,6 +47,9 @@ class FunctionConfig:
 
     def with_hedging(self, quantile: float = 0.95) -> "FunctionConfig":
         return dataclasses.replace(self, hedge_after_quantile=quantile)
+
+    def with_strict(self, strict: bool = True) -> "FunctionConfig":
+        return dataclasses.replace(self, strict=strict)
 
     @property
     def memory_gb(self) -> float:

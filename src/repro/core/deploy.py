@@ -12,6 +12,7 @@ from __future__ import annotations
 import json
 import threading
 import time
+import warnings
 import weakref
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -32,6 +33,10 @@ class DeployedFunction:
     remote_fn: RemoteFunction
     entry_args: tuple          # example (args, kwargs, captures) for shape ref
     compile_s: float = 0.0
+    # Deploy-time shippability diagnostics (repro.analysis).  A tuple —
+    # possibly empty — once analysis ran; None if the analyzer itself
+    # failed, in which case the failure-hint path re-analyzes on demand.
+    diagnostics: tuple | None = ()
 
     @property
     def config(self) -> FunctionConfig:
@@ -49,6 +54,14 @@ class Deployment:
         # async serving submits from executor threads: concurrent deploys
         # of the same function must compile once, not race the cache
         self._lock = threading.RLock()
+        # Shippability analysis (repro.analysis) runs on every cache-miss
+        # deploy.  strict_analysis upgrades error-severity findings to an
+        # AnalysisError *before* anything ships; the dispatcher flips
+        # analysis_cross_process off for in-process backends so RF101
+        # (fresh-globals NameError) reports as info, not error.
+        self.strict_analysis = False
+        self.analysis_cross_process = True
+        self._warned: set[str] = set()
         # dispatch-path fast cache: content identity (stable_name) traces
         # the function, which costs ~100 ms for a real serve task — per
         # SUBMIT.  Repeat dispatches hit this shape/value key instead and
@@ -141,6 +154,11 @@ class Deployment:
             self.cache_hits += 1          # unchanged code → no redeploy
             return self._functions[name]
 
+        # Compile-time validation before anything ships (Cppless: the LLVM
+        # extension rejects un-extractable lambdas at build time).  Strict
+        # mode raises here — before AOT compile, before the manifest entry.
+        diagnostics = self._analyze(rf, cfg, name)
+
         t0 = time.perf_counter()
         kind = "generic_worker"
         if rf.jax_traceable:
@@ -156,7 +174,8 @@ class Deployment:
 
         bridge = Bridge(name=name, config=cfg, executor=executor, kind=kind)
         deployed = DeployedFunction(name=name, bridge=bridge, remote_fn=rf,
-                                    entry_args=payload, compile_s=compile_s)
+                                    entry_args=payload, compile_s=compile_s,
+                                    diagnostics=diagnostics)
         self._functions[name] = deployed
 
         in_avals, out_avals = self._aval_strings(rf, payload, kind, executor)
@@ -168,6 +187,38 @@ class Deployment:
             name=name, human_name=rf.human_name, kind=kind, config=cfg,
             in_avals=in_avals, out_avals=out_avals, artifact=name, code=code))
         return deployed
+
+    def _analyze(self, rf: RemoteFunction, cfg: FunctionConfig,
+                 name: str) -> tuple | None:
+        """Run the shippability pass; gate on strictness; warn once.
+
+        Returns the diagnostic tuple stored on the DeployedFunction (used
+        later by the transport failure-hint path), or ``None`` if the
+        analyzer itself crashed — analysis must never take down a deploy
+        except through its own strict-mode contract.
+        """
+        from ..analysis import (AnalysisError, ShippabilityWarning,
+                                analyze_function)
+        try:
+            diags = tuple(analyze_function(
+                rf.fn, name=rf.human_name,
+                cross_process=self.analysis_cross_process))
+        except AnalysisError:
+            raise
+        except Exception:
+            return None
+        errors = [d for d in diags if d.severity == "error"]
+        if errors and (cfg.strict or self.strict_analysis):
+            raise AnalysisError(rf.human_name, errors)
+        loud = [d for d in diags if d.severity in ("error", "warning")]
+        if loud and name not in self._warned:
+            self._warned.add(name)
+            lines = "\n".join("  " + d.format() for d in loud)
+            warnings.warn(
+                f"shippability analysis of {rf.human_name!r} found "
+                f"{len(loud)} issue(s):\n{lines}",
+                ShippabilityWarning, stacklevel=4)
+        return diags
 
     def get(self, name: str) -> DeployedFunction:
         return self._functions[name]

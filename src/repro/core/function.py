@@ -58,11 +58,29 @@ def rebind(fn: Callable, captures: dict[str, Any]) -> Callable:
     )
 
 
+def is_code_capture(v: Any) -> bool:
+    """Does this capture travel with the deployed *artifact* (not payloads)?
+
+    Mirrors ``freeze_function``'s capture branch exactly: modules, python
+    functions (``__code__`` present), and importable callables (classes,
+    module-level singletons) are frozen into the code artifact; everything
+    else — including callable instances with no ``__code__`` and no
+    importable ref — is a data capture whose value ships per-invocation.
+    """
+    if isinstance(v, types.ModuleType):
+        return True
+    if not callable(v):
+        return False
+    if getattr(v, "__code__", None) is not None:
+        return True
+    from .codeship import _importable
+    return _importable(v)
+
+
 def data_captures(fn: Callable) -> dict[str, Any]:
-    """The serializable (non-callable, non-module) capture subset."""
+    """The payload-travelling capture subset (everything not shipped as code)."""
     return {
-        k: v for k, v in reflect_captures(fn).items()
-        if not callable(v) and not isinstance(v, types.ModuleType)
+        k: v for k, v in reflect_captures(fn).items() if not is_code_capture(v)
     }
 
 

@@ -54,7 +54,8 @@ class Dispatcher:
                  latency: LatencyModel = DEFAULT_LATENCY,
                  max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None,
-                 manifest_path: str | None = None):
+                 manifest_path: str | None = None,
+                 strict_analysis: bool = False):
         self.deployment = deployment or Deployment(manifest_path=manifest_path)
         self.client = client
         self.latency = latency
@@ -65,6 +66,15 @@ class Dispatcher:
             backend, max_concurrency=max_concurrency, os_threads=os_threads,
             fault_plan=fault_plan, latency=latency, client=client,
             deployment=self.deployment)
+        # shippability analysis knobs: strictness is caller policy; the
+        # cross-process bit tells the analyzer whether the fresh-globals
+        # contract (RF101) actually bites on this backend — in-process
+        # backends run the client's own function object, so it does not
+        if strict_analysis:
+            self.deployment.strict_analysis = True
+        caps = getattr(self.backend, "capabilities", None)
+        if caps is not None and hasattr(caps, "cross_process"):
+            self.deployment.analysis_cross_process = bool(caps.cross_process)
         self._instances: list[DispatcherInstance] = []
 
     @property
@@ -154,6 +164,9 @@ class DispatcherInstance:
             rtb = getattr(err, "remote_traceback", "")
             if rtb:
                 span.set("error.remote_traceback", rtb)
+            hint = getattr(err, "analysis_hint", "")
+            if hint:
+                span.set("error.analysis", hint[:2000])
             span.finish("error")
 
         inv.future.add_done_callback(_finish)

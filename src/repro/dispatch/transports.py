@@ -461,7 +461,17 @@ class _TransportBackend:
                 _deliver(inv, False, _worker_crash(
                     f"{msg.etype}: {msg.message}", msg.traceback), rec)
             else:
-                _deliver(inv, False, wire.to_exception(msg), rec)
+                exc = wire.to_exception(msg)
+                # user-code failure: append the deploy-time shippability
+                # diagnostic that predicts it (NameError under the fresh-
+                # globals contract, unserializable capture, ...) as a
+                # "likely cause" hint on the remote traceback / span attrs
+                try:
+                    from ..analysis import attach_failure_hint
+                    attach_failure_hint(exc, inv.deployed)
+                except Exception:
+                    pass
+                _deliver(inv, False, exc, rec)
             return
         if not isinstance(msg, wire.ResultReply):
             _deliver(inv, False, _worker_crash(

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import asyncio
 import threading
+import warnings
 from collections import deque
 from typing import Any, AsyncIterator, Callable, Iterable
 
@@ -252,7 +253,29 @@ class AsyncSession:
     def function(self, fn: Callable, **kwargs: Any) -> AsyncBoundFunction:
         """Bind ``fn`` into this async session (same kwargs as
         ``Session.function``)."""
-        return AsyncBoundFunction(self, self._session.function(fn, **kwargs))
+        bound = self._session.function(fn, **kwargs)
+        # RF4xx surface early, at bind time: a coroutine entry point or a
+        # time.sleep inside one is an *async-session* mistake, and the
+        # deploy-time pass only runs at first submit.  Bytecode-only check
+        # (analyze_code) — no capture probing on the bind path.
+        try:
+            code = getattr(bound._rf.fn, "__code__", None)
+            if code is not None:
+                from ..analysis import ShippabilityWarning, analyze_code
+                rf4 = [d for d in
+                       analyze_code(code,
+                                    module=getattr(fn, "__module__", None),
+                                    qualname=bound.name)
+                       if d.code.startswith("RF4")]
+                if rf4:
+                    lines = "\n".join("  " + d.format() for d in rf4)
+                    warnings.warn(
+                        f"async-session analysis of {bound.name!r} found "
+                        f"{len(rf4)} issue(s):\n{lines}",
+                        ShippabilityWarning, stacklevel=2)
+        except Exception:
+            pass
+        return AsyncBoundFunction(self, bound)
 
     def remote(self, fn: Callable | None = None, **kwargs: Any):
         """Decorator form: ``@asess.remote`` / ``@asess.remote(memory_mb=...)``."""

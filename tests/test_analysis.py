@@ -1,0 +1,608 @@
+"""Deploy-time shippability analyzer (ISSUE 9).
+
+Every rule gets a positive fixture the analyzer flags AND a runtime
+demonstration that the flagged code really fails (or silently diverges)
+on the ``processes`` backend un-analyzed — plus a near-miss fixture the
+analyzer must NOT flag.  Also covered: the strict/warn deploy paths, the
+runtime "likely cause" hint on a real worker NameError, the satellite
+``freeze_function`` callable-capture fix, and the CLI's JSON schema.
+"""
+import asyncio
+import dataclasses
+import json
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis import (AnalysisError, Diagnostic, RULES, SEVERITIES,
+                            ShippabilityWarning, analyze_code,
+                            analyze_function, match_diagnostics)
+from repro.analysis.cli import main as cli_main
+from repro.cloud import Session
+from repro.core import freeze_function
+from repro.core.codeship import _importable
+from repro.core.function import data_captures, is_code_capture
+from repro.serialization import register_custom
+
+
+def main_like(src: str, filename: str = "/tmp/analysis_fixture.py") -> dict:
+    """Build functions under a ``__main__``-like module, the fresh-globals
+    shipping contract the RF101 rule is about."""
+    g = {"__name__": "__main__"}
+    exec(compile(textwrap.dedent(src), filename, "exec"), g)
+    return g
+
+
+def codes(diags):
+    return {d.code for d in diags}
+
+
+# -- module-level helpers: importable, ship by ref (near-miss territory) ----
+
+MODULE_FACTOR = 7
+
+
+def importable_uses_global(n):
+    return MODULE_FACTOR * n
+
+
+def rand_task(_):
+    import random
+    return random.random()
+
+
+def global_writer(n):
+    global ANALYSIS_SEEN
+    ANALYSIS_SEEN = n          # worker-side module copy only
+    return n
+
+
+def make_counter_fn():
+    counter = 0
+
+    def bump(n):
+        nonlocal counter
+        counter += 1
+        return counter
+    return bump
+
+
+def make_list_appender(xs):
+    def appender(n):
+        xs.append(n)
+        return len(xs)
+    return appender
+
+
+@dataclasses.dataclass
+class ShippableGain:
+    """Serializable callable instance (registered): the RF104 case."""
+    gain: float
+
+    def __call__(self, x):
+        return self.gain * x
+
+
+register_custom(ShippableGain)
+
+
+def make_gain_fn(g: ShippableGain):
+    def apply(x):
+        return g(x)
+    return apply
+
+
+@pytest.fixture(scope="module")
+def proc():
+    with Session("processes", os_threads=1) as s:
+        yield s
+
+
+# ---------------------------------------------------------------- rule table
+
+def test_rule_table_is_stable():
+    assert {"RF101", "RF102", "RF103", "RF104", "RF201", "RF202", "RF203",
+            "RF301", "RF401", "RF402"} == set(RULES)
+    for code, (sev, title) in RULES.items():
+        assert sev in SEVERITIES and title
+
+
+def test_diagnostic_json_roundtrip():
+    d = Diagnostic(code="RF101", severity="error", message="m", symbol="X",
+                   function="f", file="a.py", line=3)
+    assert Diagnostic.from_json(d.to_json()) == d
+    assert "a.py:3: RF101 error" in d.format()
+
+
+# ------------------------------------------------- RF101: fresh globals ----
+
+def test_rf101_flags_main_global_with_symbol_and_line():
+    g = main_like("""
+        FACTOR = 3
+        def f(n):
+            return FACTOR * n
+    """)
+    hits = [d for d in analyze_function(g["f"]) if d.code == "RF101"]
+    assert hits and hits[0].symbol == "FACTOR"
+    assert hits[0].severity == "error" and hits[0].line == 4
+
+
+def test_rf101_near_miss_importable_module_function():
+    assert _importable(importable_uses_global)
+    assert "RF101" not in codes(analyze_function(importable_uses_global))
+
+
+def test_rf101_near_miss_import_inside_body():
+    g = main_like("""
+        def f(n):
+            import math
+            return math.sqrt(n)
+    """)
+    assert "RF101" not in codes(analyze_function(g["f"]))
+
+
+def test_rf101_demo_worker_name_error_with_hint(proc):
+    g = main_like("""
+        FACTOR = 3
+        def f(n):
+            return FACTOR * n
+    """)
+    fn = g["f"]
+    assert fn(2) == 6                       # single-source: local call works
+    with pytest.warns(ShippabilityWarning):
+        fut = proc.function(fn, jax_traceable=False).submit(2)
+    with pytest.raises(NameError, match="FACTOR") as ei:
+        fut.result(timeout=60)
+    # the transport error path appended the deploy-time diagnostic
+    hint = getattr(ei.value, "analysis_hint", "")
+    assert "RF101" in hint and "FACTOR" in hint
+    assert "[repro.analysis]" in ei.value.remote_traceback
+
+
+def test_rf101_downgraded_to_info_in_process():
+    g = main_like("""
+        FACTOR = 3
+        def f(n):
+            return FACTOR * n
+    """)
+    diags = analyze_function(g["f"], cross_process=False)
+    assert all(d.severity == "info" for d in diags if d.code == "RF101")
+
+
+# --------------------------------------------- RF102: host-only captures ----
+
+def test_rf102_flags_lock_capture_and_submit_fails(proc):
+    lock = threading.Lock()
+
+    def guarded(n):
+        with lock:
+            return n
+    hits = [d for d in analyze_function(guarded) if d.code == "RF102"]
+    assert hits and hits[0].symbol == "lock"
+    # runtime demo: the capture cannot even leave the client
+    with pytest.warns(ShippabilityWarning):
+        with pytest.raises(TypeError):
+            proc.function(guarded, jax_traceable=False).submit(1)
+
+
+def test_rf102_near_miss_array_capture():
+    arr = np.arange(4.0)
+
+    def scaled(n):
+        return arr * n
+    assert codes(analyze_function(scaled)) == set()
+
+
+# -------------------------------------------- RF103: serialization probe ----
+
+def test_rf103_flags_unregistered_instance():
+    class Opaque:
+        pass
+    box = Opaque()
+
+    def f(n):
+        return (box, n)
+    hits = [d for d in analyze_function(f) if d.code == "RF103"]
+    assert hits and hits[0].symbol == "box"
+
+
+def test_rf103_near_miss_registered_dataclass():
+    g = ShippableGain(2.0)
+
+    def f(x):
+        return g.gain + x
+    assert "RF103" not in codes(analyze_function(f))
+
+
+# ------------------------------- RF104: callable capture without __code__ ----
+
+def test_rf104_flags_callable_instance_and_it_ships_by_value(proc):
+    g = ShippableGain(3.0)
+    fn = make_gain_fn(g)
+    hits = [d for d in analyze_function(fn) if d.code == "RF104"]
+    assert hits and hits[0].severity == "info" and hits[0].symbol == "g"
+    # satellite fix: freeze no longer explodes — payload slot, not code
+    frozen = freeze_function(fn)
+    assert frozen["freevars"]["g"] is None
+    assert "g" in data_captures(fn) and not is_code_capture(g)
+    # runtime demo: the value rides the payload and the call works
+    assert proc.function(fn, jax_traceable=False).submit(2.0) \
+        .result(timeout=60) == 6.0
+
+
+def test_rf104_near_miss_plain_function_capture():
+    def helper(x):
+        return x + 1
+
+    def f(n):
+        return helper(n)
+    assert "RF104" not in codes(analyze_function(f))
+
+
+# ------------------------------------------------- RF201: capture writes ----
+
+def test_rf201_flags_nonlocal_write():
+    fn = make_counter_fn()
+    hits = [d for d in analyze_function(fn) if d.code == "RF201"]
+    assert hits and hits[0].symbol == "counter"
+    assert hits[0].severity == "warning"
+
+
+def test_rf201_near_miss_own_nested_closure_state():
+    def f(n):
+        state = 0
+
+        def bump():
+            nonlocal state
+            state += 1
+        bump()
+        return state + n
+    assert "RF201" not in codes(analyze_function(f))
+
+
+def test_rf201_demo_lost_write_on_processes(proc):
+    local = make_counter_fn()
+    assert [local(0), local(0)] == [1, 2]   # local calls accumulate
+    remote = make_counter_fn()
+    h = proc.function(remote, jax_traceable=False)
+    with pytest.warns(ShippabilityWarning):
+        r1 = h.submit(0).result(timeout=60)
+    r2 = h.submit(0).result(timeout=60)
+    assert [r1, r2] == [1, 1]               # by-value capture: write is lost
+
+
+# -------------------------------------------------- RF202: global writes ----
+
+def test_rf202_flags_global_write():
+    hits = [d for d in analyze_function(global_writer) if d.code == "RF202"]
+    assert hits and hits[0].symbol == "ANALYSIS_SEEN"
+
+
+def test_rf202_near_miss_global_read():
+    assert "RF202" not in codes(analyze_function(importable_uses_global))
+
+
+def test_rf202_demo_worker_module_state_never_lands_here(proc):
+    with pytest.warns(ShippabilityWarning):
+        out = proc.function(global_writer, jax_traceable=False) \
+            .submit(41).result(timeout=60)
+    assert out == 41
+    assert "ANALYSIS_SEEN" not in globals()  # wrote the worker's copy only
+
+
+# ---------------------------------------------- RF203: capture mutation ----
+
+def test_rf203_flags_append_on_capture():
+    fn = make_list_appender([])
+    hits = [d for d in analyze_function(fn) if d.code == "RF203"]
+    assert hits and "xs.append" in hits[0].symbol
+
+
+def test_rf203_near_miss_local_list():
+    def f(n):
+        acc = []
+        acc.append(n)
+        return acc
+    assert "RF203" not in codes(analyze_function(f))
+
+
+def test_rf203_demo_mutation_stays_on_worker(proc):
+    xs: list = []
+    fn = make_list_appender(xs)
+    with pytest.warns(ShippabilityWarning):
+        out = proc.function(fn, jax_traceable=False).submit(5) \
+            .result(timeout=60)
+    assert out == 1
+    assert xs == []                          # the client's list is untouched
+
+
+# ------------------------------------------------ RF301: nondeterminism ----
+
+def test_rf301_flags_random_time_uuid():
+    g = main_like("""
+        import random, time, uuid
+        def f(n):
+            return random.random() + time.time(), uuid.uuid4(), n
+    """)
+    got = codes([d for d in analyze_function(g["f"]) if d.code == "RF301"])
+    assert got == {"RF301"}
+    syms = {d.symbol for d in analyze_function(g["f"]) if d.code == "RF301"}
+    assert {"random", "time.time", "uuid"} <= syms
+
+
+def test_rf301_near_miss_seeded_and_monotonic():
+    def f(n):
+        import time
+        import numpy as _np
+        rng = _np.random.default_rng(7)
+        return rng.normal() + time.monotonic() + n
+    assert "RF301" not in codes(analyze_function(f))
+
+
+def test_rf301_near_miss_shadowed_name():
+    g = main_like("""
+        random = 42                     # not the module
+        def f(n):
+            return random + n
+    """)
+    assert "RF301" not in codes(analyze_function(g["f"]))
+
+
+def test_rf301_demo_bit_identity_broken(proc):
+    assert "RF301" in codes(analyze_function(rand_task))
+    h = proc.function(rand_task, jax_traceable=False)
+    with pytest.warns(ShippabilityWarning):
+        a = h.submit(0).result(timeout=60)
+    b = h.submit(0).result(timeout=60)
+    assert a != b                            # same payload, different result
+
+
+# ------------------------------------------- RF401: coroutine entry point ----
+
+async def async_entry(n):
+    return n + 1
+
+
+def test_rf401_flags_coroutine_entry():
+    hits = [d for d in analyze_function(async_entry) if d.code == "RF401"]
+    assert hits and hits[0].severity == "error"
+
+
+def test_rf401_near_miss_sync_function():
+    assert "RF401" not in codes(analyze_function(importable_uses_global))
+
+
+def test_rf401_demo_coroutine_result_cannot_ship(proc):
+    with pytest.warns(ShippabilityWarning):
+        fut = proc.function(async_entry, jax_traceable=False).submit(1)
+    with pytest.raises(Exception):
+        fut.result(timeout=60)               # coroutine object: no wire form
+
+
+# ------------------------------------- RF402: blocking inside coroutines ----
+
+async def blocking_coro(n):
+    import time
+    time.sleep(0.2)
+    return n
+
+
+async def yielding_coro(n):
+    await asyncio.sleep(0.2)
+    return n
+
+
+def test_rf402_flags_time_sleep_in_coroutine():
+    hits = [d for d in analyze_function(blocking_coro)
+            if d.code == "RF402"]
+    assert hits and hits[0].symbol == "time.sleep"
+
+
+def test_rf402_near_miss_asyncio_sleep():
+    assert "RF402" not in codes(analyze_function(yielding_coro))
+
+
+def test_rf402_near_miss_sleep_outside_coroutine():
+    def f(n):
+        import time
+        time.sleep(0.0)
+        return n
+    assert "RF402" not in codes(analyze_function(f))
+
+
+def test_async_session_bind_time_rf4_warning():
+    # the serving layer surfaces RF4xx at bind time, before first submit
+    import warnings as w
+
+    from repro.serving import AsyncSession
+    asess = AsyncSession("inline")
+    try:
+        with pytest.warns(ShippabilityWarning, match="RF402"):
+            asess.function(blocking_coro, jax_traceable=False)
+        with w.catch_warnings():
+            w.simplefilter("error", ShippabilityWarning)
+            asess.function(importable_uses_global, jax_traceable=False)
+    finally:
+        asess.close()
+
+
+def test_rf402_demo_event_loop_stall():
+    async def race(coro_fn):
+        t0 = time.perf_counter()
+        await asyncio.gather(coro_fn(0), coro_fn(1))
+        return time.perf_counter() - t0
+    blocked = asyncio.run(race(blocking_coro))
+    overlapped = asyncio.run(race(yielding_coro))
+    assert blocked >= 0.38                   # serialized: the loop stalled
+    assert overlapped < blocked              # await overlaps the waits
+
+
+# ------------------------------------------------- strict / warn deploys ----
+
+def test_strict_session_rejects_at_deploy_before_anything_ships():
+    g = main_like("""
+        FACTOR = 3
+        def f(n):
+            return FACTOR * n
+    """)
+    with Session("processes", os_threads=1, strict_analysis=True) as s:
+        with pytest.raises(AnalysisError) as ei:
+            s.function(g["f"], jax_traceable=False).submit(2)
+    msg = str(ei.value)
+    assert "RF101" in msg and "FACTOR" in msg and ":4:" in msg
+    assert all(d.code == "RF101" for d in ei.value.diagnostics)
+
+
+def test_function_config_strict_opt_in():
+    g = main_like("""
+        FACTOR = 3
+        def f(n):
+            return FACTOR * n
+    """)
+    with Session("processes", os_threads=1) as s:
+        with pytest.raises(AnalysisError):
+            s.function(g["f"], jax_traceable=False, strict=True).submit(2)
+
+
+def test_strict_in_process_backend_does_not_reject_rf101():
+    # threads executes the client's own function object: fresh-globals
+    # never bites, RF101 reports as info, strict mode lets it through
+    g = main_like("""
+        FACTOR = 3
+        def f(n):
+            return FACTOR * n
+    """)
+    with Session("threads", os_threads=2, strict_analysis=True) as s:
+        assert s.function(g["f"], jax_traceable=False).submit(2) \
+            .result(timeout=60) == 6
+
+
+def test_clean_function_deploys_without_warning(proc):
+    import warnings as w
+
+    def clean(n):
+        import math
+        return math.sqrt(n)
+    with w.catch_warnings():
+        w.simplefilter("error", ShippabilityWarning)
+        assert proc.function(clean, jax_traceable=False).submit(9.0) \
+            .result(timeout=60) == 3.0
+
+
+# ------------------------------------------------------- hint matching ----
+
+def test_match_diagnostics_picks_named_symbol():
+    d1 = Diagnostic(code="RF101", severity="error", message="m", symbol="A")
+    d2 = Diagnostic(code="RF101", severity="error", message="m", symbol="B")
+    err = NameError("name 'B' is not defined")
+    assert match_diagnostics(err, [d1, d2]) == [d2]
+    assert match_diagnostics(ValueError("unrelated"), [d1, d2]) == []
+
+
+# ------------------------------------------------------------------ CLI ----
+
+CLI_BAD = """\
+import repro.cloud as cloud
+
+HELPER = 2
+
+
+def task(n):
+    return HELPER * n
+
+
+with cloud.Session("threads") as sess:
+    sess.function(task).submit(1)
+    sess.function(lambda x: HELPER + x).submit(2)
+"""
+
+CLI_CLEAN = """\
+import repro.cloud as cloud
+
+
+def task(n):
+    import math
+    return math.sqrt(n)
+
+
+with cloud.Session("threads") as sess:
+    sess.function(task).submit(1)
+"""
+
+
+def test_cli_json_schema_and_exit_code(tmp_path, capsys):
+    p = tmp_path / "bad_script.py"
+    p.write_text(CLI_BAD)
+    rc = cli_main([str(p), "--format", "json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["version"] == 1 and out["files"] == 1
+    assert out["functions"] == 2             # the def and the lambda
+    assert out["errors"] >= 2
+    d = out["diagnostics"][0]
+    assert {"code", "severity", "message", "symbol", "function", "file",
+            "line"} <= set(d)
+    assert any(x["code"] == "RF101" and x["symbol"] == "HELPER"
+               for x in out["diagnostics"])
+
+
+def test_cli_clean_script_exits_zero(tmp_path, capsys):
+    p = tmp_path / "ok_script.py"
+    p.write_text(CLI_CLEAN)
+    assert cli_main([str(p)]) == 0
+    assert "0 error(s)" in capsys.readouterr().out
+
+
+def test_cli_strict_fails_on_warnings(tmp_path, capsys):
+    p = tmp_path / "warny.py"
+    p.write_text(textwrap.dedent("""\
+        def task(n):
+            import random
+            return random.random() + n
+
+        sess.function(task)
+    """))
+    assert cli_main([str(p)]) == 0           # warning-only: default passes
+    capsys.readouterr()
+    assert cli_main([str(p), "--strict"]) == 1
+
+
+def test_cli_package_module_not_rf101_flagged(tmp_path, capsys, monkeypatch):
+    # regression for the namespace/package module-name derivation: a
+    # function in an importable package keeps its module globals
+    pkg = tmp_path / "clipkg"
+    pkg.mkdir()
+    (pkg / "__init__.py").write_text("")
+    (pkg / "mod.py").write_text(textwrap.dedent("""\
+        SCALE = 2
+
+
+        def task(n):
+            return SCALE * n
+
+
+        def run(sess):
+            return sess.function(task).submit(1)
+    """))
+    monkeypatch.syspath_prepend(str(tmp_path))
+    assert cli_main([str(pkg / "mod.py")]) == 0
+    capsys.readouterr()
+
+
+def test_cli_self_lint_apps_and_examples_clean(capsys):
+    # satellite: the shipped apps/examples must stay lint-clean (false
+    # positives found while running this are fixed in the analyzer, not
+    # silenced here)
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    rc = cli_main([str(root / "src" / "repro" / "apps"),
+                   str(root / "examples")])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+
+
+def test_cli_missing_target_exits_two(capsys):
+    assert cli_main(["definitely_not_a_module_xyz"]) == 2
