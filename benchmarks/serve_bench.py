@@ -58,6 +58,15 @@ routing and scale-event logs, and per-worker busy-time shares from
 roles; ``--fleet-elastic on`` (default) starts at ``--fleet-min`` and
 scales on backlog/occupancy.
 
+``--chaos kill-member`` (ISSUE 10) runs the chaos drill instead of the
+regular modes: a seeded :class:`~repro.runtime.sandbox.ChaosPlan` is
+armed after warmup and the transport client SIGKILLs one fleet member's
+worker mid-decode.  The run asserts nothing itself — it *records*
+everything (chaos events, per-row recovery, retry timestamps, recovered
+vs untouched latency percentiles) into the ``repro.serve_chaos/v1``
+document that CI's chaos smoke step asserts on.  Other kinds:
+``drop-conn``, ``stall``, ``expire-lease``.
+
 ``--json`` writes the machine-readable ``repro.serve_bench/v2`` schema
 (see ``make_result``); CI's serving smoke steps run tiny instances on
 every push.
@@ -68,6 +77,7 @@ import argparse
 import asyncio
 import json
 import os
+import random
 import sys
 import time
 
@@ -116,7 +126,8 @@ def shared_prefix_len(prompt_len: int) -> int:
     return max(1, (3 * prompt_len) // 4)
 
 
-def make_server(backend: str, arch: str, max_new: int, os_threads: int):
+def make_server(backend: str, arch: str, max_new: int, os_threads: int,
+                chaos=None):
     import jax
     from repro.cloud import Session
     from repro.configs import get_smoke
@@ -126,7 +137,7 @@ def make_server(backend: str, arch: str, max_new: int, os_threads: int):
     cfg = get_smoke(arch)
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
-    session = Session(backend, os_threads=os_threads)
+    session = Session(backend, os_threads=os_threads, chaos=chaos)
     server = LMServer(cfg, params, session=session, max_new=max_new)
     return cfg, session, server
 
@@ -609,6 +620,144 @@ def run(backend: str = "threads", arch: str = "smollm-360m", *,
     return make_result(config, results)
 
 
+# ------------------------------------------------------------- chaos ----
+
+CHAOS_KINDS = ("kill-member", "drop-conn", "stall", "expire-lease")
+
+
+def make_chaos_plan(kind: str, *, seed: int, n_slots: int,
+                    after: int | None = None):
+    """One seeded ChaosPlan per CLI kind — same (slot, Nth-invoke)
+    derivation for every kind so seeds compare across failure modes."""
+    from repro.runtime.sandbox import ChaosEvent, ChaosPlan
+    if kind == "kill-member":
+        return ChaosPlan.kill_member(seed=seed, n_slots=n_slots, after=after)
+    rng = random.Random(seed * 1_000_003 + 17)
+    slot = rng.randrange(max(1, n_slots))
+    fire = after if after is not None else 3 + rng.randrange(3)
+    if kind == "drop-conn":
+        ev = ChaosEvent("drop", slot=slot, after=fire)
+    elif kind == "stall":
+        ev = ChaosEvent("stall", slot=slot, after=fire, stall_s=0.25)
+    elif kind == "expire-lease":
+        ev = ChaosEvent("expire", slot=slot, after=fire)
+    else:
+        raise ValueError(f"unknown chaos kind {kind!r} "
+                         f"(one of {CHAOS_KINDS})")
+    return ChaosPlan([ev], seed=seed)
+
+
+def run_chaos(backend: str = "processes", arch: str = "smollm-360m", *,
+              kind: str = "kill-member", requests: int = 12,
+              concurrency: int = 8, prompt_len: int = 16, max_new: int = 16,
+              wave: int = 4, quantum: int = 4, prefix_tokens: int = 1 << 16,
+              n_members: int = 2, after: int | None = None,
+              seed: int = 7) -> dict:
+    """The chaos drill: a non-elastic fleet of ``n_members`` on a real
+    transport, one seeded failure injected mid-run, everything recorded.
+
+    The contract under test: a killed worker is *added latency*, not a
+    client-visible error — the victim's live rows replay (prompt +
+    generated-so-far) on a surviving member and finish bit-identical,
+    while the dispatcher's backoff policy spaces the retries and the
+    transport lazily respawns the dead worker.  ``all_served`` and the
+    event counts in the returned document are what CI asserts."""
+    from repro.fleet import FleetRouter
+
+    plan = make_chaos_plan(kind, seed=seed, n_slots=n_members, after=after)
+    cfg, session, server = make_server(backend, arch, max_new, 1, chaos=plan)
+    try:
+        reqs = make_requests(cfg, requests, prompt_len, max_new, seed)
+        common = dict(max_batch=wave, quantum=quantum,
+                      prompt_cap=max(prompt_len, 8),
+                      prefix_tokens=prefix_tokens)
+        warmup(server, cfg, max_new, prompt_len, wave)
+        warmup_fleet(server, cfg, max_new, prompt_len, wave, n_members,
+                     policy="prefix", seed=seed, **common)
+        plan.arm()                      # warmup traffic cost no chaos budget
+
+        lats_ms: list[float] = []
+        comps: list = []
+        errors: list[str] = []
+
+        async def go():
+            loop = asyncio.get_running_loop()
+            sem = asyncio.Semaphore(max(1, concurrency))
+            async with FleetRouter(server, n_members=n_members,
+                                   policy="prefix", elastic=False,
+                                   seed=seed, **common) as fleet:
+                t0 = loop.time()
+
+                async def one(r):
+                    async with sem:
+                        t_issue = loop.time()
+                        try:
+                            comp = await fleet.submit(r)
+                        except Exception as e:   # the drill records, CI asserts
+                            errors.append(repr(e))
+                            return
+                        lats_ms.append((loop.time() - t_issue) * 1000.0)
+                        comps.append(comp)
+
+                await asyncio.gather(*[one(r) for r in reqs])
+                return loop.time() - t0, fleet.summary()
+
+        wall, fleet_summary = asyncio.run(go())
+        retry_log = [dict(e) for e in session.retry_log]
+        try:
+            respawns = session.stats().get("respawns")
+        except Exception:
+            respawns = None
+    finally:
+        server.close()
+        session.close()
+
+    recovered = [(c, l) for c, l in zip(comps, lats_ms)
+                 if getattr(c, "recovered", False)]
+    untouched = [(c, l) for c, l in zip(comps, lats_ms)
+                 if not getattr(c, "recovered", False)]
+    # per-row receipts next to the transport's worker.* events — one
+    # row.recovered per completion that survived a failover
+    row_events = [{"action": "row.recovered", "tokens": len(c.tokens)}
+                  for c, _ in recovered]
+    counts = plan.counts()
+    counts["row.recovered"] = len(row_events)
+    tokens = sum(len(c.tokens) for c in comps)
+    ttfts, tpots = _token_metrics(comps, lats_ms)
+    result = summarize(lats_ms, wall, len(comps), tokens, ttfts, tpots)
+    recovery: dict = {
+        "recovered_rows": fleet_summary["batcher"].get("recovered_rows", 0),
+        "fleet_recoveries": fleet_summary.get("recoveries", 0),
+        "n_recovered": len(recovered), "n_untouched": len(untouched)}
+    if recovered:
+        recovery["recovered_latency"] = {
+            k: round(v, 2)
+            for k, v in percentiles([l for _, l in recovered]).items()}
+    if untouched:
+        recovery["untouched_latency"] = {
+            k: round(v, 2)
+            for k, v in percentiles([l for _, l in untouched]).items()}
+    return {
+        "schema": "repro.serve_chaos/v1",
+        "config": {"backend": backend, "arch": arch, "requests": requests,
+                   "concurrency": concurrency, "prompt_len": prompt_len,
+                   "max_new": max_new, "wave_size": wave, "quantum": quantum,
+                   "n_members": n_members, "chaos": kind, "seed": seed,
+                   "host_cpus": os.cpu_count()},
+        "plan": [{"kind": e.kind, "slot": e.slot, "after": e.after}
+                 for e in plan.events],
+        "events": plan.log() + row_events,
+        "counts": counts,
+        "all_served": not errors and len(comps) == len(reqs),
+        "client_errors": errors,
+        "worker_respawns": respawns,
+        "result": result,
+        "recovery": recovery,
+        "retry_log": retry_log,
+        "fleet": fleet_summary,
+    }
+
+
 def main(argv=None):
     from repro.cloud import available_backends
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -657,6 +806,15 @@ def main(argv=None):
                          "arena with radix prefix sharing, ISSUE 7)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged mode: KV block granularity (pow2-rounded)")
+    ap.add_argument("--chaos", default="off",
+                    choices=("off",) + CHAOS_KINDS,
+                    help="run the seeded chaos drill instead of the normal "
+                         "modes (writes repro.serve_chaos/v1)")
+    ap.add_argument("--chaos-after", type=int, default=None,
+                    help="fire on the Nth armed invocation of the victim "
+                         "slot (default: seed-derived)")
+    ap.add_argument("--chaos-members", type=int, default=2,
+                    help="fleet size for the chaos drill")
     ap.add_argument("--os-threads", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--modes", default="waves,continuous",
@@ -676,6 +834,21 @@ def main(argv=None):
         obs_trace.configure(sample=(args.trace_sample
                                     if args.trace_sample is not None
                                     else 1.0))
+
+    if args.chaos != "off":
+        doc = run_chaos(args.backend, args.arch, kind=args.chaos,
+                        requests=args.requests, concurrency=args.concurrency,
+                        prompt_len=args.prompt_len, max_new=args.max_new,
+                        wave=args.wave, quantum=args.quantum,
+                        prefix_tokens=args.prefix_tokens,
+                        n_members=args.chaos_members,
+                        after=args.chaos_after, seed=args.seed)
+        text = json.dumps(doc, indent=1)
+        print(text)
+        if args.json_path:
+            with open(args.json_path, "w") as f:
+                f.write(text + "\n")
+        return
 
     modes = tuple(m for m in args.modes.split(",") if m)
     if args.paged == "on" and "continuous-paged" not in modes:

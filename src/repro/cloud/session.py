@@ -148,6 +148,8 @@ class Session:
                  latency: LatencyModel = DEFAULT_LATENCY,
                  max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None,
+                 chaos: "Any | None" = None,
+                 retry: "Any | None" = None,
                  manifest_path: str | None = None,
                  shed: bool = False,
                  dispatcher: Dispatcher | None = None,
@@ -179,6 +181,7 @@ class Session:
                 backend=backend, deployment=deployment, client=client,
                 latency=latency, max_concurrency=max_concurrency,
                 os_threads=os_threads, fault_plan=fault_plan,
+                chaos=chaos, retry=retry,
                 manifest_path=manifest_path,
                 strict_analysis=strict_analysis)
             # a live Backend instance is caller-owned (it may be shared
@@ -317,6 +320,19 @@ class Session:
     @property
     def records(self):
         return self._inst.records
+
+    @property
+    def chaos(self):
+        """The session's :class:`~repro.runtime.sandbox.ChaosPlan` (None
+        unless chaos injection was requested at construction)."""
+        return self._dispatcher.chaos
+
+    @property
+    def retry_log(self) -> list[dict]:
+        """Every backed-off resubmission this session scheduled:
+        ``{task_id, attempt, t, backoff_s}`` — chaos tests assert the
+        timestamps are exponentially spaced (ISSUE 10)."""
+        return self._inst.retry_log
 
     def stats(self) -> dict:
         """Fleet state without log-scraping (ISSUE 6): cold/warm start

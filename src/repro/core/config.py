@@ -32,6 +32,12 @@ class FunctionConfig:
     # reject the deploy with AnalysisError instead of warning.  Client
     # policy like timeout/retries — never salts the deployed name.
     strict: bool = False
+    # Per-request deadline budget (seconds from dispatch).  The dispatcher
+    # stamps an absolute epoch deadline on each invocation; it rides the
+    # wire envelope so workers reject already-expired work instead of
+    # computing it, and the retry path refuses to resubmit past it.
+    # None = no deadline (timeout_s still bounds the client-side wait).
+    deadline_s: float | None = None
 
     def with_memory(self, mb: int) -> "FunctionConfig":
         return dataclasses.replace(self, memory_mb=mb)
@@ -50,6 +56,9 @@ class FunctionConfig:
 
     def with_strict(self, strict: bool = True) -> "FunctionConfig":
         return dataclasses.replace(self, strict=strict)
+
+    def with_deadline(self, s: float | None) -> "FunctionConfig":
+        return dataclasses.replace(self, deadline_s=s)
 
     @property
     def memory_gb(self) -> float:

@@ -32,16 +32,19 @@ fork-join (``map_unordered`` / ``as_completed`` / ``gather``).
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, Sequence
 
 from ..core.config import DEFAULT_CONFIG, FunctionConfig
 from ..core.deploy import DeployedFunction, Deployment
 from ..core.function import RemoteFunction, data_captures
 from ..obs import trace as obs_trace
+from ..runtime.sandbox import ChaosPlan
 from .backends import Backend, resolve_backend
 from .cost import CostReport
 from .futures import Invocation, InvocationFuture, InvocationRecord
 from .latency_model import DEFAULT_LATENCY, LatencyModel
+from .retry import RetryPolicy
 from .workers import FaultPlan, WorkerCrash
 
 
@@ -54,18 +57,25 @@ class Dispatcher:
                  latency: LatencyModel = DEFAULT_LATENCY,
                  max_concurrency: int = 1000, os_threads: int = 16,
                  fault_plan: FaultPlan | None = None,
+                 chaos: ChaosPlan | None = None,
+                 retry: RetryPolicy | None = None,
                  manifest_path: str | None = None,
                  strict_analysis: bool = False):
         self.deployment = deployment or Deployment(manifest_path=manifest_path)
         self.client = client
         self.latency = latency
         self.max_concurrency = max_concurrency
+        # chaos rides next to fault_plan: fault_plan simulates failure in
+        # the threaded sandbox, chaos *executes* it against real worker
+        # processes (ISSUE 10); retry is the backoff policy both answer to
+        self.chaos = chaos
+        self.retry = retry if retry is not None else RetryPolicy()
         # the deployment rides along so out-of-process backends can hand
         # workers the manifest to rebuild bridges from
         self.backend = resolve_backend(
             backend, max_concurrency=max_concurrency, os_threads=os_threads,
             fault_plan=fault_plan, latency=latency, client=client,
-            deployment=self.deployment)
+            chaos=chaos, deployment=self.deployment)
         # shippability analysis knobs: strictness is caller policy; the
         # cross-process bit tells the analyzer whether the fresh-globals
         # contract (RF101) actually bites on this backend — in-process
@@ -103,6 +113,12 @@ class DispatcherInstance:
         self.records: list[InvocationRecord] = []
         self._durations_ms: list[float] = []   # per completed task, for Fig 11
         self._cold: list[bool] = []
+        # retry accounting (ISSUE 10): every scheduled resubmission is
+        # logged {task_id, attempt, t, backoff_s} — the exponential-spacing
+        # evidence chaos tests assert on — and counted against the
+        # policy's per-instance budget.
+        self.retry_log: list[dict] = []
+        self._retries_used = 0
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, fn: Callable | RemoteFunction | DeployedFunction,
@@ -125,9 +141,12 @@ class DispatcherInstance:
         # consistent.  Registered before submit so a synchronous backend
         # (inline) discards through the same path.
         fut.add_done_callback(self._discard_pending)
+        cfg = self._resolve_config(fn, config)
         inv = Invocation(task_id=task_id, deployed=deployed, payload=payload,
-                         future=fut, config=self._resolve_config(fn, config),
-                         on_complete=self._on_complete)
+                         future=fut, config=cfg,
+                         on_complete=self._on_complete,
+                         deadline=(time.time() + cfg.deadline_s
+                                   if cfg.deadline_s is not None else None))
         if obs_trace.TRACER.enabled:
             self._trace_dispatch(inv, deployed)
         self.d.backend.submit(inv)
@@ -242,14 +261,16 @@ class DispatcherInstance:
         cfg = inv.config or inv.deployed.config
         if not ok and isinstance(value, WorkerCrash) and \
                 inv.attempt <= cfg.max_retries:
-            # fault tolerance: stateless task → resubmit, same payload
-            retry = Invocation(task_id=inv.task_id, deployed=inv.deployed,
-                               payload=inv.payload, future=inv.future,
-                               attempt=inv.attempt + 1, is_hedge=inv.is_hedge,
-                               config=inv.config, on_complete=self._on_complete,
-                               trace=inv.trace)
-            self.d.backend.submit(retry)
-            return
+            # fault tolerance: stateless task → resubmit, same payload —
+            # through the backoff policy, never a hot loop (ISSUE 10)
+            if self._schedule_retry(inv, rec):
+                return
+            # retry refused: deadline passed or budget exhausted — the
+            # crash surfaces as what it now means to the caller
+            if inv.deadline is not None and time.time() >= inv.deadline:
+                value = TimeoutError(
+                    f"task {inv.task_id} deadline exceeded after "
+                    f"{inv.attempt} attempt(s); last failure: {value}")
         # claim → record → resolve: exactly one of a hedge pair wins the
         # claim, and accounting lands BEFORE result() waiters wake —
         # callers joining via map()/gather() must see complete
@@ -263,6 +284,57 @@ class DispatcherInstance:
             inv.future.set_result(value, rec)
         else:
             inv.future.set_error(value, rec)
+
+    def _schedule_retry(self, inv: Invocation, rec: InvocationRecord) -> bool:
+        """Arrange a backed-off resubmission of a crashed invocation.
+
+        Returns False (caller surfaces the failure) when the deadline has
+        passed or the per-instance retry budget is spent.  Otherwise logs
+        the retry, starts a daemon timer for ``policy.backoff_s`` and
+        returns True — the resubmission re-checks the deadline and the
+        future at fire time (a hedged sibling may have won meanwhile, the
+        backend may have shut down).
+        """
+        policy = self.d.retry
+        now = time.time()
+        if inv.deadline is not None and now >= inv.deadline:
+            return False
+        with self._cv:
+            if policy.budget is not None and \
+                    self._retries_used >= policy.budget:
+                return False
+            self._retries_used += 1
+            attempt = inv.attempt + 1
+            backoff = policy.backoff_s(inv.task_id, attempt)
+            self.retry_log.append({"task_id": inv.task_id, "attempt": attempt,
+                                   "t": now, "backoff_s": backoff})
+        retry = Invocation(task_id=inv.task_id, deployed=inv.deployed,
+                           payload=inv.payload, future=inv.future,
+                           attempt=attempt, is_hedge=inv.is_hedge,
+                           config=inv.config, on_complete=self._on_complete,
+                           trace=inv.trace, deadline=inv.deadline)
+
+        def _resubmit() -> None:
+            if retry.future.done():
+                return                   # hedged sibling / cancel won the race
+            if retry.deadline is not None and time.time() >= retry.deadline:
+                if retry.future.claim():
+                    self._record(rec)
+                    retry.future.set_error(TimeoutError(
+                        f"task {retry.task_id} deadline exceeded while "
+                        f"backing off before attempt {retry.attempt}"), rec)
+                return
+            try:
+                self.d.backend.submit(retry)
+            except Exception as e:       # backend torn down during backoff
+                if retry.future.claim():
+                    self._record(rec)
+                    retry.future.set_error(e, rec)
+
+        timer = threading.Timer(backoff, _resubmit)
+        timer.daemon = True
+        timer.start()
+        return True
 
     def _discard_pending(self, fut: InvocationFuture) -> None:
         with self._cv:

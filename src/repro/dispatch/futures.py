@@ -256,3 +256,7 @@ class Invocation:
     # request was sampled; transports parent their spans under it and put
     # its wire form on the INVOKE envelope.
     trace: Any = None
+    # absolute epoch-seconds deadline stamped at dispatch from
+    # ``config.deadline_s``; rides the wire (workers reject expired work)
+    # and gates the retry path (never resubmit past it).  None = no limit.
+    deadline: float | None = None

@@ -1,0 +1,133 @@
+"""Unified retry/backoff/deadline policy + circuit breaker (ISSUE 10).
+
+The dispatcher's original fault-tolerance loop resubmitted a crashed task
+*immediately* — correct for the simulated sandbox (where a "crash" is a
+dice roll and the pool is healthy), but a hot loop against real failure:
+a dead worker subprocess takes tens of milliseconds to respawn, and every
+immediate retry lands on the still-cold slot, burning attempts that a
+short wait would have saved.  This module is the policy that replaces it:
+
+* :class:`RetryPolicy` — seeded exponential backoff with deterministic
+  jitter, a per-instance retry *budget* (a flapping fleet cannot consume
+  unbounded resubmissions), and the deadline gate (never resubmit work
+  that cannot finish before its deadline).
+* :class:`CircuitBreaker` — per-member failure tripwire for the fleet
+  router: a member that keeps crashing stops receiving routes for a
+  cooldown instead of eating the shared retry budget, then readmits via a
+  half-open probe.
+
+Determinism contract: ``backoff_s(task_id, attempt)`` is a pure function
+of ``(seed, task_id, attempt)`` — the same chaos seed replays the same
+retry schedule (the same hash-the-coordinates trick ``FaultPlan.roll``
+uses).  With ``jitter <= 0.5`` the schedule is monotone: the *shortest*
+possible backoff of attempt N+1 is at least the *longest* of attempt N,
+so recorded retry timestamps are exponentially spaced by construction.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Backoff schedule + retry budget for ``WorkerCrash`` resubmission.
+
+    ``backoff_s(task_id, attempt)`` gives the delay before submitting
+    ``attempt`` (numbered like ``Invocation.attempt``: the first *retry*
+    is attempt 2).  ``budget`` caps total retries per dispatcher instance
+    across all tasks; ``None`` leaves only per-task ``max_retries``.
+    """
+
+    base_s: float = 0.02          # backoff before attempt 2
+    multiplier: float = 2.0       # exponential growth per further attempt
+    max_backoff_s: float = 2.0    # ceiling (keeps tail retries bounded)
+    jitter: float = 0.5           # fraction shaved off deterministically
+    budget: int | None = None     # per-instance retry budget (None = ∞)
+    seed: int = 0                 # replays the exact jitter sequence
+
+    def backoff_s(self, task_id: int, attempt: int) -> float:
+        raw = min(self.max_backoff_s,
+                  self.base_s * self.multiplier ** max(0, attempt - 2))
+        rng = random.Random(self.seed * 1_000_003 + task_id * 1009 + attempt)
+        return raw * (1.0 - self.jitter * rng.random())
+
+
+class CircuitBreaker:
+    """closed → open → half-open failure tripwire (per fleet member).
+
+    * ``closed``: traffic flows; ``threshold`` consecutive failures open it.
+    * ``open``: ``allow()`` refuses for ``cooldown_s``, then transitions to
+      half-open and admits exactly one probe.
+    * ``half-open``: further ``allow()`` calls refuse while the probe is in
+      flight; a failure re-opens, a success — or a quiet ``probe_window_s``
+      (the probe's owner never reported back) — closes.
+
+    The clock is injectable so breaker unit tests drive transitions
+    without sleeping; callers may also pass ``now=`` explicitly.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half-open"
+
+    def __init__(self, *, threshold: int = 3, cooldown_s: float = 0.25,
+                 probe_window_s: float | None = None,
+                 clock=time.monotonic):
+        self.threshold = max(1, threshold)
+        self.cooldown_s = cooldown_s
+        self.probe_window_s = (cooldown_s if probe_window_s is None
+                               else probe_window_s)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._state = self.CLOSED
+        self._failures = 0
+        self._opened_at = 0.0
+        self._probe_at = 0.0
+        self.opens = 0                # lifetime open transitions (observability)
+
+    @property
+    def state(self) -> str:
+        return self._state
+
+    def record_failure(self, now: float | None = None) -> None:
+        now = self._clock() if now is None else now
+        with self._lock:
+            self._failures += 1
+            if self._state == self.HALF_OPEN or (
+                    self._state == self.CLOSED
+                    and self._failures >= self.threshold):
+                if self._state != self.OPEN:
+                    self.opens += 1
+                self._state = self.OPEN
+                self._opened_at = now
+
+    def record_success(self, now: float | None = None) -> None:
+        with self._lock:
+            self._failures = 0
+            self._state = self.CLOSED
+
+    def allow(self, now: float | None = None) -> bool:
+        """May this member receive traffic right now?"""
+        now = self._clock() if now is None else now
+        with self._lock:
+            if self._state == self.CLOSED:
+                return True
+            if self._state == self.OPEN:
+                if now - self._opened_at >= self.cooldown_s:
+                    self._state = self.HALF_OPEN   # admit one probe
+                    self._probe_at = now
+                    return True
+                return False
+            # half-open: hold the line while the probe is in flight; a
+            # quiet window means the probe's route never failed — close
+            if now - self._probe_at >= self.probe_window_s:
+                self._state = self.CLOSED
+                self._failures = 0
+                return True
+            return False
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"state": self._state, "failures": self._failures,
+                    "opens": self.opens}

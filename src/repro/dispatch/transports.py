@@ -38,7 +38,7 @@ from typing import Any
 from ..core.deploy import Deployment
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
-from ..runtime.sandbox import WorkerCrash
+from ..runtime.sandbox import ChaosPlan, WorkerCrash
 from ..serialization import wire
 from .futures import Invocation, InvocationRecord
 from .workers import BackendCapabilities, fill_record
@@ -53,6 +53,11 @@ _M_RTT = obs_metrics.REGISTRY.histogram(
     "client_roundtrip_ms", "measured client-observed round-trip (ms)")
 _M_QDEPTH = obs_metrics.REGISTRY.gauge(
     "client_queue_depth", "invocations waiting for a dispatch thread")
+_M_CHAOS = obs_metrics.REGISTRY.counter(
+    "chaos_injections_total", "chaos events executed against real workers")
+_M_RESPAWN = obs_metrics.REGISTRY.counter(
+    "client_worker_respawns_total",
+    "worker slots respawned after a transport-level loss")
 
 
 def _deliver(inv: Invocation, ok: bool, value: Any,
@@ -82,7 +87,8 @@ class _TransportBackend:
                                        resident_state=True)
 
     def __init__(self, *, deployment: Deployment | None = None,
-                 manifest_path: str | None = None, n_workers: int = 2):
+                 manifest_path: str | None = None, n_workers: int = 2,
+                 chaos: ChaosPlan | None = None):
         if deployment is not None:
             self._manifest_path = self._persist_manifest(deployment)
         elif manifest_path is not None:
@@ -108,6 +114,13 @@ class _TransportBackend:
         self._affinity_slots: dict[int, int] = {}
         self._affinity_queues: dict[int, "queue_mod.Queue"] = {}
         self._affinity_threads: list[threading.Thread] = []
+        # chaos injection (ISSUE 10): the seeded plan this client executes
+        # for real — kill/stall/drop/expire against live worker slots.
+        # ``_burned`` remembers slots discarded after a transport loss so
+        # the lazy respawn in ``_slot_for`` is observable as an event.
+        self.chaos = chaos
+        self._burned: set[int] = set()
+        self._respawn_count = 0
 
     def _persist_manifest(self, deployment: Deployment) -> str:
         """Workers share the client's manifest through the filesystem —
@@ -160,10 +173,25 @@ class _TransportBackend:
         """One CONTROL round-trip to the worker an affinity key pins —
         the client surface for state-lease management (ISSUE 5) and arena
         row migration (ISSUE 6).  A reply that carries a body (row
-        extraction) surfaces it under the ``"_body"`` key."""
-        slot = self._slot_for(self._affinity_slot(affinity))
-        reply = wire.decode(self._request(
-            slot, wire.encode_control(op, body=body, **data)))
+        extraction) surfaces it under the ``"_body"`` key.
+
+        Transport-level connection loss here is normalized into a retryable
+        :class:`WorkerCrash` with the usual exit-code/stderr-tail context
+        (the dead-``url=``-worker satellite) — a raw ``ConnectionError``
+        or socket error must never leak past the transport, so spawned and
+        external workers share ONE recovery path."""
+        idx = self._affinity_slot(affinity)
+        slot = self._slot_for(idx)
+        try:
+            raw = self._request(slot, wire.encode_control(op, body=body,
+                                                          **data))
+        except Exception as e:
+            detail = self._discard_slot(idx, e)
+            _M_CRASH.inc(backend=type(self).__name__)
+            raise _worker_crash(
+                f"worker {idx} connection lost during control {op!r}: "
+                f"{detail}") from e
+        reply = wire.decode(raw)
         if isinstance(reply, wire.ErrorReply):
             raise wire.to_exception(reply)
         if not isinstance(reply, wire.ControlRequest):
@@ -176,9 +204,20 @@ class _TransportBackend:
 
     def _slot_control(self, slot, op: str, **data: Any) -> dict:
         """Best-effort CONTROL round-trip to one spawned slot (stats and
-        scale-in probes; a dead worker just reports nothing)."""
-        msg = wire.decode(self._request(slot, wire.encode_control(op,
-                                                                  **data)))
+        scale-in probes; a dead worker just reports nothing).  Connection
+        loss normalizes to :class:`WorkerCrash` like every other transport
+        failure — callers catching ``Exception`` see no behavior change,
+        callers that re-raise surface a retryable crash, not a socket
+        error."""
+        try:
+            raw = self._request(slot, wire.encode_control(op, **data))
+        except Exception as e:
+            detail = self._slot_epitaph(slot) or (
+                type(e).__name__ if not str(e) else str(e))
+            raise _worker_crash(
+                f"worker connection lost during control {op!r}: "
+                f"{detail}") from e
+        msg = wire.decode(raw)
         if isinstance(msg, wire.ErrorReply):
             raise wire.to_exception(msg)
         if not isinstance(msg, wire.ControlRequest):
@@ -221,6 +260,7 @@ class _TransportBackend:
             totals["busy_s"] += float(sb.get("busy_s", 0.0))
             totals["state_handles"] += int(d.get("state", {}).get("count", 0))
         return {"n_workers": n, "spawned": len(workers),
+                "respawns": self._respawn_count,
                 "affinity_slots": pinned, "workers": workers,
                 "metrics": merged.snapshot(), **totals}
 
@@ -343,6 +383,16 @@ class _TransportBackend:
             slot = self._spawn_slot(idx)
             with self._lock:
                 self._slots[idx] = slot
+                respawn = idx in self._burned
+                self._burned.discard(idx)
+                if respawn:
+                    self._respawn_count += 1
+            if respawn:
+                # a slot burned by a crash (or a chaos kill) coming back:
+                # worker death was added latency, and here is the receipt
+                _M_RESPAWN.inc(backend=type(self).__name__)
+                if self.chaos is not None:
+                    self.chaos.record("worker.respawned", slot=idx)
         return slot
 
     def _serve(self, idx: int) -> None:
@@ -378,7 +428,8 @@ class _TransportBackend:
         request = wire.encode_invoke(
             bridge.name, inv.payload, task_id=inv.task_id,
             attempt=inv.attempt,
-            trace=ctx.to_wire() if ctx is not None else None)
+            trace=ctx.to_wire() if ctx is not None else None,
+            deadline=inv.deadline)
         tracer = obs_trace.TRACER
         if ctx is not None and ctx.t_start:
             # queue wait = context mint (dispatch) → this thread picking
@@ -391,6 +442,8 @@ class _TransportBackend:
                  if ctx is not None else obs_trace.NOOP)
         try:
             slot = self._slot_for(idx)
+            if self.chaos is not None:
+                self._inject_chaos(idx, slot)
             t0 = time.perf_counter()
             reply = self._request(slot, request)
             reply = self._serve_missing_artifacts(slot, request, reply)
@@ -488,9 +541,52 @@ class _TransportBackend:
                     result_bytes=len(msg.blob))
         _deliver(inv, True, value, rec)
 
+    def _inject_chaos(self, idx: int, slot) -> None:
+        """Execute the chaos events due on this slot's Nth invocation.
+
+        ``kill`` and ``drop`` make THIS invocation fail (the kill lands
+        before the request bytes go out, so the in-flight decode dies with
+        the worker — the WorkerCrash/EOF path, then lazy respawn);
+        ``stall`` wedges the dispatch thread (a client-side straggle long
+        enough to threaten a state lease — what the heartbeat defends
+        against); ``expire`` force-expires the worker's leases via the
+        CONTROL ``chaos`` verb, then lets the invocation proceed into the
+        state-lost KeyError."""
+        for ev in self.chaos.on_invoke(idx):
+            _M_CHAOS.inc(kind=ev.kind, backend=type(self).__name__)
+            if ev.kind == "kill":
+                self.chaos.record("worker.killed", slot=idx)
+                self._chaos_kill(idx, slot)
+            elif ev.kind == "drop":
+                self.chaos.record("conn.dropped", slot=idx)
+                raise ConnectionError(
+                    f"chaos: connection to worker {idx} dropped")
+            elif ev.kind == "stall":
+                self.chaos.record("entry.stalled", slot=idx,
+                                  stall_s=ev.stall_s)
+                time.sleep(ev.stall_s)
+            elif ev.kind == "expire":
+                try:
+                    out = self._slot_control(slot, "chaos",
+                                             action="expire_leases")
+                    self.chaos.record("lease.expired", slot=idx,
+                                      handles=out.get("expired", []))
+                except Exception:
+                    self.chaos.record("lease.expired", slot=idx, handles=[])
+
+    def _chaos_kill(self, idx: int, slot) -> None:
+        """Hard-kill the slot's worker.  Default: the CONTROL ``die`` verb
+        (``os._exit``, no reply) — the only lever for workers we did not
+        spawn; subclasses with a subprocess handle SIGKILL it directly."""
+        try:
+            self._request(slot, wire.encode_control("chaos", action="die"))
+        except Exception:
+            pass                   # death mid-reply is the expected outcome
+
     def _discard_slot(self, idx: int, err: Exception) -> str:
         with self._lock:
             slot = self._slots.pop(idx, None)
+            self._burned.add(idx)
         detail = type(err).__name__ if not str(err) else str(err)
         if slot is not None:
             try:
@@ -557,11 +653,12 @@ class ProcessesBackend(_TransportBackend):
 
     def __init__(self, *, deployment: Deployment | None = None,
                  manifest_path: str | None = None, os_threads: int = 16,
-                 n_workers: int | None = None, **_):
+                 n_workers: int | None = None,
+                 chaos: ChaosPlan | None = None, **_):
         if n_workers is None:
             n_workers = max(1, min(os_threads, os.cpu_count() or 1))
         super().__init__(deployment=deployment, manifest_path=manifest_path,
-                         n_workers=n_workers)
+                         n_workers=n_workers, chaos=chaos)
 
     def _spawn_slot(self, idx: int) -> _ProcSlot:
         fd, stderr_path = tempfile.mkstemp(prefix="repro-worker-",
@@ -599,6 +696,15 @@ class ProcessesBackend(_TransportBackend):
         try:
             os.unlink(slot.stderr_path)
         except OSError:
+            pass
+
+    def _chaos_kill(self, idx: int, slot: _ProcSlot) -> None:
+        # SIGKILL from the client side: the worker gets no chance to flush
+        # a reply or clean up — the hardest failure the transport can see
+        slot.proc.kill()
+        try:
+            slot.proc.wait(timeout=5)
+        except subprocess.TimeoutExpired:
             pass
 
     def _slot_epitaph(self, slot: _ProcSlot) -> str | None:
@@ -646,13 +752,14 @@ class HttpBackend(_TransportBackend):
     def __init__(self, *, deployment: Deployment | None = None,
                  manifest_path: str | None = None, os_threads: int = 16,
                  url: str | None = None, n_connections: int | None = None,
-                 spawn_timeout_s: float = 180.0, **_):
+                 spawn_timeout_s: float = 180.0,
+                 chaos: ChaosPlan | None = None, **_):
         if n_connections is None:
             n_connections = max(1, min(os_threads, 8))
         if url is not None and manifest_path is None and deployment is None:
             manifest_path = "<external>"   # worker owns its own manifest
         super().__init__(deployment=deployment, manifest_path=manifest_path,
-                         n_workers=n_connections)
+                         n_workers=n_connections, chaos=chaos)
         self._url = url
         self._spawn_timeout_s = spawn_timeout_s
         self._proc: subprocess.Popen | None = None

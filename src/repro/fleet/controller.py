@@ -53,6 +53,14 @@ class FleetController:
     # policy synchronously without the timer task
     def step(self, now: float) -> str | None:
         r = self.router
+        # reap: a member whose task finished while it was NOT draining
+        # died (loop crashed / cancelled) — replace it so the pool holds
+        # its size; its orphaned queue moves to the replacement
+        for m in list(r.members):
+            if getattr(m, "done", False) and not m.loop.draining \
+                    and not getattr(m, "reaped", False):
+                if r.respawn(m) is not None:
+                    return "respawn"
         active = r.active_members
         if not active:
             return None

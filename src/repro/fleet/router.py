@@ -42,6 +42,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from ..dispatch.retry import CircuitBreaker
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from ..runtime.engine import prefix_key
@@ -71,6 +72,7 @@ class FleetStats:
     routed_random: int = 0
     spills: int = 0                 # owner over spill threshold
     handoffs: int = 0               # prefill→decode migration groups
+    recoveries: int = 0             # rows re-routed after member failure
     scale_events: list = field(default_factory=list)
 
     @property
@@ -86,11 +88,17 @@ class FleetStats:
 class FleetMember:
     """One fleet member: an engine loop, its queue, and its task."""
 
-    def __init__(self, index: int, role: str, loop: EngineLoop):
+    def __init__(self, index: int, role: str, loop: EngineLoop,
+                 breaker: CircuitBreaker | None = None):
         self.index = index          # == the loop's worker affinity
         self.role = role
         self.loop = loop
         self.task: asyncio.Task | None = None
+        # per-member circuit breaker: a row replayed off this member
+        # records a failure; an open breaker takes the member out of the
+        # routing set until the cooldown admits a half-open probe
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.reaped = False         # controller already replaced it
 
     @property
     def active(self) -> bool:
@@ -110,7 +118,8 @@ class FleetMember:
                 if lp.chunks else 0.0,
                 "migrated_in": lp.migrated_in,
                 "migrated_out": lp.migrated_out,
-                "draining": lp.draining, "done": self.done}
+                "draining": lp.draining, "done": self.done,
+                "breaker": self.breaker.snapshot()}
 
 
 class FleetRouter:
@@ -139,7 +148,9 @@ class FleetRouter:
                  lease_ttl_s: float = 60.0, seed: int = 0,
                  paged: bool = False, block_size: int = 16,
                  prefill_budget: int | None = None,
-                 pool_blocks: int | None = None):
+                 pool_blocks: int | None = None,
+                 breaker: dict | None = None,
+                 heartbeat: bool = True):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown routing policy {policy!r}")
         if paged and disaggregate:
@@ -171,7 +182,13 @@ class FleetRouter:
                              arena_cap=arena_cap, lease_ttl_s=lease_ttl_s,
                              paged=paged, block_size=block_size,
                              prefill_budget=prefill_budget,
-                             pool_blocks=pool_blocks)
+                             pool_blocks=pool_blocks, heartbeat=heartbeat)
+        # a single crash is a strong signal for a pinned member — one
+        # failure opens the breaker, the cooldown admits a probe, and a
+        # quiet probe window closes it again without an explicit success
+        self._breaker_kw = dict(threshold=1, cooldown_s=0.25,
+                                probe_window_s=0.25)
+        self._breaker_kw.update(breaker or {})
         self._rng = random.Random(seed)
         self.members: list[FleetMember] = []
         self._next_index = 0
@@ -311,8 +328,10 @@ class FleetRouter:
             stats=self.batcher_stats, cpu=self._cpu,
             is_closed=lambda: self._closed, fallback=self._fallback_wave,
             role=role, handoff=self._handoff if role == "prefill" else None,
+            recover=lambda item, i=idx: self._recover(i, item),
             **self._loop_kw)
-        member = FleetMember(idx, role, loop)
+        member = FleetMember(idx, role, loop,
+                             breaker=CircuitBreaker(**self._breaker_kw))
         member.task = asyncio.get_running_loop().create_task(loop.run())
         self.members.append(member)
         return member
@@ -322,10 +341,17 @@ class FleetRouter:
         return [m for m in self.members if m.active]
 
     def _routable(self) -> list[FleetMember]:
-        return [m for m in self.members if m.active and m.role != "decode"]
+        pool = [m for m in self.members if m.active and m.role != "decode"]
+        # breaker-open members sit out; if EVERY breaker is open the pool
+        # wins over the breakers — refusing all traffic helps nobody, and
+        # the transport respawns dead workers lazily anyway
+        ok = [m for m in pool if m.breaker.allow()]
+        return ok or pool
 
     def _decoders(self) -> list[FleetMember]:
-        return [m for m in self.members if m.active and m.role == "decode"]
+        pool = [m for m in self.members if m.active and m.role == "decode"]
+        ok = [m for m in pool if m.breaker.allow()]
+        return ok or pool
 
     # ------------------------------------------------------------- scaling
     def record_event(self, action: str, member: FleetMember,
@@ -375,6 +401,45 @@ class FleetRouter:
         self._arrived.set()
         self.record_event("drain", member, reason)
         return member
+
+    def respawn(self, member: FleetMember,
+                reason: str = "member died") -> FleetMember | None:
+        """Replace a dead member with a fresh one of the same role and
+        move its orphaned queue/intake onto the replacement.  The dead
+        member's worker (if its process died too) respawns lazily in the
+        transport on first use of its slot."""
+        if self._closed:
+            return None
+        member.reaped = True
+        repl = self._spawn(member.role)
+        self.record_event("respawn", repl, reason)
+        while member.loop.queue:
+            repl.loop.queue.append(member.loop.queue.popleft())
+        while member.loop.intake:
+            repl.loop.intake.append(member.loop.intake.popleft())
+        self._arrived.set()
+        return repl
+
+    # ------------------------------------------------------------ failover
+    def _recover(self, index: int, item) -> None:
+        """A member's engine loop lost a live row to a worker crash /
+        state loss and replayed it (prompt + generated so far).  Record
+        the failure on that member's breaker — taking it out of the
+        routing set for the cooldown — and re-route the replay like any
+        fresh request, which now lands on a surviving member."""
+        member = next((m for m in self.members if m.index == index), None)
+        if member is not None:
+            member.breaker.record_failure()
+            self.record_event("recover", member,
+                              "row replayed after worker/state loss")
+        self.stats.recoveries += 1
+        request, fut = item
+        if fut.done():
+            return
+        try:
+            self.route(request, fut)
+        except RuntimeError as e:
+            fut.set_exception(e)
 
     # ------------------------------------------------------------- routing
     @property
@@ -529,6 +594,7 @@ class FleetRouter:
                         "random": st.routed_random, "spills": st.spills,
                         "prefix_route_rate": round(st.prefix_route_rate, 4)},
             "handoffs": st.handoffs,
+            "recoveries": st.recoveries,
             "scale_events": list(st.scale_events),
             "members": [m.summary() for m in self.members],
             "batcher": self.batcher_stats.summary(),

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import threading
 import uuid
 from functools import lru_cache
 from typing import Sequence
@@ -673,6 +674,8 @@ class EngineClient:
         self._prefix: dict[str, int] = {}       # key -> token count, LRU order
         self._prefix_total = 0
         self._closed = False
+        self._hb_thread: threading.Thread | None = None
+        self._hb_stop: threading.Event | None = None
         sess = server.session
         self._local_state = not sess.backend.capabilities.cross_process
         common = dict(memory_mb=server._memory_mb, serializer="binary",
@@ -903,6 +906,49 @@ class EngineClient:
         done — bounded overshoot, bounded compile variants."""
         return shape_bucket(max(1, min(self.quantum, max_remaining)))
 
+    # --------------------------------------------------------- heartbeat --
+    def renew_lease(self) -> bool:
+        """Extend this arena's lease WITHOUT touching its data — the
+        ``state_renew`` heartbeat verb (ISSUE 10).  Returns whether the
+        handle was still resident; any transport failure reads as "not
+        renewed" (the next engine call will surface the real error)."""
+        try:
+            reply, _ = self.control("state_renew", handle=self.handle,
+                                    ttl_s=self.ttl_s)
+            return bool(reply.get("renewed", False))
+        except Exception:
+            return False
+
+    def start_heartbeat(self, interval_s: float | None = None) -> None:
+        """Run a daemon thread renewing the lease every ``ttl/3`` (or
+        ``interval_s``).  ``get``/``lease`` renew only on touch, so a long
+        client-side stall between engine calls — a chaos-injected straggle,
+        a GC pause — would otherwise expire the lease under LIVE rows.  A
+        separate thread keeps the lease honest precisely when the loop
+        thread is stuck waiting.  Reads ``self.handle`` each beat, so it
+        follows :meth:`reset` to the replacement arena automatically."""
+        if self._hb_thread is not None or self._closed:
+            return
+        interval = (float(interval_s) if interval_s is not None
+                    else self.ttl_s / 3.0)
+        stop = threading.Event()
+
+        def beat() -> None:
+            while not stop.wait(interval):
+                self.renew_lease()
+
+        self._hb_stop = stop
+        self._hb_thread = threading.Thread(
+            target=beat, name=f"repro-heartbeat-{self.handle[:8]}",
+            daemon=True)
+        self._hb_thread.start()
+
+    def stop_heartbeat(self) -> None:
+        if self._hb_stop is not None:
+            self._hb_stop.set()
+        self._hb_thread = None
+        self._hb_stop = None
+
     # ------------------------------------------------------------- reset --
     def reset(self) -> None:
         """After state loss (worker respawn / lease expiry): new handle,
@@ -917,6 +963,7 @@ class EngineClient:
         if self._closed:
             return
         self._closed = True
+        self.stop_heartbeat()
         try:
             if self._local_state:
                 state.release(self.handle)

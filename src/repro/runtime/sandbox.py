@@ -59,6 +59,116 @@ class FaultPlan:
         return fail, straggle
 
 
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One injected failure: fire ``kind`` on the ``after``-th invocation
+    routed to worker slot ``slot`` (counted from :meth:`ChaosPlan.arm`)."""
+    kind: str                          # "kill" | "stall" | "drop" | "expire"
+    slot: int                          # worker slot index the event targets
+    after: int = 3                     # fire on the Nth armed invoke there
+    stall_s: float = 0.0               # client-side stall duration ("stall")
+
+    KINDS = ("kill", "stall", "drop", "expire")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r} "
+                             f"(one of {self.KINDS})")
+
+
+class ChaosPlan:
+    """Seeded, deterministic cross-process fault injection (ISSUE 10).
+
+    Where :class:`FaultPlan` simulates sandbox loss *inside* the executing
+    process, a ChaosPlan is executed for real by the transport client
+    against live worker subprocesses: ``kill`` SIGKILLs the slot's worker
+    mid-decode, ``drop`` injects a connection loss (exercising the
+    ConnectionError→WorkerCrash normalization), ``stall`` sleeps the
+    dispatch thread long enough to threaten a state lease (the heartbeat's
+    reason to exist), and ``expire`` force-expires the worker's state
+    leases via the CONTROL ``chaos`` verb.  Every event is pinned to a
+    (slot, Nth-invoke) coordinate, so a given seed replays the identical
+    failure schedule run after run.
+
+    The plan starts DISARMED so warmup traffic doesn't consume the invoke
+    budget; ``arm()`` resets the counters and starts counting.  Everything
+    that fires (and every respawn the transport observes afterwards) is
+    appended to a thread-safe event log — ``log()`` is the evidence the
+    chaos bench and CI asserts read.
+    """
+
+    def __init__(self, events: list[ChaosEvent] | tuple[ChaosEvent, ...] = (),
+                 *, seed: int = 0):
+        self.events = tuple(events)
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._counts: dict[int, int] = {}
+        self._fired: set[int] = set()
+        self._log: list[dict] = []
+        self._armed = False
+        self._t0 = time.monotonic()
+
+    @classmethod
+    def kill_member(cls, *, seed: int = 0, n_slots: int = 2,
+                    after: int | None = None) -> "ChaosPlan":
+        """The canonical chaos schedule: SIGKILL one fleet member's worker
+        mid-decode.  Slot and firing point derive from the seed alone, so
+        ``--chaos kill-member --seed 7`` is one reproducible failure."""
+        rng = random.Random(seed * 1_000_003 + 17)
+        slot = rng.randrange(max(1, n_slots))
+        if after is None:
+            after = 3 + rng.randrange(3)       # past prefill, into decode
+        return cls([ChaosEvent("kill", slot=slot, after=after)], seed=seed)
+
+    @property
+    def armed(self) -> bool:
+        return self._armed
+
+    def arm(self) -> None:
+        """Start counting invocations (reset counters; keep the log)."""
+        with self._lock:
+            self._armed = True
+            self._counts.clear()
+            self._fired.clear()
+
+    def on_invoke(self, slot: int) -> list[ChaosEvent]:
+        """Advance the slot's invoke counter; return events due NOW."""
+        if not self._armed:
+            return []
+        with self._lock:
+            n = self._counts.get(slot, 0) + 1
+            self._counts[slot] = n
+            due = []
+            for i, ev in enumerate(self.events):
+                if i not in self._fired and ev.slot == slot and ev.after == n:
+                    self._fired.add(i)
+                    due.append(ev)
+            return due
+
+    def record(self, action: str, *, slot: int | None = None,
+               **extra) -> None:
+        """Append one event to the chaos log (``worker.killed``,
+        ``worker.respawned``, ``conn.dropped``, ``lease.expired``, ...)."""
+        entry = {"t": round(time.monotonic() - self._t0, 6),
+                 "action": action}
+        if slot is not None:
+            entry["slot"] = slot
+        entry.update(extra)
+        with self._lock:
+            self._log.append(entry)
+
+    def log(self) -> list[dict]:
+        with self._lock:
+            return [dict(e) for e in self._log]
+
+    def counts(self) -> dict[str, int]:
+        """Per-action tallies of the log — the cheap CI assertion surface."""
+        out: dict[str, int] = {}
+        for e in self.log():
+            out[e["action"]] = out.get(e["action"], 0) + 1
+        return out
+
+
 @dataclass
 class SandboxInvocation:
     """What one trip through a sandbox produced (feeds InvocationRecord)."""

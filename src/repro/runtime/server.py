@@ -67,6 +67,12 @@ class Completion:
     # same chunk share a timestamp (they genuinely arrived together).
     # None on batch-level paths, where there is no token stream to stamp.
     token_times_ms: list[float] | None = None
+    # True when this completion survived a failover: the row's worker (or
+    # its state lease) was lost mid-decode and the scheduler re-prefilled
+    # prompt + generated-so-far elsewhere and kept decoding (ISSUE 10).
+    # Greedy decode makes the tokens bit-identical either way; the flag
+    # (plus the latency the replay added) is the only observable trace.
+    recovered: bool = False
 
     @property
     def ttft(self) -> float:

@@ -115,6 +115,45 @@ def release(handle: str) -> bool:
         return _ENTRIES.pop(handle, None) is not None
 
 
+def renew(handle: str, *, ttl_s: float | None = None) -> bool:
+    """Extend a lease WITHOUT touching the data — the heartbeat verb.
+
+    ``get``/``lease`` renew only on touch, so a long client-side stall
+    (GC pause, chaos-injected straggle) between engine calls can expire a
+    lease under a *live* row.  The batcher's heartbeat sends this between
+    engine calls to keep the lease honest; returns whether the handle was
+    still resident (a False tells the client the state is already gone).
+    """
+    now = _now()
+    with _LOCK:
+        _sweep_locked(now)
+        e = _ENTRIES.get(handle)
+        if e is None:
+            return False
+        if ttl_s is not None:
+            e.ttl_s = float(ttl_s)
+        e.deadline = now + e.ttl_s
+        e.touches += 1
+        return True
+
+
+def expire_all(handles: list[str] | None = None) -> list[str]:
+    """Force leases to expire NOW (chaos injection: ``lease.expired``).
+
+    Backdates the deadline of every named handle (default: all resident
+    handles) so the next registry access reclaims them — the next engine
+    call on an affected handle surfaces the state-lost ``KeyError`` and
+    exercises the replay-failover path without killing the process.
+    """
+    now = _now()
+    with _LOCK:
+        targets = list(_ENTRIES) if handles is None else \
+            [h for h in handles if h in _ENTRIES]
+        for h in targets:
+            _ENTRIES[h].deadline = now - 1.0
+        return targets
+
+
 def stats() -> dict[str, Any]:
     now = _now()
     with _LOCK:
@@ -157,6 +196,11 @@ def control(op: str, data: dict[str, Any]) -> dict[str, Any]:
             return {"ok": True, "known": True}
         except KeyError:
             return {"ok": True, "known": False}
+    if op == "state_renew":
+        ttl = data.get("ttl_s")
+        return {"ok": True,
+                "renewed": renew(data["handle"],
+                                 ttl_s=None if ttl is None else float(ttl))}
     if op == "state_release":
         return {"ok": True, "released": release(data["handle"])}
     if op == "state_stats":

@@ -50,6 +50,11 @@ _M_CTRL = obs_metrics.REGISTRY.counter(
     "worker_control_total", "CONTROL frames handled")
 _M_INFLIGHT = obs_metrics.REGISTRY.gauge(
     "worker_inflight", "INVOKE frames currently executing")
+_M_EXPIRED = obs_metrics.REGISTRY.counter(
+    "worker_deadline_rejections_total",
+    "INVOKE frames rejected because their deadline had already passed")
+_M_CHAOS = obs_metrics.REGISTRY.counter(
+    "chaos_worker_events_total", "chaos CONTROL verbs executed worker-side")
 # eagerly registered so every /metrics exposition carries the serving
 # histograms' bucket layout even before (or without) the batcher running
 # in this process — the client-side batcher observes into the same names,
@@ -150,6 +155,18 @@ class WorkerHost:
             return wire.encode_error(
                 etype="WireProtocolError", retryable=False,
                 message=f"unexpected frame {type(msg).__name__} on a worker")
+        # deadline propagation (ISSUE 10): already-expired work is rejected
+        # BEFORE any bridge build or entry call — the worker does not burn
+        # compute on a result no client is waiting for.  Non-retryable by
+        # design (a retry cannot un-expire it); TimeoutError is a builtin,
+        # so the client reconstructs the exact type.
+        if msg.deadline is not None and t_recv > msg.deadline:
+            _M_EXPIRED.inc(function=msg.function)
+            return wire.encode_error(
+                etype="TimeoutError", retryable=False,
+                message=(f"deadline exceeded before execution: task "
+                         f"{msg.task_id} arrived {t_recv - msg.deadline:.3f}s "
+                         "past its deadline"))
         # worker-side spans exist only when the client sampled this request
         # (the trace header field IS the sampling decision crossing the
         # wire); they ship back on the reply envelope — the worker keeps
@@ -202,7 +219,8 @@ class WorkerHost:
                     self._bridges.pop(name, None)
             return wire.encode_control("drained",
                                        count=self.sandboxes.drain(name))
-        if msg.op in ("state_lease", "state_release", "state_stats"):
+        if msg.op in ("state_lease", "state_renew", "state_release",
+                      "state_stats"):
             # worker-resident serving state (ISSUE 5): lease renewal and
             # release for cache arenas, TTL-reclaimed so a dead client
             # cannot pin worker memory
@@ -235,6 +253,28 @@ class WorkerHost:
                 "host_stats", pid=os.getpid(), functions=len(self._bridges),
                 sandboxes=self.sandboxes.stats(), state=state.stats(),
                 metrics=self.metrics_snapshot())
+        if msg.op == "chaos":
+            # worker-side chaos execution (ISSUE 10): the client's ChaosPlan
+            # reaches across the process boundary through this verb —
+            # ``expire_leases`` backdates every resident state lease (the
+            # next engine call surfaces state-lost), ``stall`` wedges this
+            # worker for a bit (straggler), ``die`` hard-exits without a
+            # reply (the SIGKILL analogue for transports that cannot signal
+            # the process directly, e.g. an external url= http worker).
+            from . import state
+            action = msg.data.get("action")
+            _M_CHAOS.inc(action=str(action))
+            if action == "expire_leases":
+                expired = state.expire_all(msg.data.get("handles"))
+                return wire.encode_control("chaos", ok=True, expired=expired)
+            if action == "stall":
+                time.sleep(float(msg.data.get("stall_s", 0.0)))
+                return wire.encode_control("chaos", ok=True)
+            if action == "die":
+                os._exit(int(msg.data.get("code", 9)))
+            return wire.encode_error(
+                etype="ValueError", retryable=False,
+                message=f"unknown chaos action {action!r}")
         if msg.op == "artifact_put":
             # remote artifact fetch: the client pushes a blob this worker
             # reported missing; deposit it in the local store and ack

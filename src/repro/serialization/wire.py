@@ -15,10 +15,13 @@ Frame layout::
 
 Kinds:
 
-* ``INVOKE``  — header {function, task_id, attempt, trace?}; body =
-                payload blob.  ``trace`` (additive, absent unless the
-                client sampled this request) is a span context dict —
-                workers that predate it ignore the field.
+* ``INVOKE``  — header {function, task_id, attempt, trace?, deadline?};
+                body = payload blob.  ``trace`` (additive, absent unless
+                the client sampled this request) is a span context dict —
+                workers that predate it ignore the field.  ``deadline``
+                (additive, ISSUE 10) is an absolute epoch-seconds cutoff:
+                a worker receiving already-expired work rejects it with a
+                non-retryable ``TimeoutError`` instead of computing it.
 * ``RESULT``  — header {stats{deserialize_s,compute_s,serialize_s},
                 server_s, cold_start, worker_id, spans?}; body = result
                 blob.  ``spans`` (additive) carries the worker-side span
@@ -73,6 +76,7 @@ class InvokeRequest:
     task_id: int = 0
     attempt: int = 1
     trace: dict[str, Any] | None = None   # span context when client sampled
+    deadline: float | None = None  # absolute epoch s; expired work rejected
 
 
 @dataclass
@@ -136,11 +140,14 @@ def _frame(kind: int, header: dict, body: bytes = b"") -> bytes:
 
 def encode_invoke(function: str, payload: bytes, *, task_id: int = 0,
                   attempt: int = 1,
-                  trace: dict[str, Any] | None = None) -> bytes:
+                  trace: dict[str, Any] | None = None,
+                  deadline: float | None = None) -> bytes:
     header: dict[str, Any] = {"function": function, "task_id": task_id,
                               "attempt": attempt}
     if trace:
         header["trace"] = trace
+    if deadline is not None:
+        header["deadline"] = round(float(deadline), 6)
     return _frame(INVOKE, header, payload)
 
 
@@ -199,7 +206,8 @@ def decode(data: bytes) -> InvokeRequest | ResultReply | ErrorReply | ControlReq
             return InvokeRequest(function=header["function"], payload=body,
                                  task_id=header.get("task_id", 0),
                                  attempt=header.get("attempt", 1),
-                                 trace=header.get("trace"))
+                                 trace=header.get("trace"),
+                                 deadline=header.get("deadline"))
         if kind == RESULT:
             return ResultReply(blob=body, stats=header.get("stats", {}),
                                server_s=header.get("server_s", 0.0),

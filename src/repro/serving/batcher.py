@@ -43,8 +43,15 @@ from typing import Sequence
 
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from ..runtime.sandbox import WorkerCrash
 from ..runtime.server import Completion, LMServer, Request, decode_bucket
 from .aio import await_invocation
+
+# Failover bound: how many times one row may be replayed before its error
+# surfaces.  Replay re-prefills prompt + generated-so-far after worker or
+# lease loss (ISSUE 10); a row that keeps landing on dying workers must
+# eventually fail rather than orbit the fleet forever.
+MAX_ROW_REPLAYS = 3
 
 # serving metrics (process-default registry): the uniform mirrors of the
 # scheduler's BatcherStats, queryable through Session.stats()["metrics"]
@@ -59,6 +66,9 @@ _M_DONE = obs_metrics.REGISTRY.counter(
     "serve_completions_total", "requests served to completion")
 _M_CHUNKS = obs_metrics.REGISTRY.counter(
     "serve_decode_chunks_total", "iteration-level decode round-trips")
+_M_RECOVERED = obs_metrics.REGISTRY.counter(
+    "recovery_rows_total",
+    "live rows replayed after worker/state loss instead of failing")
 
 
 @dataclass
@@ -79,6 +89,7 @@ class BatcherStats:
     prefix_misses: int = 0
     wave_fallbacks: int = 0          # requests too big for the arena
     state_resets: int = 0            # arenas rebuilt after state loss
+    recovered_rows: int = 0          # live rows replayed instead of failed
     migrated_rows: int = 0           # prefill→decode row hand-offs (fleet)
     # paged-arena occupancy peaks (ISSUE 7), folded from worker replies
     live_tokens_peak: int = 0
@@ -105,6 +116,7 @@ class BatcherStats:
                         "prefix_misses": self.prefix_misses,
                         "wave_fallbacks": self.wave_fallbacks,
                         "state_resets": self.state_resets,
+                        "recovered_rows": self.recovered_rows,
                         "migrated_rows": self.migrated_rows,
                         "live_tokens_peak": self.live_tokens_peak,
                         "allocated_blocks_peak": self.allocated_blocks_peak,
@@ -124,6 +136,10 @@ class _LiveRow:
     # one stamp per token, ms since t_arrival, appended at the chunk reply
     # that delivered it (chunk-mates share a stamp); [0] == ttft_ms
     token_times_ms: list = field(default_factory=list)
+    # failover bookkeeping (ISSUE 10): how many times this row has been
+    # replayed onto a fresh arena, and whether it survived at least one
+    recovered: bool = False
+    replays: int = 0
 
     @property
     def remaining(self) -> int:
@@ -164,7 +180,8 @@ class EngineLoop:
                  lease_ttl_s: float = 60.0, role: str = "unified",
                  handoff=None, intake=None, paged: bool = False,
                  block_size: int = 16, prefill_budget: int | None = None,
-                 pool_blocks: int | None = None):
+                 pool_blocks: int | None = None, recover=None,
+                 heartbeat: bool = True):
         if role not in ("unified", "prefill", "decode"):
             raise ValueError(f"unknown engine-loop role {role!r}")
         if role == "prefill" and handoff is None:
@@ -185,6 +202,11 @@ class EngineLoop:
         self.fallback = fallback
         self.role = role
         self.handoff = handoff
+        # ``recover(item)`` re-queues a row lost to worker/state failure
+        # for replay somewhere else (the fleet router re-routes around the
+        # dead member); default = this loop's own queue.
+        self.recover = recover
+        self.heartbeat = bool(heartbeat)
         self.draining = False
         self.engine = None                     # set once run() starts
         self.live: dict[int, _LiveRow] = {}
@@ -250,7 +272,8 @@ class EngineLoop:
                 tokens=[int(t) for t in row.tokens[:row.request.max_new]],
                 latency_ms=(now - row.t_arrival) * 1000.0,
                 ttft_ms=row.ttft_ms, cost_gb_s=row.cost_gb_s,
-                token_times_ms=times or None))
+                token_times_ms=times or None,
+                recovered=row.recovered))
         self.stats.requests += 1
         self.served += 1
         _M_DONE.inc()
@@ -258,15 +281,95 @@ class EngineLoop:
         if len(times) > 1:
             _M_TPOT.observe((times[-1] - times[0]) / (len(times) - 1))
 
+    # ------------------------------------------------------- failover ----
+    @staticmethod
+    def _replayable(err: BaseException) -> bool:
+        """Infrastructure loss — worker death, dropped connection, expired
+        lease — is replayable; user-code/model errors are not (replaying a
+        deterministic failure would just fail again elsewhere)."""
+        from ..runtime.engine import is_state_lost
+        return (is_state_lost(err) or isinstance(err, WorkerCrash)
+                or isinstance(err, ConnectionError))
+
+    def _recover_item(self, item) -> None:
+        if self.recover is not None:
+            self.recover(item)
+        else:
+            self.queue.append(item)
+            self.arrived.set()
+
+    def _readmit_ok(self, fut) -> bool:
+        """Bounded requeue for a request whose ADMISSION died (no tokens
+        lost — it never entered the arena)."""
+        n = getattr(fut, "_readmits", 0) + 1
+        fut._readmits = n
+        return n <= MAX_ROW_REPLAYS
+
+    def _try_replay(self, row: _LiveRow, err: BaseException) -> bool:
+        """Requeue a lost live/pending row as ``prompt + generated_so_far``
+        for chunked re-prefill on a healthy arena.  Greedy decode is a
+        pure function of the token prefix, so the recovered completion is
+        bit-identical to the unfailed one — worker death becomes added
+        latency, not a client-visible error.  Returns False when the row
+        must fail instead (non-replayable error, replay cap reached)."""
+        fut = row.fut
+        if fut.done() or not self._replayable(err) \
+                or row.replays >= MAX_ROW_REPLAYS:
+            return False
+        orig = row.request
+        fut._replay = {"request": orig,
+                       "tokens": [int(t) for t in row.tokens],
+                       "t_arrival": row.t_arrival, "ttft_ms": row.ttft_ms,
+                       "token_times_ms": list(row.token_times_ms),
+                       "cost": row.cost_gb_s, "attempts": row.replays + 1}
+        replay = Request(
+            prompt=list(orig.prompt) + [int(t) for t in row.tokens],
+            max_new=row.remaining)
+        self._recover_item((replay, fut))
+        return True
+
+    def _resume_row(self, meta: dict, fut, t0: int, now: float,
+                    share: float = 0.0) -> _LiveRow:
+        """Rebuild a replayed row at re-admission: original request, prior
+        tokens + the re-prefill's first continuation token, timing merged
+        so ``token_times_ms[0] == ttft_ms`` still holds."""
+        t_ms = (now - meta["t_arrival"]) * 1000.0
+        row = _LiveRow(request=meta["request"], fut=fut,
+                       t_arrival=meta["t_arrival"],
+                       tokens=list(meta["tokens"]) + [int(t0)],
+                       ttft_ms=meta["ttft_ms"],
+                       cost_gb_s=meta["cost"] + share,
+                       token_times_ms=list(meta["token_times_ms"]) + [t_ms],
+                       recovered=True, replays=meta["attempts"])
+        return row
+
     def _lose_state(self, err: BaseException) -> None:
+        recovered = failed = 0
+        now = asyncio.get_running_loop().time()
         for rows in (self.live, self.pending):
             for slot, row in rows.items():
-                self._fail(row.fut, err, "engine failed")
                 self._free.append(slot)
+                if row.fut.done():
+                    continue
+                if row.remaining <= 0:
+                    # every requested token already arrived client-side:
+                    # the crash cost nothing — deliver
+                    self._complete_row(row, now)
+                elif self._try_replay(row, err):
+                    recovered += 1
+                else:
+                    self._fail(row.fut, err, "engine failed")
+                    failed += 1
             rows.clear()
         self._to_free.clear()      # the new handle starts with a fresh pool
         self.engine.reset()
         self.stats.state_resets += 1
+        if recovered:
+            self.stats.recovered_rows += recovered
+            _M_RECOVERED.inc(recovered)
+            rspan = self._span("engine.recover_rows", rows=recovered,
+                               failed=failed, error=type(err).__name__)
+            rspan.finish()
 
     def _span(self, name: str, **attrs):
         """A child span under this loop's root trace (NOOP when tracing is
@@ -310,6 +413,10 @@ class EngineLoop:
         free = self._free
         free.extend(range(engine.rows))
         hits_seen = misses_seen = 0
+        if self.heartbeat:
+            # lease renewal decoupled from engine calls: a stalled loop
+            # (chaos straggle, long pack) cannot expire live rows' state
+            engine.start_heartbeat()
 
         try:
             while True:
@@ -458,9 +565,16 @@ class EngineLoop:
         except BaseException as e:
             pspan.set("error.type", type(e).__name__)
             pspan.finish("error")
-            for slot, _, fut in take:
+            for slot, r, fut in take:
                 free.append(slot)
-                self._fail(fut, e, "admission failed")
+                # infrastructure loss during admission: nothing was decoded
+                # yet, so the request (or in-flight replay) simply requeues
+                if not fut.done() and self._replayable(e) \
+                        and not isinstance(e, asyncio.CancelledError) \
+                        and self._readmit_ok(fut):
+                    self._recover_item((r, fut))
+                else:
+                    self._fail(fut, e, "admission failed")
             if is_state_lost(e):
                 self._lose_state(e)
             if isinstance(e, asyncio.CancelledError):
@@ -476,6 +590,13 @@ class EngineLoop:
         by_slot = {slot: (r, fut) for slot, r, fut in take}
         for slot, t0 in zip(order, reply["first"]):
             r, fut = by_slot[slot]
+            meta = getattr(fut, "_replay", None)
+            if meta is not None:
+                # this admission was a failover re-prefill: resume the
+                # original row where its dead arena left off
+                del fut._replay
+                live[slot] = self._resume_row(meta, fut, t0, now, share)
+                continue
             live[slot] = _LiveRow(request=r, fut=fut, t_arrival=t_sent,
                                   tokens=[int(t0)], ttft_ms=ttft,
                                   cost_gb_s=share,
@@ -498,8 +619,14 @@ class EngineLoop:
             if info.get("live"):
                 del self.pending[int(slot)]
                 row.tokens.append(int(info["first"]))
-                row.ttft_ms = (now - row.t_arrival) * 1000.0
-                row.token_times_ms.append(row.ttft_ms)
+                t_ms = (now - row.t_arrival) * 1000.0
+                if row.recovered and row.token_times_ms:
+                    # failover re-prefill: TTFT was stamped by the original
+                    # admission — this is just the next token arriving late
+                    row.token_times_ms.append(t_ms)
+                else:
+                    row.ttft_ms = t_ms
+                    row.token_times_ms.append(t_ms)
                 self.live[int(slot)] = row
 
     def _note_occupancy(self) -> None:
@@ -535,9 +662,14 @@ class EngineLoop:
         except BaseException as e:
             pspan.set("error.type", type(e).__name__)
             pspan.finish("error")
-            for slot, _, fut in take:
+            for slot, r, fut in take:
                 free.append(slot)
-                self._fail(fut, e, "admission failed")
+                if not fut.done() and self._replayable(e) \
+                        and not isinstance(e, asyncio.CancelledError) \
+                        and self._readmit_ok(fut):
+                    self._recover_item((r, fut))
+                else:
+                    self._fail(fut, e, "admission failed")
             if is_state_lost(e):
                 self._lose_state(e)
             if isinstance(e, asyncio.CancelledError):
@@ -551,6 +683,20 @@ class EngineLoop:
         rec = inv_fut.record
         share = (rec.billed_gb_s / len(take)) if rec else 0.0
         for slot, r, fut in take:
+            meta = getattr(fut, "_replay", None)
+            if meta is not None:
+                # failover re-prefill joins the pending set carrying its
+                # prior tokens; _promote appends the continuation token
+                # without restamping TTFT
+                del fut._replay
+                self.pending[slot] = _LiveRow(
+                    request=meta["request"], fut=fut,
+                    t_arrival=meta["t_arrival"],
+                    tokens=list(meta["tokens"]), ttft_ms=meta["ttft_ms"],
+                    cost_gb_s=meta["cost"],
+                    token_times_ms=list(meta["token_times_ms"]),
+                    recovered=True, replays=meta["attempts"])
+                continue
             self.pending[slot] = _LiveRow(request=r, fut=fut,
                                           t_arrival=t_sent)
         self._promote(reply, now, share)
@@ -664,6 +810,28 @@ class EngineLoop:
         self.stats.admission_groups += 1
 
 
+def _merge_replay(fut, comp: Completion, now: float) -> Completion:
+    """Fold a failover re-prefill served by the WAVE path back into its
+    original request's completion: a replay whose grown prompt exceeded
+    ``prompt_cap`` falls back to a solo wave, which decodes only the
+    continuation — prepend the tokens decoded before the crash and keep
+    the original TTFT/arrival timing (ISSUE 10)."""
+    meta = getattr(fut, "_replay", None)
+    if meta is None:
+        return comp
+    del fut._replay
+    orig = meta["request"]
+    tokens = list(meta["tokens"]) + [int(t) for t in comp.tokens]
+    t_ms = (now - meta["t_arrival"]) * 1000.0
+    times = list(meta["token_times_ms"]) + \
+        [t_ms] * max(0, len(tokens) - len(meta["token_times_ms"]))
+    n = orig.max_new
+    return Completion(tokens=tokens[:n], latency_ms=t_ms,
+                      cost_gb_s=meta["cost"] + comp.cost_gb_s,
+                      ttft_ms=meta["ttft_ms"],
+                      token_times_ms=times[:n] or None, recovered=True)
+
+
 class ContinuousBatcher:
     """Admit arriving requests into in-flight decode capacity.
 
@@ -704,8 +872,9 @@ class ContinuousBatcher:
                  arena_cap: int | None = None, lease_ttl_s: float = 60.0,
                  paged: bool = False, block_size: int = 16,
                  prefill_budget: int | None = None,
-                 pool_blocks: int | None = None):
+                 pool_blocks: int | None = None, heartbeat: bool = True):
         self._server = server
+        self._heartbeat = bool(heartbeat)
         self._max_batch = max(1, max_batch)
         self._n_slots = max(1, slots)
         self._max_wait_s = max(0.0, max_wait_ms) / 1000.0
@@ -927,9 +1096,10 @@ class ContinuousBatcher:
                         e if isinstance(e, Exception)
                         else RuntimeError(f"batch failed: {e!r}"))
         else:
+            t_done = loop.time()
             for (_, fut), comp in zip(batch, comps):
                 if not fut.done():
-                    fut.set_result(comp)
+                    fut.set_result(_merge_replay(fut, comp, t_done))
         finally:
             self.stats.requests += len(batch)
             self.stats.batches += 1
@@ -965,7 +1135,8 @@ class ContinuousBatcher:
             arena_cap=self._arena_cap, lease_ttl_s=self._lease_ttl_s,
             paged=self._paged, block_size=self._block_size,
             prefill_budget=self._prefill_budget,
-            pool_blocks=self._pool_blocks).run()
+            pool_blocks=self._pool_blocks,
+            heartbeat=self._heartbeat).run()
 
 
 def run_continuous(server: LMServer, requests: Sequence[Request], *,

@@ -246,7 +246,8 @@ class AioHttpBackend(HttpBackend):
             request = wire.encode_invoke(
                 bridge.name, inv.payload,
                 task_id=inv.task_id, attempt=inv.attempt,
-                trace=ctx.to_wire() if ctx is not None else None)
+                trace=ctx.to_wire() if ctx is not None else None,
+                deadline=inv.deadline)
             tspan = (obs_trace.TRACER.span("client.transport", ctx,
                                            backend="AioHttpBackend")
                      if ctx is not None else obs_trace.NOOP)
